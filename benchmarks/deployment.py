@@ -1,0 +1,79 @@
+"""Table 1 + Fig 3 reproduction: the 4-agent / 3-hub deployment experiment.
+
+Columns: Agent X (all-knowing, 1 round), Agent Y (partially-knowing,
+1 round), Agent M (sequential lifelong, 8 rounds), Agents 1-4 (ADFLL,
+3 rounds, asynchronous, heterogeneous speeds). Metric: mean terminal
+Euclidean distance (voxels, synthetic volumes) on held-out patients over
+the 8 task-environments; paired t-tests as in the paper.
+
+Validation target (DESIGN.md §6): the *orderings* —
+best-ADFLL <= AgentX < AgentM << AgentY — and significance vs Agent Y.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.stats import paired_ttest
+from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
+from repro.core.federated import (ADFLLSystem, evaluate_on_tasks,
+                                  train_all_knowing, train_partial,
+                                  train_sequential_ll)
+from repro.rl.synth import paper_eight_tasks, patient_split
+
+DQN = DQNConfig(volume_shape=(20, 20, 20), box_size=(8, 8, 8),
+                conv_features=(4, 8), hidden=(64,), max_episode_steps=24,
+                batch_size=32, eps_decay_steps=300, target_update=40)
+SYS = ADFLLConfig(rounds=3, train_steps_per_round=80, erb_capacity=2048,
+                  erb_share_size=256, hub_sync_period=0.2)
+
+
+def run(seed: int = 0, fast: bool = False):
+    tasks = paper_eight_tasks()
+    train_p, test_p = patient_split(40)
+    steps = 20 if fast else SYS.train_steps_per_round
+    sys_cfg = ADFLLConfig(rounds=SYS.rounds, train_steps_per_round=steps,
+                          erb_capacity=SYS.erb_capacity,
+                          erb_share_size=SYS.erb_share_size,
+                          hub_sync_period=SYS.hub_sync_period)
+
+    sysm = ADFLLSystem(sys_cfg, DQN, tasks, train_p, seed=seed)
+    makespan = sysm.run()
+
+    agent_x = train_all_knowing(DQN, tasks, train_p,
+                                steps_per_task=steps, seed=seed + 100)
+    agent_y = train_partial(DQN, tasks[0], train_p, steps=steps,
+                            seed=seed + 200)
+    agent_m = train_sequential_ll(DQN, tasks, train_p,
+                                  steps_per_round=steps, seed=seed + 300)
+
+    cols = {"AgentX": agent_x, "AgentY": agent_y, "AgentM": agent_m}
+    for aid, ag in sorted(sysm.agents.items()):
+        cols[f"Agent{aid + 1}"] = ag
+
+    table = {}
+    for name, ag in cols.items():
+        table[name] = evaluate_on_tasks(ag, tasks, test_p, DQN)
+
+    # ---- print Table 1 ----
+    names = list(cols)
+    print("task," + ",".join(names))
+    for t in tasks:
+        print(t.name + "," + ",".join(f"{table[n][t.name]:.2f}"
+                                      for n in names))
+    means = {n: float(np.mean(list(table[n].values()))) for n in names}
+    print("mean," + ",".join(f"{means[n]:.2f}" for n in names))
+
+    per_task = {n: [table[n][t.name] for t in tasks] for n in names}
+    best_adfll = min((n for n in names if n.startswith("Agent") and
+                      n[-1].isdigit()), key=lambda n: means[n])
+    for ref in ("AgentX", "AgentM", "AgentY"):
+        t_stat, p = paired_ttest(per_task[ref], per_task[best_adfll])
+        print(f"ttest,{best_adfll}_vs_{ref},t={t_stat:.2f},p={p:.3f}")
+    print(f"derived,makespan_sim={makespan:.2f},"
+          f"rounds={len(sysm.history)},"
+          f"erbs_in_system={len(sysm.network.all_known_erbs())}")
+    return means, best_adfll
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,90 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp oracle.
+
+On CPU the interpret-mode timings are NOT TPU performance — the value here
+is (a) correctness at benchmark shapes and (b) the harness a TPU run would
+use unchanged (interpret=False).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # flash attention (modest shape; interpret mode is a python loop)
+    b, s, hq, hkv, d = 1, 256, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((b, s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    t_pl = _time(lambda a, b_, c: flash_attention(a, b_, c, block_q=128,
+                                                  block_k=128), q, k, v)
+    t_ref = _time(jax.jit(attention_ref), q, k, v)
+    err = float(jnp.max(jnp.abs(
+        flash_attention(q, k, v, block_q=128, block_k=128)
+        - attention_ref(q, k, v))))
+    rows.append(("flash_attention_interp", t_pl,
+                 f"ref_us={t_ref:.0f};max_err={err:.2e}"))
+
+    # replay gather
+    from repro.kernels.replay_gather.ops import replay_gather
+    from repro.kernels.replay_gather.ref import replay_gather_ref
+    buf = jnp.asarray(rng.standard_normal((4096, 512)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 4096, 256), jnp.int32)
+    w = jnp.ones((256,), jnp.float32)
+    t_pl = _time(replay_gather, buf, idx, w)
+    t_ref = _time(jax.jit(replay_gather_ref), buf, idx, w)
+    err = float(jnp.max(jnp.abs(replay_gather(buf, idx, w)
+                                - replay_gather_ref(buf, idx, w))))
+    rows.append(("replay_gather_interp", t_pl,
+                 f"ref_us={t_ref:.0f};max_err={err:.2e}"))
+
+    # fused td
+    from repro.kernels.fused_td.kernel import fused_td
+    from repro.kernels.fused_td.ref import fused_td_ref
+    qs = jnp.asarray(rng.standard_normal((1024, 1)), jnp.float32)
+    qn = jnp.asarray(rng.standard_normal((1024, 6)), jnp.float32)
+    r = jnp.asarray(rng.standard_normal((1024, 1)), jnp.float32)
+    dn = jnp.zeros((1024, 1), jnp.float32)
+    f_pl = jax.jit(lambda *a: fused_td(*a, gamma=0.9)[0])
+    f_ref = jax.jit(lambda *a: fused_td_ref(*a, gamma=0.9)[0])
+    t_pl = _time(f_pl, qs, qn, r, dn)
+    t_ref = _time(f_ref, qs, qn, r, dn)
+    err = float(jnp.max(jnp.abs(f_pl(qs, qn, r, dn) - f_ref(qs, qn, r, dn))))
+    rows.append(("fused_td_interp", t_pl,
+                 f"ref_us={t_ref:.0f};max_err={err:.2e}"))
+
+    # fused rmsnorm
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+    x = jnp.asarray(rng.standard_normal((2048, 768)), jnp.float32)
+    sc = jnp.asarray(rng.standard_normal((768,)), jnp.float32)
+    t_pl = _time(rmsnorm, x, sc)
+    t_ref = _time(jax.jit(rmsnorm_ref), x, sc)
+    err = float(jnp.max(jnp.abs(rmsnorm(x, sc) - rmsnorm_ref(x, sc))))
+    rows.append(("rmsnorm_interp", t_pl,
+                 f"ref_us={t_ref:.0f};max_err={err:.2e}"))
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Roofline table: read the dry-run JSONs and print per (arch x shape x
+mesh) the three terms + bottleneck (EXPERIMENTS.md §Roofline source)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_all(dirpath=DRYRUN_DIR):
+    out = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(f) as fh:
+            out.append(json.load(fh))
+    return out
+
+
+def run():
+    rows = load_all()
+    if not rows:
+        print("roofline,-,no dry-run results (run repro.launch.dryrun --all)")
+        return
+    hdr = ("arch,shape,mesh,compute_s,memory_s,collective_s,bottleneck,"
+           "useful_flops_ratio,peak_GB_per_dev")
+    print(hdr)
+    for r in rows:
+        tag = "2x16x16" if r.get("multi_pod") else "16x16"
+        if r.get("status") == "skipped":
+            print(f"{r['arch']},{r['shape']},{tag},-,-,-,SKIP({r['reason']}),-,-")
+            continue
+        if r.get("status") != "ok":
+            print(f"{r['arch']},{r['shape']},{tag},-,-,-,ERROR,-,-")
+            continue
+        t = r["roofline"]
+        peak = r["memory_analysis"]["peak_bytes"] / 1e9
+        print(f"{r['arch']},{r['shape']},{tag},"
+              f"{t['compute_s']:.4g},{t['memory_s']:.4g},"
+              f"{t['collective_s']:.4g},{t['bottleneck'][:-2]},"
+              f"{r.get('useful_flops_ratio', 0) or 0:.3f},{peak:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Benchmark harness — one entry per paper table/figure + framework rows.
+
+Prints ``name,us_per_call,derived`` CSV lines (one per benchmark) followed
+by each benchmark's own detailed output.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Paper mapping:
+  deployment        -> Table 1 + Fig 3 (4 agents / 3 hubs, async, baselines)
+  ablation_addition -> Fig 4 (4->16 agents, 75% dropout)
+  ablation_deletion -> Fig 5 (24->1 agents, 75% dropout)
+  kernels           -> framework kernel microbenches (Pallas vs oracle)
+  roofline          -> EXPERIMENTS.md §Roofline source table (reads the
+                       dry-run JSONs; run repro.launch.dryrun --all first)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced step counts (CI sanity)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (ablation_addition, ablation_deletion,
+                            deployment, forgetting, kernels, roofline)
+
+    benches = [
+        ("deployment_table1", lambda: deployment.run(fast=args.fast)),
+        ("ablation_addition_fig4",
+         lambda: ablation_addition.run(fast=args.fast)),
+        ("ablation_deletion_fig5",
+         lambda: ablation_deletion.run(fast=args.fast)),
+        ("forgetting_ablation", lambda: forgetting.run(fast=args.fast)),
+        ("kernels_micro", kernels.run),
+        ("roofline_table", roofline.run),
+    ]
+    for name, fn in benches:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.perf_counter()
+        fn()
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{us:.0f},wall_us")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""End-to-end driver: the paper's deployment experiment (Fig. 2).
+
+Four DQN agents (two fast "V100", two slow "T4"), three hubs,
+asynchronous rounds over the 8 BraTS-like task-environments, compared
+against Agent X / Y / M — the full Table 1 pipeline at a CPU-tractable
+scale. Expect a few minutes of wall time.
+
+    PYTHONPATH=src python examples/adfll_deployment.py [--fast]
+"""
+import argparse
+
+from benchmarks import deployment
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    means, best = deployment.run(seed=0, fast=args.fast)
+    print("\nsummary:")
+    for name, m in sorted(means.items(), key=lambda kv: kv[1]):
+        marker = " <- best ADFLL agent" if name == best else ""
+        print(f"  {name:8s} mean distance error {m:6.2f}{marker}")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, ".")
+    main()

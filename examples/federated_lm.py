@@ -1,0 +1,94 @@
+"""ADFLL beyond the paper: federated lifelong learning of TRANSFORMERS.
+
+The paper's mechanism is experience-level, hence architecture-agnostic.
+Here three agents — each running a *different* zoo architecture (dense,
+MoE, xLSTM; heterogeneity no weight-averaging scheme could support) —
+train on disjoint synthetic text styles and share LM ERBs through a hub.
+Replay of foreign ERBs reduces per-style loss on styles an agent never
+saw natively, and protects against forgetting its own style.
+
+    PYTHONPATH=src python examples/federated_lm.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.core.hub import Hub
+from repro.core.lifelong import LifelongTrainer
+from repro.core.network import Network
+from repro.data.pipeline import TokenStreamConfig, lm_task_erb
+from repro.launch.specs import opt_cfg_for
+from repro.models.model import init_train_state, make_loss_fn, make_train_step
+
+ARCHS = ["h2o-danube-3-4b-smoke", "qwen3-moe-235b-a22b-smoke",
+         "xlstm-125m-smoke"]
+VOCAB = 512
+SEQ = 64
+STEPS_PER_ROUND = 25
+
+
+def build_agent(arch, seed):
+    cfg = get_config(arch)
+    opt = opt_cfg_for(cfg)
+    state = init_train_state(cfg, jax.random.PRNGKey(seed), opt)
+    raw_step = jax.jit(make_train_step(cfg, opt))
+    loss_fn = jax.jit(make_loss_fn(cfg))
+
+    def np_step(state, batch):
+        batch = {k: jnp.asarray(v % cfg.vocab_size)
+                 for k, v in batch.items()}
+        return raw_step(state, batch)
+
+    tr = LifelongTrainer(np_step, state, batch_size=8,
+                         rng=np.random.default_rng(seed))
+    return cfg, tr, loss_fn
+
+
+def eval_style(cfg, loss_fn, params, style):
+    sc = TokenStreamConfig(VOCAB, SEQ, 16, seed=999, n_styles=4)
+    erb = lm_task_erb(sc, style=style, n_batches=1)
+    batch = {k: jnp.asarray(v % cfg.vocab_size)
+             for k, v in erb.data.items()}
+    _, m = loss_fn(params, batch)
+    return float(m["loss"])
+
+
+def main():
+    net = Network(hubs=[Hub(0), Hub(1)])
+    agents = []
+    for i, arch in enumerate(ARCHS):
+        net.attach_agent(i)
+        agents.append(build_agent(arch, seed=i))
+    sc = TokenStreamConfig(VOCAB, SEQ, 8, seed=0, n_styles=4)
+
+    print("round 0: every agent trains its own style, shares its ERB")
+    for i, (cfg, tr, _) in enumerate(agents):
+        erb = lm_task_erb(sc, style=i, n_batches=8, source_agent=i)
+        tr.steps(STEPS_PER_ROUND, erb)
+        shared = erb  # LM ERBs are already a selective slice
+        net.agent_push(i, shared)
+    net.sync()
+
+    print("round 1: agents pull foreign ERBs and lifelong-learn them")
+    for i, (cfg, tr, _) in enumerate(agents):
+        incoming = net.agent_pull(i, tr.seen_erb_ids)
+        erb = lm_task_erb(sc, style=i, n_batches=8, source_agent=i)
+        tr.steps(STEPS_PER_ROUND, erb, incoming=incoming)
+        print(f"  agent{i} ({cfg.name}): learned from {len(incoming)} "
+              f"foreign ERBs")
+
+    print("\nper-style eval loss (rows: agents/archs, cols: styles):")
+    for i, (cfg, tr, loss_fn) in enumerate(agents):
+        row = [eval_style(cfg, loss_fn, tr.state['params'], s)
+               for s in range(len(ARCHS))]
+        own = row[i]
+        print(f"  {cfg.name:32s} " +
+              " ".join(f"{x:6.3f}" for x in row) +
+              f"   (own style: {own:.3f})")
+    print("\nheterogeneous architectures, one federation — no weight "
+          "averaging involved.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Pytree checkpointing: flattened-path .npz, no external deps.
+
+Keys encode the tree path; restore rebuilds against a reference structure
+(so dtype/shape drift fails loudly rather than silently).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+_SEP = "|"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flatten(tree))
+    # atomicity: np.savez appends .npz if missing; normalize
+    if not path.endswith(".npz") and os.path.exists(path + ".npz"):
+        os.replace(path + ".npz", path)
+
+
+def restore_pytree(path: str, like: Any) -> Any:
+    data = np.load(path)
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, ref in flat_like:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in p)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"shape mismatch at {key}: "
+                             f"{arr.shape} vs {ref.shape}")
+        leaves.append(arr.astype(ref.dtype))
+    struct = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(struct, leaves)

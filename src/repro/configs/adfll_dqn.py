@@ -1,0 +1,54 @@
+"""ADFLL DQN agent config — the paper's own model (Appendix A.1).
+
+The 3D DQN is not part of the transformer zoo; it registers a separate
+lightweight config consumed by ``repro.rl``. Defaults reproduce the paper's
+deployment experiment at CPU-tractable scale (the real system used 45^3
+crops; we default to 24^3 synthetic volumes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+
+@dataclass(frozen=True)
+class DQNConfig:
+    volume_shape: Tuple[int, int, int] = (24, 24, 24)
+    box_size: Tuple[int, int, int] = (8, 8, 8)
+    n_actions: int = 6                    # +/- x, y, z
+    frame_history: int = 1                # chain of locations in the state
+    conv_features: Tuple[int, ...] = (8, 16, 32)
+    hidden: Tuple[int, ...] = (128, 64)
+    gamma: float = 0.9
+    lr: float = 1e-3
+    eps_start: float = 1.0
+    eps_end: float = 0.05
+    eps_decay_steps: int = 500
+    target_update: int = 50               # steps between target-net syncs
+    batch_size: int = 32
+    max_episode_steps: int = 48
+    step_size: int = 1                    # voxels per action
+
+
+@dataclass(frozen=True)
+class ADFLLConfig:
+    """System-level config for the deployment experiment (Fig. 2)."""
+    n_agents: int = 4
+    n_hubs: int = 3
+    # hub assignment per agent (paper: A1->H1, A2->H2, A3/A4->H3)
+    agent_hub: Tuple[int, ...] = (0, 1, 2, 2)
+    # relative training speed (paper: DGX-1 V100 agents ~2.5x faster than T4)
+    agent_speed: Tuple[float, ...] = (1.0, 1.0, 2.5, 2.5)
+    hub_sync_period: float = 1.0          # simulated time between hub syncs
+    dropout: float = 0.0                  # communication dropout probability
+    rounds: int = 3
+    erb_capacity: int = 2048
+    erb_share_size: int = 512             # experiences shared per round
+    replay_mix: Tuple[float, float, float] = (0.5, 0.25, 0.25)
+    # fractions: (current task, personal past, incoming foreign)
+    train_steps_per_round: int = 150
+    seed: int = 0
+
+
+DQN_CONFIG = DQNConfig()
+ADFLL_CONFIG = ADFLLConfig()

@@ -1,0 +1,10 @@
+from repro.core.erb import ERB, ERBMeta, TaskTag, erb_init  # noqa: F401
+from repro.core.federated import (ADFLLSystem,  # noqa: F401
+                                  CentralAggregationSystem,
+                                  train_all_knowing, train_partial,
+                                  train_sequential_ll)
+from repro.core.hub import Hub, sync_hubs  # noqa: F401
+from repro.core.lifelong import LifelongTrainer  # noqa: F401
+from repro.core.network import Network  # noqa: F401
+from repro.core.replay import SelectiveReplaySampler  # noqa: F401
+from repro.core.scheduler import Scheduler  # noqa: F401

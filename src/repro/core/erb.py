@@ -1,0 +1,142 @@
+"""Experience Replay Buffers (ERBs) — the unit of federation in ADFLL.
+
+An ERB is (a) a fixed-capacity ring buffer of [s, a, r, s', done] tuples
+held as a JAX pytree of arrays, and (b) a metadata record (Fig. 7 of the
+paper: modality / landmark / pathology tags plus provenance) that hubs use
+to index their shared database.
+
+The paper shares experience *data*, never model weights — that is what
+makes ADFLL architecture-agnostic. ERBs are therefore self-describing and
+model-free.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_ERB_COUNTER = itertools.count()
+
+
+@dataclass(frozen=True)
+class TaskTag:
+    """One BraTS task-environment: modality x orientation x pathology."""
+    modality: str                 # t1 | t1ce | t2 | flair
+    orientation: str              # axial | coronal | sagittal
+    pathology: str                # HGG | LGG
+    landmark: str = "top_left_ventricle"
+
+    @property
+    def name(self) -> str:
+        return f"{self.orientation}_{self.pathology}_{self.modality}"
+
+
+@dataclass(frozen=True)
+class ERBMeta:
+    erb_id: str
+    task: TaskTag
+    source_agent: int
+    round_idx: int
+    size: int
+
+
+def new_erb_id(prefix: str = "ERB") -> str:
+    return f"{prefix}_{next(_ERB_COUNTER):05d}"
+
+
+@dataclass
+class ERB:
+    """data: dict of arrays with leading dim = capacity; ``size`` filled."""
+    meta: ERBMeta
+    data: Dict[str, Any]
+    capacity: int
+    size: int = 0
+    cursor: int = 0
+
+    def __len__(self) -> int:
+        return self.size
+
+
+def erb_init(capacity: int, obs_shape: Tuple[int, ...], *, task: TaskTag,
+             source_agent: int = -1, round_idx: int = 0,
+             dtype=np.float32) -> ERB:
+    data = {
+        "obs": np.zeros((capacity, *obs_shape), dtype),
+        "loc": np.zeros((capacity, 3), dtype),
+        "action": np.zeros((capacity,), np.int32),
+        "reward": np.zeros((capacity,), np.float32),
+        "next_obs": np.zeros((capacity, *obs_shape), dtype),
+        "next_loc": np.zeros((capacity, 3), dtype),
+        "done": np.zeros((capacity,), np.float32),
+    }
+    meta = ERBMeta(new_erb_id(), task, source_agent, round_idx, 0)
+    return ERB(meta=meta, data=data, capacity=capacity)
+
+
+def erb_add(erb: ERB, batch: Dict[str, np.ndarray]) -> ERB:
+    """Ring-append a batch of experiences (host-side, in place on data)."""
+    n = int(batch["action"].shape[0])
+    cap = erb.capacity
+    idx = (erb.cursor + np.arange(n)) % cap
+    for k, v in batch.items():
+        erb.data[k][idx] = np.asarray(v)
+    size = min(cap, erb.size + n)
+    erb.size = size
+    erb.cursor = (erb.cursor + n) % cap
+    erb.meta = replace(erb.meta, size=size)
+    return erb
+
+
+def erb_sample(erb: ERB, rng: np.random.Generator, n: int,
+               *, use_pallas: bool = False) -> Dict[str, np.ndarray]:
+    """Uniformly sample n experiences (with replacement if n > size)."""
+    assert erb.size > 0, "sampling an empty ERB"
+    replace_ = n > erb.size
+    idx = rng.choice(erb.size, size=n, replace=replace_)
+    if use_pallas:
+        from repro.kernels.replay_gather.ops import replay_gather
+        flat = {}
+        for k, v in erb.data.items():
+            arr = jnp.asarray(v).reshape(erb.capacity, -1)
+            w = jnp.ones((n,), jnp.float32)
+            out = replay_gather(arr, jnp.asarray(idx, jnp.int32), w)
+            flat[k] = np.asarray(out).reshape((n,) + v.shape[1:])
+        return flat
+    return {k: v[idx] for k, v in erb.data.items()}
+
+
+def erb_share_slice(erb: ERB, n: int, rng: np.random.Generator,
+                    strategy: str = "uniform") -> ERB:
+    """Selective share: a new ERB holding <=n selected experiences.
+
+    This is the paper's 'resulting experience from the training is shared'
+    step; selective experience replay (Rolnick et al.) shares a subset, not
+    the raw stream.
+
+    strategy:
+      "uniform" — uniform subsample (the paper's implicit choice);
+      "reward"  — beyond-paper: surprise-weighted selection, sampling
+                  proportional to |reward| + eps (Rolnick et al. found
+                  reward-based selection strongest for forgetting).
+    """
+    n = min(n, erb.size)
+    if strategy == "reward":
+        w = np.abs(erb.data["reward"][:erb.size]).astype(np.float64) + 1e-3
+        p = w / w.sum()
+        idx = rng.choice(erb.size, size=n, replace=False, p=p)
+    else:
+        idx = rng.choice(erb.size, size=n, replace=False)
+    data = {k: v[idx].copy() for k, v in erb.data.items()}
+    # pad to capacity n exactly (shared ERBs are full by construction)
+    meta = ERBMeta(new_erb_id(), erb.meta.task, erb.meta.source_agent,
+                   erb.meta.round_idx, n)
+    return ERB(meta=meta, data=data, capacity=n, size=n, cursor=0)
+
+
+def stack_batches(batches) -> Dict[str, np.ndarray]:
+    keys = batches[0].keys()
+    return {k: np.concatenate([b[k] for b in batches], 0) for k in keys}

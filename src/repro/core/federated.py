@@ -1,0 +1,259 @@
+"""ADFLL system orchestration + the paper's comparison systems.
+
+* :class:`ADFLLSystem` — the contribution: asynchronous decentralized
+  federated lifelong learning over the hub topology, driven by the
+  event-driven scheduler with heterogeneous agent speeds, dropout, and
+  agent churn.
+* Agent X (all-knowing), Agent Y (partially-knowing), Agent M (traditional
+  sequential lifelong learner) — Table 1 baselines.
+* :class:`CentralAggregationSystem` — conventional synchronous federated
+  averaging of DQN weights (the framework the paper positions against).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
+from repro.core.erb import ERB, TaskTag, erb_init
+from repro.core.hub import Hub
+from repro.core.network import Network
+from repro.core.scheduler import Scheduler
+from repro.rl.agent import DQNAgent
+from repro.rl.env import LandmarkEnv
+from repro.rl.synth import make_volume
+
+
+def env_for(task: TaskTag, patient: int, cfg: DQNConfig) -> LandmarkEnv:
+    vol, lm = make_volume(task, patient, n=cfg.volume_shape[0])
+    return LandmarkEnv(vol, lm, cfg)
+
+
+def evaluate_on_tasks(agent: DQNAgent, tasks: Sequence[TaskTag],
+                      patients: Sequence[int], cfg: DQNConfig
+                      ) -> Dict[str, float]:
+    """Mean terminal distance per task over the held-out patients."""
+    out = {}
+    for t in tasks:
+        errs = [agent.evaluate(env_for(t, p, cfg), n_episodes=4)
+                for p in patients[:4]]
+        out[t.name] = float(np.mean(errs))
+    return out
+
+
+@dataclass
+class RoundRecord:
+    agent_id: int
+    round_idx: int
+    task: str
+    start: float
+    end: float
+    n_incoming: int
+    loss: float
+
+
+class ADFLLSystem:
+    """The paper's deployment system (Fig. 2 topology by default)."""
+
+    def __init__(self, sys_cfg: ADFLLConfig, dqn_cfg: DQNConfig,
+                 tasks: Sequence[TaskTag], train_patients: Sequence[int],
+                 *, seed: int = 0):
+        self.sys_cfg = sys_cfg
+        self.dqn_cfg = dqn_cfg
+        self.tasks = list(tasks)
+        self.train_patients = list(train_patients)
+        self.rng = np.random.default_rng(seed)
+        self.network = Network(
+            hubs=[Hub(h) for h in range(sys_cfg.n_hubs)],
+            dropout=sys_cfg.dropout,
+            rng=np.random.default_rng(seed + 1))
+        self.agents: Dict[int, DQNAgent] = {}
+        self.sched = Scheduler()
+        self.history: List[RoundRecord] = []
+        self._task_cursor = 0
+        self._next_agent_id = 0
+        self._outstanding = 0     # finish events not yet processed
+        for i in range(sys_cfg.n_agents):
+            hub = (sys_cfg.agent_hub[i]
+                   if i < len(sys_cfg.agent_hub) else None)
+            self.add_agent(speed=(sys_cfg.agent_speed[i]
+                                  if i < len(sys_cfg.agent_speed) else 1.0),
+                           hub_id=hub, at=0.0)
+        self.sched.every(sys_cfg.hub_sync_period,
+                         lambda s, t: self.network.sync(), tag="hub_sync")
+
+    # -- membership -----------------------------------------------------------
+    def add_agent(self, *, speed: float = 1.0, hub_id: Optional[int] = None,
+                  at: Optional[float] = None) -> int:
+        aid = self._next_agent_id
+        self._next_agent_id += 1
+        agent = DQNAgent(aid, self.dqn_cfg, seed=self.sys_cfg.seed + aid,
+                         speed=speed)
+        self.agents[aid] = agent
+        self.network.attach_agent(aid, hub_id)
+        t = self.sched.now if at is None else at
+        self.sched.at(t, lambda s, tt, a=aid: self._start_round(a),
+                      tag=f"A{aid}_join")
+        return aid
+
+    def remove_agent(self, agent_id: int):
+        self.agents[agent_id].active = False
+        self.network.detach_agent(agent_id)
+
+    # -- round machinery --------------------------------------------------------
+    def _next_task(self) -> TaskTag:
+        task = self.tasks[self._task_cursor % len(self.tasks)]
+        self._task_cursor += 1
+        return task
+
+    def _round_duration(self, agent: DQNAgent, n_incoming: int) -> float:
+        """Simulated wall time of one round: base cost grows with replay
+        volume; divided by hardware speed."""
+        base = 1.0 + 0.1 * n_incoming
+        jitter = float(self.rng.uniform(0.9, 1.1))
+        return base * jitter / agent.speed
+
+    def _start_round(self, agent_id: int):
+        agent = self.agents.get(agent_id)
+        if agent is None or getattr(agent, "active", True) is False:
+            return
+        if agent.rounds_done >= self.sys_cfg.rounds:
+            return
+        task = self._next_task()
+        patient = int(self.rng.choice(self.train_patients))
+        env = env_for(task, patient, self.dqn_cfg)
+        incoming = self.network.agent_pull(agent_id, agent.seen_erb_ids)
+        start = self.sched.now
+        shared, loss = agent.train_round(
+            env, task, incoming,
+            erb_capacity=self.sys_cfg.erb_capacity,
+            share_size=self.sys_cfg.erb_share_size,
+            train_steps=self.sys_cfg.train_steps_per_round)
+        dur = self._round_duration(agent, len(incoming))
+        end = start + dur
+        self.history.append(RoundRecord(
+            agent_id, agent.rounds_done - 1, task.name, start, end,
+            len(incoming), loss))
+
+        def finish(s: Scheduler, t: float, aid=agent_id, erb=shared):
+            self._outstanding -= 1
+            self.network.agent_push(aid, erb)
+            self._maybe_continue(aid)
+
+        self._outstanding += 1
+        self.sched.at(end, finish, tag=f"A{agent_id}_round_done")
+
+    def _maybe_continue(self, agent_id: int):
+        """Paper policy: start a new round whenever unseen ERBs exist (or a
+        fresh task remains); otherwise poll again after the next sync."""
+        agent = self.agents.get(agent_id)
+        if agent is None or getattr(agent, "active", True) is False:
+            return
+        if agent.rounds_done >= self.sys_cfg.rounds:
+            return
+        self._start_round(agent_id)
+
+    # -- run ------------------------------------------------------------------
+    def run(self, until: float = 1e6) -> float:
+        done = lambda: (self._outstanding == 0 and all(
+            a.rounds_done >= self.sys_cfg.rounds
+            for a in self.agents.values() if getattr(a, "active", True)))
+        t = self.sched.run(until=until, stop=done)
+        self.network.sync()
+        return t
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+def train_all_knowing(dqn_cfg: DQNConfig, tasks: Sequence[TaskTag],
+                      patients: Sequence[int], *, steps_per_task: int = 150,
+                      erb_capacity: int = 2048, seed: int = 100) -> DQNAgent:
+    """Agent X: all datasets available at once, ONE round over the union."""
+    agent = DQNAgent(-1, dqn_cfg, seed=seed)
+    rng = np.random.default_rng(seed)
+    erbs = []
+    for t in tasks:
+        env = env_for(t, int(rng.choice(patients)), dqn_cfg)
+        erb = erb_init(erb_capacity, dqn_cfg.box_size, task=t)
+        agent.collect(env, erb, n_episodes=24)
+        erbs.append(erb)
+    # one round of training over the union (current pool = all ERBs)
+    agent.personal_erbs = erbs
+    agent.train_steps(steps_per_task * len(tasks), None, ())
+    return agent
+
+
+def train_partial(dqn_cfg: DQNConfig, task: TaskTag,
+                  patients: Sequence[int], *, steps: int = 150,
+                  erb_capacity: int = 2048, seed: int = 200) -> DQNAgent:
+    """Agent Y: a single dataset, a single round."""
+    agent = DQNAgent(-2, dqn_cfg, seed=seed)
+    rng = np.random.default_rng(seed)
+    env = env_for(task, int(rng.choice(patients)), dqn_cfg)
+    erb = erb_init(erb_capacity, dqn_cfg.box_size, task=task)
+    agent.collect(env, erb, n_episodes=24)
+    agent.train_steps(steps, erb, ())
+    return agent
+
+
+def train_sequential_ll(dqn_cfg: DQNConfig, tasks: Sequence[TaskTag],
+                        patients: Sequence[int], *, steps_per_round: int =
+                        150, erb_capacity: int = 2048,
+                        seed: int = 300) -> DQNAgent:
+    """Agent M: traditional lifelong learner — tasks arrive sequentially,
+    replay over personal past ERBs only (no federation)."""
+    agent = DQNAgent(-3, dqn_cfg, seed=seed)
+    rng = np.random.default_rng(seed)
+    for t in tasks:
+        env = env_for(t, int(rng.choice(patients)), dqn_cfg)
+        agent.train_round(env, t, incoming=(),
+                          erb_capacity=erb_capacity,
+                          share_size=1,  # nothing is shared
+                          train_steps=steps_per_round)
+    return agent
+
+
+class CentralAggregationSystem:
+    """Conventional synchronous FedAvg over DQN weights: all agents train
+    locally for a round, a central server averages, repeat. The contrast
+    system for DESIGN.md §1 (requires homogeneous architectures and a
+    central node — both restrictions ADFLL removes)."""
+
+    def __init__(self, n_agents: int, dqn_cfg: DQNConfig,
+                 tasks: Sequence[TaskTag], patients: Sequence[int],
+                 *, seed: int = 400):
+        self.dqn_cfg = dqn_cfg
+        self.tasks = list(tasks)
+        self.patients = list(patients)
+        self.agents = [DQNAgent(i, dqn_cfg, seed=seed + i)
+                       for i in range(n_agents)]
+        self.rng = np.random.default_rng(seed)
+
+    def round(self, round_idx: int, *, steps: int = 150,
+              erb_capacity: int = 2048):
+        for i, agent in enumerate(self.agents):
+            task = self.tasks[(round_idx * len(self.agents) + i)
+                              % len(self.tasks)]
+            env = env_for(task, int(self.rng.choice(self.patients)),
+                          self.dqn_cfg)
+            erb = erb_init(erb_capacity, self.dqn_cfg.box_size, task=task,
+                           source_agent=i, round_idx=round_idx)
+            agent.collect(env, erb, n_episodes=24)
+            agent.train_steps(steps, erb, ())
+            agent.personal_erbs.append(erb)
+        # synchronous central aggregation (the bottleneck ADFLL removes)
+        mean_params = jax.tree_util.tree_map(
+            lambda *xs: sum(xs) / len(xs),
+            *[a.params for a in self.agents])
+        for a in self.agents:
+            a.params = mean_params
+            a.target_params = mean_params
+
+    def run(self, rounds: int, **kw):
+        for r in range(rounds):
+            self.round(r, **kw)
+        return self.agents[0]

@@ -1,0 +1,73 @@
+"""Hub nodes: the homogeneous distributed experience database (Fig. 6/7).
+
+Every agent talks only to its hub (bidirectional push/pull); hubs sync
+their databases with each other periodically. A hub's database maps
+erb_id -> ERB, and the Fig. 7 snapshot table is derivable from metadata.
+
+Hub failure loses only ERBs no other hub holds; agent failure loses only
+that agent's untrained round — the paper's robustness claims, which the
+property tests assert.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from repro.core.erb import ERB
+
+
+@dataclass
+class Hub:
+    hub_id: int
+    database: Dict[str, ERB] = field(default_factory=dict)
+    alive: bool = True
+
+    def push(self, erb: ERB) -> None:
+        """Agent -> hub (or hub -> hub) transfer of one ERB."""
+        if self.alive:
+            self.database.setdefault(erb.meta.erb_id, erb)
+
+    def pull_unseen(self, seen: Set[str]) -> List[ERB]:
+        """Hub -> agent: every ERB the agent has not yet learned from."""
+        if not self.alive:
+            return []
+        return [e for eid, e in sorted(self.database.items())
+                if eid not in seen]
+
+    def snapshot(self) -> List[dict]:
+        """Fig. 7 table: one row per ERB in the shared database."""
+        return [{
+            "erb_id": e.meta.erb_id,
+            "modality": e.meta.task.modality,
+            "landmark": e.meta.task.landmark,
+            "pathology": e.meta.task.pathology,
+            "source_agent": e.meta.source_agent,
+            "size": e.meta.size,
+        } for _, e in sorted(self.database.items())]
+
+    def fail(self) -> None:
+        self.alive = False
+        self.database.clear()
+
+
+def sync_hubs(hubs: Sequence[Hub], rng: np.random.Generator,
+              dropout: float = 0.0) -> int:
+    """Periodic pairwise database sync. Each (record, dest-hub) transfer
+    independently drops with probability ``dropout`` (the 75% ablation).
+    Returns the number of records transferred."""
+    live = [h for h in hubs if h.alive]
+    transferred = 0
+    for src in live:
+        for dst in live:
+            if src is dst:
+                continue
+            for eid, erb in list(src.database.items()):
+                if eid in dst.database:
+                    continue
+                if dropout > 0.0 and rng.random() < dropout:
+                    continue
+                dst.push(erb)
+                transferred += 1
+    return transferred

@@ -1,0 +1,86 @@
+"""Decentralized topology: agents <-> hubs, hub peering, failure injection.
+
+Communication complexity is linear in agents (each talks to one hub);
+hub-hub sync is the only n^2 term and n_hubs << n_agents.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set
+
+import numpy as np
+
+from repro.core.erb import ERB
+from repro.core.hub import Hub, sync_hubs
+
+
+@dataclass
+class Network:
+    hubs: List[Hub]
+    agent_hub: Dict[int, int] = field(default_factory=dict)
+    dropout: float = 0.0
+    rng: np.random.Generator = field(
+        default_factory=lambda: np.random.default_rng(0))
+    # statistics
+    n_pushed: int = 0
+    n_dropped: int = 0
+    n_synced: int = 0
+
+    # -- wiring ------------------------------------------------------------
+    def attach_agent(self, agent_id: int, hub_id: Optional[int] = None):
+        """New agents attach to the least-loaded live hub by default."""
+        if hub_id is None:
+            loads = {h.hub_id: 0 for h in self.hubs if h.alive}
+            for a, hid in self.agent_hub.items():
+                if hid in loads:
+                    loads[hid] += 1
+            hub_id = min(loads, key=lambda k: (loads[k], k))
+        self.agent_hub[agent_id] = hub_id
+
+    def detach_agent(self, agent_id: int):
+        self.agent_hub.pop(agent_id, None)
+
+    def hub_of(self, agent_id: int) -> Hub:
+        return self.hubs[self.agent_hub[agent_id]]
+
+    # -- data plane ----------------------------------------------------------
+    def agent_push(self, agent_id: int, erb: ERB) -> bool:
+        """Agent uploads its round ERB to its hub (may drop)."""
+        if self.dropout > 0.0 and self.rng.random() < self.dropout:
+            self.n_dropped += 1
+            return False
+        hub = self.hub_of(agent_id)
+        if not hub.alive:
+            self.n_dropped += 1
+            return False
+        hub.push(erb)
+        self.n_pushed += 1
+        return True
+
+    def agent_pull(self, agent_id: int, seen: Set[str]) -> List[ERB]:
+        hub = self.hub_of(agent_id)
+        pulled = hub.pull_unseen(seen)
+        if self.dropout > 0.0:
+            pulled = [e for e in pulled if self.rng.random() >= self.dropout]
+        return pulled
+
+    def sync(self) -> int:
+        n = sync_hubs(self.hubs, self.rng, self.dropout)
+        self.n_synced += n
+        return n
+
+    # -- failures ------------------------------------------------------------
+    def fail_hub(self, hub_id: int):
+        self.hubs[hub_id].fail()
+        # re-home orphaned agents to surviving hubs
+        for a, hid in list(self.agent_hub.items()):
+            if hid == hub_id:
+                del self.agent_hub[a]
+                if any(h.alive for h in self.hubs):
+                    self.attach_agent(a)
+
+    def all_known_erbs(self) -> Set[str]:
+        ids: Set[str] = set()
+        for h in self.hubs:
+            ids |= set(h.database)
+        return ids

@@ -1,0 +1,58 @@
+"""Selective experience replay — the lifelong-learning mechanism (A.2).
+
+During training an agent samples each minibatch from three pools:
+  (1) the ERB of its *current* task,
+  (2) its *personal* past-task ERBs,
+  (3) *incoming* ERBs received from the network (other agents' experience).
+Mixing (2) and (3) into every update is what prevents catastrophic
+forgetting and what federates learning without sharing weights.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.erb import ERB, erb_sample, stack_batches
+
+
+@dataclass
+class SelectiveReplaySampler:
+    """mix = (current, personal, incoming) fractions; renormalized over
+    non-empty pools."""
+    mix: Sequence[float] = (0.5, 0.25, 0.25)
+    use_pallas: bool = False
+
+    def sample(self, rng: np.random.Generator, batch_size: int,
+               current: Optional[ERB],
+               personal: Sequence[ERB] = (),
+               incoming: Sequence[ERB] = ()) -> Dict[str, np.ndarray]:
+        pools: List[List[ERB]] = [
+            [e for e in ([current] if current is not None else [])
+             if len(e) > 0],
+            [e for e in personal if len(e) > 0],
+            [e for e in incoming if len(e) > 0],
+        ]
+        weights = np.array([m if pool else 0.0
+                            for m, pool in zip(self.mix, pools)], np.float64)
+        if weights.sum() == 0:
+            raise ValueError("all replay pools are empty")
+        weights = weights / weights.sum()
+        counts = np.floor(weights * batch_size).astype(int)
+        counts[int(np.argmax(weights))] += batch_size - counts.sum()
+
+        batches = []
+        for pool, n in zip(pools, counts):
+            if n == 0 or not pool:
+                continue
+            # spread n over the ERBs in this pool, uniformly per-ERB
+            per = np.bincount(rng.integers(0, len(pool), size=n),
+                              minlength=len(pool))
+            for erb, m in zip(pool, per):
+                if m > 0:
+                    batches.append(erb_sample(erb, rng, int(m),
+                                              use_pallas=self.use_pallas))
+        batch = stack_batches(batches)
+        perm = rng.permutation(batch_size)
+        return {k: v[perm] for k, v in batch.items()}

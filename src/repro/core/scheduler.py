@@ -1,0 +1,67 @@
+"""Asynchronous event-driven scheduler.
+
+XLA programs are bulk-synchronous, so ADFLL's *asynchrony* lives here, at
+the host control plane: a discrete-event simulator with heterogeneous
+agent speeds (the paper's V100-vs-T4 deployment), hub sync timers, agent
+churn (addition/deletion ablations), and the paper's round policy —
+"when an agent finishes training on a task, as long as there are new ERBs
+it has not learned from, it starts a new round".
+
+The *content* of a round (DQN training on real tensors) executes eagerly
+when its event fires; only simulated time is virtual.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+EventFn = Callable[["Scheduler", float], None]
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    fn: EventFn = field(compare=False)
+    tag: str = field(compare=False, default="")
+
+
+class Scheduler:
+    """Deterministic discrete-event loop (ties broken by insertion order)."""
+
+    def __init__(self):
+        self._heap: List[_Event] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.log: List[Tuple[float, str]] = []
+
+    def at(self, time: float, fn: EventFn, tag: str = "") -> None:
+        heapq.heappush(self._heap, _Event(time, next(self._seq), fn, tag))
+
+    def after(self, delay: float, fn: EventFn, tag: str = "") -> None:
+        self.at(self.now + delay, fn, tag)
+
+    def every(self, period: float, fn: EventFn, tag: str = "",
+              until: Optional[float] = None) -> None:
+        def tick(sched: "Scheduler", t: float):
+            fn(sched, t)
+            if until is None or t + period <= until:
+                sched.at(t + period, tick, tag)
+        self.at(self.now + period, tick, tag)
+
+    def run(self, until: float = float("inf"),
+            stop: Optional[Callable[[], bool]] = None) -> float:
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if ev.time > until:
+                heapq.heappush(self._heap, ev)
+                break
+            self.now = ev.time
+            if ev.tag:
+                self.log.append((self.now, ev.tag))
+            ev.fn(self, self.now)
+            if stop is not None and stop():
+                break
+        return self.now

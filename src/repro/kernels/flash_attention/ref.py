@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash attention kernel (naive full-matrix)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window=None, scale=None,
+                  softcap: float = 0.0):
+    """q [B,S,Hq,D], k/v [B,S,Hkv,D*] -> [B,S,Hq,Dv]. Materializes SxS."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    if scale is None:
+        scale = d ** -0.5
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(F32), kr.astype(F32))
+    scores = scores * scale
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(F32))
+    return out.astype(q.dtype)

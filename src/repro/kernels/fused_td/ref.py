@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for fused_td."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_td_ref(q_sel, q_next, reward, done, *, gamma: float):
+    best = jnp.max(q_next.astype(jnp.float32), -1, keepdims=True)
+    target = reward + gamma * (1.0 - done) * best
+    delta = q_sel.astype(jnp.float32) - target
+    absd = jnp.abs(delta)
+    loss = jnp.where(absd <= 1.0, 0.5 * delta * delta, absd - 0.5)
+    dq = jnp.clip(delta, -1.0, 1.0)
+    return loss, dq

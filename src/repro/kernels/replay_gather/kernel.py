@@ -1,0 +1,52 @@
+"""ERB batched gather — Pallas TPU kernel.
+
+The ADFLL sampling hot path: gather a minibatch of experience rows from an
+HBM-resident replay buffer by precomputed indices, scaling each row by its
+(renormalized) importance weight. On TPU this is bandwidth-bound; the
+idiomatic formulation is a ``PrefetchScalarGridSpec`` — the index vector is
+scalar-prefetched so the BlockSpec index_map can route each grid step's HBM
+-> VMEM copy straight to the requested buffer row (no gather op in the
+kernel body at all; the DMA engine does the work).
+
+Grid: one step per (row-block); each step copies ``block_rows`` buffer rows
+into VMEM, applies the weight, and writes the output block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(idx_ref, w_ref, buf_ref, out_ref):
+    # buf_ref block: [1, feat] — the row selected by the index_map.
+    i = pl.program_id(0)
+    out_ref[0, :] = buf_ref[0, :] * w_ref[i]
+
+
+def replay_gather(buffer, indices, weights, *, interpret: bool = True):
+    """buffer [cap, feat], indices [batch] int32, weights [batch] f32
+    -> [batch, feat] (buffer rows scaled by weights)."""
+    cap, feat = buffer.shape
+    batch = indices.shape[0]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,               # indices, weights
+        grid=(batch,),
+        in_specs=[
+            pl.BlockSpec((1, feat),
+                         lambda i, idx_ref, w_ref: (idx_ref[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, feat), lambda i, idx_ref, w_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((batch, feat), buffer.dtype),
+        interpret=interpret,
+    )(indices, weights.astype(buffer.dtype), buffer)

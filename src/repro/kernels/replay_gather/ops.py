@@ -1,0 +1,15 @@
+"""jit'd wrapper for the ERB gather kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.replay_gather.kernel import replay_gather as _kernel
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def replay_gather(buffer, indices, weights, *, interpret: bool = True):
+    """Gather + weight replay rows: buffer [cap,F], indices [B], weights [B]
+    -> [B, F]."""
+    return _kernel(buffer, indices, weights, interpret=interpret)

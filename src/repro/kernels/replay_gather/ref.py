@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for replay_gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def replay_gather_ref(buffer, indices, weights):
+    return buffer[indices] * weights.astype(buffer.dtype)[:, None]

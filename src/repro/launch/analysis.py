@@ -1,0 +1,268 @@
+"""Roofline analysis sources.
+
+``compiled.cost_analysis()`` reports while-loop bodies ONCE (trip count is
+not modelled), so a scan-over-layers model under-reports FLOPs by ~n_layers.
+We therefore derive:
+
+* FLOPs — exact traversal of the closed jaxpr (scan bodies multiplied by
+  their static trip count, shard_map bodies by the mesh size). This counts
+  GLOBAL (whole-cluster) FLOPs.
+* collective bytes — parsed from the optimized (post-SPMD, per-device) HLO
+  text; collectives inside ``while`` bodies are multiplied by the trip
+  count recovered from the loop condition's comparison constant.
+* memory traffic — an explicit analytic model (params + optimizer +
+  activation checkpoints + KV-cache reads), stated in EXPERIMENTS.md.
+
+``cost_analysis()`` numbers are still recorded for reference.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+from jax import core as jcore
+
+# ---------------------------------------------------------------------------
+# jaxpr FLOP counter
+# ---------------------------------------------------------------------------
+_ELEMENTWISE_1 = {
+    "add", "sub", "mul", "div", "max", "min", "neg", "abs", "floor",
+    "ceil", "round", "sign", "and", "or", "xor", "not", "select_n",
+    "clamp", "rem", "pow", "integer_pow",
+}
+_ELEMENTWISE_T = {  # transcendental: count a few flops each
+    "exp", "log", "tanh", "logistic", "sin", "cos", "sqrt", "rsqrt",
+    "erf", "exp2", "log1p", "expm1", "cbrt", "tan", "atan2",
+}
+_REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+           "reduce_and", "reduce_or", "argmax", "argmin",
+           "cumsum", "cumprod", "cummax", "cummin", "reduce_precision"}
+
+
+def _size(aval) -> int:
+    try:
+        return int(np.prod(aval.shape)) if aval.shape else 1
+    except Exception:
+        return 1
+
+
+def _sub_jaxprs(params):
+    """Yield every Jaxpr held in an eqn's params (generic recursion)."""
+    for v in params.values():
+        tn = type(v).__name__
+        if tn == "ClosedJaxpr":
+            yield v.jaxpr
+        elif tn == "Jaxpr":
+            yield v
+        elif isinstance(v, (list, tuple)):
+            for u in v:
+                un = type(u).__name__
+                if un == "ClosedJaxpr":
+                    yield u.jaxpr
+                elif un == "Jaxpr":
+                    yield u
+
+
+def _jaxpr_flops(jaxpr, n_shards: int = 1) -> float:
+    total = 0.0
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim == "dot_general":
+            dnums = eqn.params["dimension_numbers"]
+            (lc, _), _b = dnums
+            lhs = eqn.invars[0].aval
+            k = math.prod(lhs.shape[d] for d in lc) or 1
+            out = _size(eqn.outvars[0].aval)
+            total += 2.0 * out * k
+        elif prim == "conv_general_dilated":
+            rhs = eqn.invars[1].aval
+            dn = eqn.params["dimension_numbers"]
+            groups = eqn.params.get("feature_group_count", 1)
+            k_spatial = math.prod(rhs.shape[d] for d in dn.rhs_spec[2:])
+            cin = rhs.shape[dn.rhs_spec[1]]
+            out = _size(eqn.outvars[0].aval)
+            total += 2.0 * out * k_spatial * cin / max(groups, 1)
+        elif prim == "scan":
+            body = _jaxpr_flops(eqn.params["jaxpr"].jaxpr, n_shards)
+            total += body * eqn.params["length"]
+        elif prim == "cond":
+            total += max(_jaxpr_flops(b.jaxpr, n_shards)
+                         for b in eqn.params["branches"])
+        elif prim == "shard_map":
+            for sub in _sub_jaxprs(eqn.params):
+                total += _jaxpr_flops(sub, 1) * n_shards
+        elif prim in _ELEMENTWISE_1 or prim == "add_any":
+            total += _size(eqn.outvars[0].aval)
+        elif prim in _ELEMENTWISE_T:
+            total += 5.0 * _size(eqn.outvars[0].aval)
+        elif prim in _REDUCE:
+            total += _size(eqn.invars[0].aval)
+        else:
+            # generic recursion (pjit, remat2, custom_vjp, ...)
+            for sub in _sub_jaxprs(eqn.params):
+                total += _jaxpr_flops(sub, n_shards)
+    return total
+
+
+def count_flops(fn, *args, n_shards: int = 1, **kw) -> float:
+    """Global FLOPs of fn(*args) — exact for scan/shard_map programs."""
+    jaxpr = jax.make_jaxpr(fn, **kw)(*args)
+    return _jaxpr_flops(jaxpr.jaxpr, n_shards)
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parser
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(sig: str) -> int:
+    """'f32[16,128]' -> bytes; tuples summed by caller."""
+    total = 0
+    for m in _SHAPE_RE.finditer(sig):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective bytes by type, while-bodies scaled by trip
+    count. Returns {'all-gather': bytes, ..., 'total': bytes}."""
+    # split into computations
+    comps: Dict[str, list] = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$", line)
+        if m:
+            cur = m.group(2)
+            comps[cur] = []
+            if m.group(1):
+                entry = cur
+        elif cur is not None:
+            if line.startswith("}"):
+                cur = None
+            else:
+                comps[cur].append(line)
+
+    # map: computation -> list of (collective_kind, bytes)
+    coll: Dict[str, list] = defaultdict(list)
+    # map: computation -> list of (called_comp, kind) for while/call ops
+    calls: Dict[str, list] = defaultdict(list)
+    trip_hint: Dict[str, int] = {}
+
+    for cname, lines in comps.items():
+        for line in lines:
+            s = line.strip()
+            m = re.match(r"%?[\w\.\-]+ = (.+?) ([\w\-]+)\(", s)
+            if not m:
+                continue
+            sig, op = m.groups()
+            base = op.split(".")[0]
+            if base in _COLLECTIVES:
+                coll[cname].append((base, _shape_bytes(sig)))
+            elif base == "while":
+                bm = re.search(r"body=%?([\w\.\-]+)", s)
+                cm = re.search(r"condition=%?([\w\.\-]+)", s)
+                if bm:
+                    calls[cname].append((bm.group(1),
+                                         cm.group(1) if cm else None))
+            elif base in ("call", "fusion", "conditional"):
+                for sub in re.findall(r"(?:calls|to_apply)=%?([\w\.\-]+)", s):
+                    calls[cname].append((sub, None))
+                for sub in re.findall(
+                        r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w\.\-, %]+)", s):
+                    for c2 in re.split(r"[,\s%]+", sub):
+                        if c2:
+                            calls[cname].append((c2, None))
+        # trip count: biggest integer constant compared in a condition comp
+        consts = [int(v) for line in lines
+                  for v in re.findall(r"constant\((\d+)\)", line)]
+        if consts:
+            trip_hint[cname] = max(consts)
+
+    def bytes_of(comp: str, seen) -> Dict[str, float]:
+        if comp in seen or comp not in comps:
+            return {}
+        seen = seen | {comp}
+        out: Dict[str, float] = defaultdict(float)
+        for kind, b in coll.get(comp, []):
+            out[kind] += b
+        for sub, cond in calls.get(comp, []):
+            subbytes = bytes_of(sub, seen)
+            trips = trip_hint.get(cond, 1) if cond else 1
+            for k, v in subbytes.items():
+                out[k] += v * max(trips, 1)
+        return out
+
+    if entry is None:
+        for cname in comps:
+            if "entry" in cname.lower() or cname.startswith("main"):
+                entry = cname
+                break
+    if entry is None and comps:
+        entry = next(iter(comps))
+    result = dict(bytes_of(entry, frozenset())) if entry else {}
+    result["total"] = float(sum(v for k, v in result.items()))
+    return result
+
+
+def top_collectives(hlo_text: str, n: int = 20):
+    """Debug attribution: the n largest individual collective op lines
+    (per-device bytes; while-trip multiplication NOT applied here)."""
+    out = []
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?([\w\.\-]+) = (.+?) ([\w\-]+)\(", s)
+        if not m:
+            continue
+        name, sig, op = m.groups()
+        base = op.split(".")[0]
+        if base in _COLLECTIVES:
+            meta = ""
+            mm = re.search(r'op_name="([^"]+)"', s)
+            if mm:
+                meta = mm.group(1)[-90:]
+            out.append((_shape_bytes(sig), base, sig[:48], meta))
+    out.sort(reverse=True)
+    return out[:n]
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM-traffic model (per device, per step)
+# ---------------------------------------------------------------------------
+def analytic_hbm_bytes(*, mode: str, param_bytes_dev: float,
+                       opt_bytes_dev: float, act_bytes_dev: float,
+                       cache_bytes_dev: float, io_bytes_dev: float) -> Dict[str, float]:
+    """Assumptions (documented in EXPERIMENTS.md §Roofline):
+    train : params read fwd + read bwd + write; grads write+read;
+            moments read+write; checkpointed activations write+read plus
+            one recompute read (remat); batch io once.
+    prefill: params read once; activations write once; io once.
+    decode: params read once (the decode wall); cache read + small write.
+    """
+    if mode == "train":
+        total = (3 * param_bytes_dev + 2 * param_bytes_dev  # grads ~ params
+                 + 2 * opt_bytes_dev + 3 * act_bytes_dev + io_bytes_dev)
+    elif mode == "prefill":
+        total = param_bytes_dev + 2 * act_bytes_dev + cache_bytes_dev \
+            + io_bytes_dev
+    else:  # decode
+        total = param_bytes_dev + cache_bytes_dev + io_bytes_dev
+    return {"total": float(total)}

@@ -1,0 +1,277 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The forced 512 host devices exist ONLY for this dry-run process.
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import math              # noqa: E402
+import subprocess        # noqa: E402
+import sys               # noqa: E402
+import time              # noqa: E402
+from typing import Optional  # noqa: E402
+
+import jax               # noqa: E402
+
+from repro.configs.base import (ASSIGNED, INPUT_SHAPES, InputShape,  # noqa: E402
+                                ModelConfig, get_config, param_count)
+from repro.launch import analysis  # noqa: E402
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
+                               make_production_mesh)
+from repro.launch.specs import (cache_specs, input_specs, opt_cfg_for,  # noqa: E402
+                                params_specs, state_specs)
+from repro.models.model import (make_prefill_step, make_serve_step,  # noqa: E402
+                                make_train_step)
+from repro.models.sharding import ShardingPolicy  # noqa: E402
+
+# Per-(arch, mode) gradient-accumulation settings found during the baseline
+# memory pass (EXPERIMENTS.md §Dry-run). Everything else runs k=1.
+MICROBATCHES = {
+    ("jamba-1.5-large-398b", "train"): 8,
+    ("qwen3-moe-235b-a22b", "train"): 4,
+    ("qwen2.5-14b", "train"): 2,
+    ("starcoder2-15b", "train"): 2,
+    ("moonshot-v1-16b-a3b", "train"): 2,
+    ("deepseek-v2-lite-16b", "train"): 2,
+}
+
+# Beyond-paper launch settings derived from the §Perf measurement campaign
+# (EXPERIMENTS.md): dense/audio/VLM <=4B -> pure DP + ZeRO-3; mid dense ->
+# TP+SP with grad accumulation; MoE -> EP (baseline); 398B hybrid ->
+# multi-pod + k=4 + no-SP.
+OPTIMIZED = {
+    ("h2o-danube-3-4b", "train"): {"dp_over_model": True},
+    ("musicgen-medium", "train"): {"dp_over_model": True},
+    ("qwen2-vl-2b", "train"): {"dp_over_model": True},
+    ("xlstm-125m", "train"): {"dp_over_model": True},
+    ("jamba-1.5-large-398b", "train"): {"microbatches": 4,
+                                        "seq_shard": False},
+}
+
+SKIPS = {
+    # long_500k needs a sub-quadratic path (DESIGN.md §4)
+    ("musicgen-medium", "long_500k"): "full attention, no subquadratic path",
+    ("qwen2.5-14b", "long_500k"): "full attention, no subquadratic path",
+    ("moonshot-v1-16b-a3b", "long_500k"): "full attention, no subquadratic path",
+    ("deepseek-v2-lite-16b", "long_500k"): "full attention, no subquadratic path",
+    ("qwen3-moe-235b-a22b", "long_500k"): "full attention, no subquadratic path",
+    ("starcoder2-15b", "long_500k"): "full attention, no subquadratic path",
+    ("qwen2-vl-2b", "long_500k"): "full attention, no subquadratic path",
+}
+
+
+def _bytes_per_device(sds_tree) -> float:
+    total = 0.0
+    for leaf in jax.tree_util.tree_leaves(sds_tree):
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None:
+            shard = sh.shard_shape(leaf.shape)
+        else:
+            shard = leaf.shape
+        total += math.prod(shard) * leaf.dtype.itemsize if shard else \
+            leaf.dtype.itemsize
+    return total
+
+
+def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
+             policy_overrides: Optional[dict] = None,
+             print_analyses: bool = True, optimized: bool = False) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if optimized:
+        policy_overrides = dict(OPTIMIZED.get((arch, shape.mode), {}),
+                                **(policy_overrides or {}))
+    if (arch, shape_name) in SKIPS:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    kw = dict(batch_axes=batch_axes, fsdp_axes=("data",),
+              microbatches=MICROBATCHES.get((arch, shape.mode), 1))
+    overrides = dict(policy_overrides or {})
+    if overrides.pop("dp_over_model", False):
+        # pure data parallelism: the model axis carries batch, weights are
+        # FSDP-sharded over data and replicated over model
+        kw.update(batch_axes=batch_axes + ("model",), tensor_parallel=False,
+                  seq_shard=False)
+    if overrides.pop("no_fsdp", False):
+        kw.update(fsdp_axes=())
+    kw.update(overrides)
+    policy = ShardingPolicy(**kw)
+    opt_cfg = opt_cfg_for(cfg)
+
+    t0 = time.time()
+    if shape.mode == "train":
+        sspec, _ = state_specs(cfg, mesh, policy, opt_cfg)
+        bspec = input_specs(cfg, shape, mesh, policy)
+        step = make_train_step(cfg, opt_cfg, mesh=mesh, policy=policy)
+        args = (sspec, bspec)
+        jitted = jax.jit(step, donate_argnums=0)
+    elif shape.mode == "prefill":
+        pspec, _ = params_specs(cfg, mesh, policy)
+        bspec = input_specs(cfg, shape, mesh, policy)
+        step = make_prefill_step(cfg, mesh=mesh, policy=policy)
+        args = (pspec, bspec)
+        jitted = jax.jit(step)
+    else:  # decode
+        pspec, _ = params_specs(cfg, mesh, policy)
+        cspec, _ = cache_specs(cfg, shape.global_batch, shape.seq_len,
+                               mesh, policy)
+        bspec = input_specs(cfg, shape, mesh, policy)
+        step = make_serve_step(cfg, mesh=mesh, policy=policy)
+        args = (pspec, cspec, bspec)
+        jitted = jax.jit(step, donate_argnums=1)
+
+    with mesh:
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    if print_analyses:
+        print(f"memory_analysis: arg={ma.argument_size_in_bytes/1e9:.3f}GB "
+              f"out={ma.output_size_in_bytes/1e9:.3f}GB "
+              f"temp={ma.temp_size_in_bytes/1e9:.3f}GB "
+              f"(proof of per-device footprint)")
+        print(f"cost_analysis: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e} "
+              f"(while-bodies counted once — see corrected terms)")
+
+    # corrected global FLOPs from the jaxpr (scan-exact)
+    n_dev = mesh.size
+    flops_global = analysis.count_flops(step, *args, n_shards=n_dev)
+    # per-device collective bytes from the optimized HLO
+    coll = analysis.parse_collectives(compiled.as_text())
+
+    chips = n_dev
+    total_p, active_p = param_count(cfg)
+    if shape.mode == "train":
+        model_flops = 6.0 * active_p * shape.global_batch * shape.seq_len
+    elif shape.mode == "prefill":
+        model_flops = 2.0 * active_p * shape.global_batch * shape.seq_len
+    else:
+        model_flops = 2.0 * active_p * shape.global_batch  # one token
+
+    # analytic HBM traffic (per device)
+    dtype_b = 2 if cfg.dtype == "bfloat16" else 4
+    if shape.mode == "train":
+        param_dev = _bytes_per_device(args[0]["params"])
+        opt_dev = _bytes_per_device(args[0]["opt"])
+        cache_dev = 0.0
+    else:
+        param_dev = _bytes_per_device(args[0])
+        opt_dev = 0.0
+        cache_dev = _bytes_per_device(args[1]) if shape.mode == "decode" \
+            else 0.0
+    mp = mesh.shape["model"]
+    dp = chips // mp
+    seq_div = mp if (policy.seq_shard and shape.seq_len % mp == 0) else 1
+    act_dev = (cfg.n_layers * shape.global_batch * shape.seq_len
+               * cfg.d_model * dtype_b
+               / max(dp, 1) / seq_div / policy.microbatches) \
+        if shape.mode != "decode" else 0.0
+    io_dev = _bytes_per_device(args[-1])
+    hbm = analysis.analytic_hbm_bytes(
+        mode=shape.mode, param_bytes_dev=param_dev, opt_bytes_dev=opt_dev,
+        act_bytes_dev=act_dev, cache_bytes_dev=cache_dev, io_bytes_dev=io_dev)
+
+    compute_t = flops_global / (chips * PEAK_FLOPS_BF16)
+    memory_t = hbm["total"] / HBM_BW            # per-device traffic
+    collective_t = coll.get("total", 0.0) / ICI_BW
+
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": collective_t}
+    bottleneck = max(terms, key=terms.get)
+
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok",
+        "mesh": dict(mesh.shape),
+        "microbatches": policy.microbatches,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": {
+            "arg_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "peak_bytes": ma.argument_size_in_bytes + ma.temp_size_in_bytes,
+        },
+        "cost_analysis": {k: ca.get(k) for k in
+                          ("flops", "bytes accessed") if k in ca},
+        "flops_global_jaxpr": flops_global,
+        "collective_bytes_per_dev": coll,
+        "hbm_bytes_per_dev": hbm["total"],
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / flops_global
+                               if flops_global else None),
+        "roofline": dict(terms, bottleneck=bottleneck),
+        "params_total": total_p, "params_active": active_p,
+    }
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) in subprocesses")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--set", default=None,
+                    help="policy overrides k=v,k=v (ints/bools)")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the EXPERIMENTS.md §Perf launch settings")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        jobs = [(a, s) for a in ASSIGNED for s in INPUT_SHAPES]
+        for a, s in jobs:
+            tag = "multi" if args.multi_pod else "single"
+            path = os.path.join(args.out, f"{a}__{s}__{tag}.json")
+            if os.path.exists(path) and not args.force:
+                print(f"[skip cached] {a} {s}")
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s, "--out", args.out]
+            if args.multi_pod:
+                cmd.append("--multi-pod")
+            print(f"[run] {a} {s} {tag}", flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            tail = "\n".join((r.stdout or "").splitlines()[-8:])
+            print(tail)
+            if r.returncode != 0:
+                err = "\n".join((r.stderr or "").splitlines()[-12:])
+                print(f"[FAIL] {a} {s}: {err}")
+                with open(path, "w") as f:
+                    json.dump({"arch": a, "shape": s,
+                               "multi_pod": args.multi_pod,
+                               "status": "error", "error": err[-2000:]},
+                              f, indent=1)
+        return
+
+    overrides = {}
+    if args.set:
+        for kv in args.set.split(","):
+            k, v = kv.split("=")
+            overrides[k] = (v == "True") if v in ("True", "False") else int(v)
+
+    res = run_pair(args.arch, args.shape, multi_pod=args.multi_pod,
+                   policy_overrides=overrides or None,
+                   optimized=args.optimized)
+    tag = "multi" if args.multi_pod else "single"
+    path = os.path.join(args.out, f"{args.arch}__{args.shape}__{tag}.json")
+    with open(path, "w") as f:
+        json.dump(res, f, indent=1)
+    print(json.dumps({k: v for k, v in res.items()
+                      if k not in ("cost_analysis",)}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Composable decoder block: (mixer, ffn) pairs from the config pattern."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ATTN, FFN_DENSE, FFN_MOE, FFN_NONE, MAMBA,
+                                MLA, MLSTM, SLSTM, ModelConfig)
+from repro.models import attention, ssm
+from repro.models.layers import mlp_apply, mlp_init, norm_apply, norm_init
+from repro.models.moe import moe_apply, moe_init
+
+_MIXER_INIT = {
+    ATTN: attention.gqa_init,
+    MLA: attention.mla_init,
+    MAMBA: ssm.mamba_init,
+    MLSTM: ssm.mlstm_init,
+    SLSTM: ssm.slstm_init,
+}
+
+
+def block_init(key, cfg: ModelConfig, mixer: str, ffn: str,
+               d_ff: Optional[int] = None):
+    ks = jax.random.split(key, 4)
+    p = {
+        "norm1": norm_init(cfg, cfg.d_model),
+        "mixer": _MIXER_INIT[mixer](ks[0], cfg),
+    }
+    if ffn == FFN_DENSE:
+        p["norm2"] = norm_init(cfg, cfg.d_model)
+        p["ffn"] = mlp_init(ks[1], cfg, cfg.d_model, d_ff or cfg.d_ff)
+    elif ffn == FFN_MOE:
+        p["norm2"] = norm_init(cfg, cfg.d_model)
+        p["ffn"] = moe_init(ks[1], cfg)
+    return p
+
+
+def block_cache_init(cfg: ModelConfig, mixer: str, batch: int,
+                     cache_len: int, dtype):
+    if mixer == ATTN:
+        return attention.gqa_cache_init(cfg, batch, cache_len, dtype)
+    if mixer == MLA:
+        return attention.mla_cache_init(cfg, batch, cache_len, dtype)
+    if mixer == MAMBA:
+        return ssm.mamba_state_init(cfg, batch, dtype)
+    if mixer == MLSTM:
+        return ssm.mlstm_state_init(cfg, batch, dtype)
+    if mixer == SLSTM:
+        return ssm.slstm_state_init(cfg, batch, dtype)
+    raise ValueError(mixer)
+
+
+def _full_s(x, mesh, batch_axes):
+    """All-gather the sequence dim at mixer/FFN entry (Megatron-SP)."""
+    if mesh is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+    from repro.models.sharding import constrain
+    batch = tuple(a for a in batch_axes if a in mesh.axis_names)
+    b_ax = batch if len(batch) > 1 else (batch[0] if batch else None)
+    return constrain(x, mesh, P(b_ax, None, None))
+
+
+def block_apply(cfg: ModelConfig, p, x, *, mixer: str, ffn: str, mode: str,
+                positions=None, cache=None, mesh=None,
+                batch_axes=("data",), attn_impl: str = "xla",
+                tp: bool = True):
+    """Returns (x, new_cache, aux)."""
+    h = _full_s(norm_apply(cfg, p["norm1"], x), mesh, batch_axes)
+    if mixer == ATTN:
+        y, new_cache = attention.gqa_apply(
+            cfg, p["mixer"], h, mode=mode, positions=positions, cache=cache,
+            attn_impl=attn_impl, mesh=mesh, batch_axes=batch_axes,
+            tp=tp)
+    elif mixer == MLA:
+        y, new_cache = attention.mla_apply(
+            cfg, p["mixer"], h, mode=mode, positions=positions, cache=cache,
+            attn_impl=attn_impl, mesh=mesh, batch_axes=batch_axes,
+            tp=tp)
+    elif mixer == MAMBA:
+        y, new_cache = ssm.mamba_apply(cfg, p["mixer"], h, mode=mode,
+                                       state=cache, mesh=mesh,
+                                       batch_axes=batch_axes, tp=tp)
+    elif mixer == MLSTM:
+        y, new_cache = ssm.mlstm_apply(cfg, p["mixer"], h, mode=mode,
+                                       state=cache, mesh=mesh,
+                                       batch_axes=batch_axes, tp=tp)
+    elif mixer == SLSTM:
+        y, new_cache = ssm.slstm_apply(cfg, p["mixer"], h, mode=mode,
+                                       state=cache, mesh=mesh,
+                                       batch_axes=batch_axes, tp=tp)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+
+    aux = jnp.zeros((), jnp.float32)
+    if ffn == FFN_DENSE:
+        h2 = _full_s(norm_apply(cfg, p["norm2"], x), mesh, batch_axes)
+        x = x + mlp_apply(cfg, p["ffn"], h2)
+    elif ffn == FFN_MOE:
+        # MoE consumes the sequence-sharded stream directly (EP dispatch)
+        y, aux = moe_apply(cfg, p["ffn"], norm_apply(cfg, p["norm2"], x),
+                           mesh=mesh, batch_axes=batch_axes, mode=mode,
+                           tp=tp)
+        x = x + y
+    return x, new_cache, aux

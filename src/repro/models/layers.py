@@ -1,0 +1,101 @@
+"""Norms, MLPs, embeddings — shared building blocks for the zoo."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, *, bias=False, scale=None):
+    w = truncated_normal(key, (d_in, d_out), scale or d_in ** -0.5, dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms (computed in f32, cast back)
+# ---------------------------------------------------------------------------
+def norm_init(cfg: ModelConfig, d: int):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), jnp.float32),
+                "bias": jnp.zeros((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def norm_apply(cfg: ModelConfig, p, x):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x, -1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), -1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(x), -1, keepdims=True)
+        y = x * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (swiglu or gelu variant)
+# ---------------------------------------------------------------------------
+def mlp_init(key, cfg: ModelConfig, d_model: int, d_ff: int):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_variant == "swiglu":
+        return {
+            "wi": dense_init(ks[0], d_model, d_ff, dtype),
+            "wg": dense_init(ks[1], d_model, d_ff, dtype),
+            "wo": dense_init(ks[2], d_ff, d_model, dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], d_model, d_ff, dtype, bias=True),
+        "wo": dense_init(ks[2], d_ff, d_model, dtype, bias=True),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    if cfg.mlp_variant == "swiglu":
+        h = jax.nn.silu(dense_apply(p["wg"], x)) * dense_apply(p["wi"], x)
+    else:
+        h = jax.nn.gelu(dense_apply(p["wi"], x))
+    return dense_apply(p["wo"], h)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed_init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": truncated_normal(k1, (cfg.vocab_size, cfg.d_model), 0.02,
+                                 dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dtype,
+                               scale=cfg.d_model ** -0.5)
+    return p
+
+
+def embed_apply(p, tokens):
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed_apply(cfg: ModelConfig, p, x):
+    if cfg.tie_embeddings:
+        return x @ p["tok"].T
+    return dense_apply(p["head"], x)

@@ -1,0 +1,76 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """[head_dim/2] inverse frequencies (f32)."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions [...]: int32 -> cos/sin of shape [..., head_dim/2] (f32)."""
+    freqs = rope_freqs(head_dim, theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_cos_sin(positions3, head_dim: int, theta: float, sections):
+    """Qwen2-VL multimodal RoPE.
+
+    positions3: [3, ...] (t, h, w) position ids. ``sections`` splits the
+    head_dim/2 frequency bands among (t, h, w); each band rotates by its own
+    coordinate. Returns cos/sin [..., head_dim/2].
+    """
+    freqs = rope_freqs(head_dim, theta)                    # [half]
+    # angles per coordinate: [3, ..., half]
+    ang = positions3.astype(jnp.float32)[..., None] * freqs
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    idx = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                     total_repeat_length=half)             # [half] in {0,1,2}
+    sel = jnp.take_along_axis(
+        jnp.moveaxis(ang, 0, -1),                          # [..., half, 3]
+        idx[(None,) * (ang.ndim - 2) + (slice(None), None)].astype(jnp.int32),
+        axis=-1)[..., 0]                                   # [..., half]
+    return jnp.cos(sel), jnp.sin(sel)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, D]; cos/sin broadcastable [..., S, 1, D/2].
+
+    Rotate-half convention (llama): pairs are (x[:D/2], x[D/2:]).
+    """
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+def positions_for(cfg: ModelConfig, batch: int, seq: int, offset=0):
+    """Default position ids. For mrope, text-only default: all three
+    coordinates equal (matches Qwen2-VL for pure-text segments)."""
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset   # [1, S]
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(pos[None], (3, batch, seq))
+    return pos
+
+
+def cos_sin_for(cfg: ModelConfig, positions, head_dim=None):
+    """positions: [B,S] (rope) or [3,B,S] (mrope) -> cos,sin [B,S,1,D/2]."""
+    hd = head_dim if head_dim is not None else cfg.resolved_head_dim
+    if cfg.rope == "none":
+        return None
+    if cfg.rope == "mrope":
+        cos, sin = mrope_cos_sin(positions, hd, cfg.rope_theta,
+                                 cfg.mrope_sections)
+    else:
+        cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
+    return cos[..., None, :], sin[..., None, :]

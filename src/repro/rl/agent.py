@@ -1,0 +1,169 @@
+"""DQN agent: epsilon-greedy exploration, target network, fused TD loss,
+and the ADFLL round API (collect -> train on mixed replay -> share ERB).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.adfll_dqn import DQNConfig
+from repro.core.erb import ERB, TaskTag, erb_add, erb_init, erb_share_slice
+from repro.core.replay import SelectiveReplaySampler
+from repro.kernels.fused_td.ops import td_loss
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.rl.dqn import dqn_apply, dqn_init
+from repro.rl.env import LandmarkEnv
+
+
+def make_dqn_steps(cfg: DQNConfig, *, use_pallas: bool = False):
+    """Returns (act_fn, train_fn) — both jitted."""
+
+    @jax.jit
+    def q_values(params, obs, loc):
+        return dqn_apply(cfg, params, obs, loc)
+
+    opt_cfg = AdamWConfig(lr=cfg.lr, weight_decay=0.0, clip_norm=10.0,
+                          warmup_steps=0, total_steps=10 ** 9)
+
+    def loss_fn(params, target_params, batch):
+        q = dqn_apply(cfg, params, batch["obs"], batch["loc"])
+        q_sel = jnp.take_along_axis(q, batch["action"][:, None], 1)
+        q_next = dqn_apply(cfg, target_params, batch["next_obs"],
+                           batch["next_loc"])
+        q_next = jax.lax.stop_gradient(q_next)
+        return td_loss(q_sel, q_next, batch["reward"][:, None],
+                       batch["done"][:, None], cfg.gamma, use_pallas)
+
+    @jax.jit
+    def train_fn(params, target_params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, target_params,
+                                                  batch)
+        params, opt_state, _ = adamw_update(opt_cfg, params, grads,
+                                            opt_state)
+        return params, opt_state, loss
+
+    return q_values, train_fn, opt_cfg
+
+
+@dataclass
+class DQNAgent:
+    """One ADFLL participant (also used standalone for Agents X/Y/M)."""
+    agent_id: int
+    cfg: DQNConfig
+    seed: int = 0
+    speed: float = 1.0            # relative hardware speed (sim time)
+    use_pallas: bool = False
+
+    def __post_init__(self):
+        key = jax.random.PRNGKey(self.seed)
+        self.params = dqn_init(key, self.cfg)
+        self.target_params = self.params
+        self.q_values, self.train_fn, opt_cfg = make_dqn_steps(
+            self.cfg, use_pallas=self.use_pallas)
+        self.opt_state = adamw_init(opt_cfg, self.params)
+        self.rng = np.random.default_rng(
+            abs(self.seed + 1000 * self.agent_id))
+        self.step_count = 0
+        self.personal_erbs: List[ERB] = []
+        self.seen_erb_ids: set = set()
+        self.rounds_done = 0
+        self.sampler = SelectiveReplaySampler(use_pallas=False)
+
+    # -- acting ----------------------------------------------------------
+    def epsilon(self) -> float:
+        c = self.cfg
+        frac = min(1.0, self.step_count / max(1, c.eps_decay_steps))
+        return c.eps_start + frac * (c.eps_end - c.eps_start)
+
+    def act(self, env: LandmarkEnv, locs: np.ndarray, eps: float
+            ) -> np.ndarray:
+        q = np.asarray(self.q_values(self.params, env.observe(locs),
+                                     env.norm_loc(locs)))
+        greedy = q.argmax(-1)
+        rand = self.rng.integers(0, self.cfg.n_actions, size=len(locs))
+        coin = self.rng.random(len(locs)) < eps
+        return np.where(coin, rand, greedy).astype(np.int32)
+
+    # -- experience collection ---------------------------------------------
+    def collect(self, env: LandmarkEnv, erb: ERB, n_episodes: int) -> ERB:
+        c = self.cfg
+        locs = env.start_locs(n_episodes, self.rng)
+        alive = np.ones(n_episodes, bool)
+        for _ in range(c.max_episode_steps):
+            if not alive.any():
+                break
+            eps = self.epsilon()
+            acts = self.act(env, locs, eps)
+            new, r, done = env.step(locs, acts)
+            idx = np.where(alive)[0]
+            batch = {
+                "obs": env.observe(locs[idx]),
+                "loc": env.norm_loc(locs[idx]),
+                "action": acts[idx],
+                "reward": r[idx],
+                "next_obs": env.observe(new[idx]),
+                "next_loc": env.norm_loc(new[idx]),
+                "done": done[idx].astype(np.float32),
+            }
+            erb_add(erb, batch)
+            locs = new
+            alive &= ~done
+        return erb
+
+    # -- learning ------------------------------------------------------------
+    def train_steps(self, n_steps: int, current: Optional[ERB],
+                    incoming: Sequence[ERB] = ()) -> float:
+        last = 0.0
+        for _ in range(n_steps):
+            batch = self.sampler.sample(
+                self.rng, self.cfg.batch_size, current,
+                personal=self.personal_erbs, incoming=incoming)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, loss = self.train_fn(
+                self.params, self.target_params, self.opt_state, batch)
+            self.step_count += 1
+            if self.step_count % self.cfg.target_update == 0:
+                self.target_params = self.params
+            last = float(loss)
+        return last
+
+    # -- ADFLL round (paper A.3) ----------------------------------------------
+    def train_round(self, env: LandmarkEnv, task: TaskTag,
+                    incoming: Sequence[ERB], *, erb_capacity: int,
+                    share_size: int, train_steps: int,
+                    collect_episodes: int = 24,
+                    share_strategy: str = "uniform") -> Tuple[ERB, float]:
+        """Collect on the round's task, then train on
+        current + personal + incoming replay. Returns (shared ERB, loss)."""
+        current = erb_init(erb_capacity, self.cfg.box_size, task=task,
+                           source_agent=self.agent_id,
+                           round_idx=self.rounds_done)
+        self.collect(env, current, collect_episodes)
+        for e in incoming:
+            self.seen_erb_ids.add(e.meta.erb_id)
+        loss = self.train_steps(train_steps, current, incoming)
+        self.personal_erbs.append(current)
+        self.rounds_done += 1
+        shared = erb_share_slice(current, share_size, self.rng,
+                                 strategy=share_strategy)
+        shared.meta = shared.meta  # provenance kept
+        self.seen_erb_ids.add(shared.meta.erb_id)
+        return shared, loss
+
+    # -- evaluation ------------------------------------------------------------
+    def evaluate(self, env: LandmarkEnv, n_episodes: int = 8,
+                 max_steps: Optional[int] = None) -> float:
+        """Greedy rollout from deterministic starts; mean final distance."""
+        rng = np.random.default_rng(1234)
+        locs = env.start_locs(n_episodes, rng)
+        for _ in range(max_steps or self.cfg.max_episode_steps):
+            q = np.asarray(self.q_values(self.params, env.observe(locs),
+                                         env.norm_loc(locs)))
+            locs, _, done = env.step(locs, q.argmax(-1).astype(np.int32))
+            if done.all():
+                break
+        return float(env.dist(locs).mean())

@@ -1,0 +1,13 @@
+import os
+
+# Smoke tests and benches must see ONE device — the 512-device override
+# lives exclusively in repro.launch.dryrun (its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,197 @@
+"""ADFLL core invariants: ERBs, selective replay, hubs, network, scheduler.
+Property-based tests (hypothesis) cover the system's safety claims."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.erb import (ERB, TaskTag, erb_add, erb_init, erb_sample,
+                            erb_share_slice)
+from repro.core.hub import Hub, sync_hubs
+from repro.core.network import Network
+from repro.core.replay import SelectiveReplaySampler
+from repro.core.scheduler import Scheduler
+
+TASK = TaskTag("t1", "axial", "HGG")
+OBS = (4, 4, 4)
+
+
+def _erb(n, cap=32, seed=0):
+    rng = np.random.default_rng(seed)
+    erb = erb_init(cap, OBS, task=TASK)
+    batch = {
+        "obs": rng.standard_normal((n, *OBS)).astype(np.float32),
+        "loc": rng.standard_normal((n, 3)).astype(np.float32),
+        "action": rng.integers(0, 6, n).astype(np.int32),
+        "reward": rng.standard_normal(n).astype(np.float32),
+        "next_obs": rng.standard_normal((n, *OBS)).astype(np.float32),
+        "next_loc": rng.standard_normal((n, 3)).astype(np.float32),
+        "done": np.zeros(n, np.float32),
+    }
+    return erb_add(erb, batch)
+
+
+# ---------------------------------------------------------------------------
+# ERB properties
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(adds=st.lists(st.integers(1, 40), min_size=1, max_size=6),
+       cap=st.integers(4, 64))
+def test_erb_ring_never_exceeds_capacity(adds, cap):
+    erb = erb_init(cap, OBS, task=TASK)
+    rng = np.random.default_rng(0)
+    total = 0
+    for n in adds:
+        batch = {k: v[:n] for k, v in _erb(n, cap=max(adds)).data.items()}
+        erb = erb_add(erb, batch)
+        total += n
+        assert erb.size == min(cap, total)
+        assert erb.meta.size == erb.size
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 30), want=st.integers(1, 64))
+def test_erb_sample_count_and_membership(n, want):
+    erb = _erb(n)
+    rng = np.random.default_rng(1)
+    batch = erb_sample(erb, rng, want)
+    assert batch["action"].shape[0] == want
+    assert set(batch["action"].tolist()) <= set(
+        erb.data["action"][:erb.size].tolist())
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 30), share=st.integers(1, 50))
+def test_erb_share_slice_bounds(n, share):
+    erb = _erb(n)
+    shared = erb_share_slice(erb, share, np.random.default_rng(2))
+    assert shared.size == min(n, share)
+    assert shared.meta.erb_id != erb.meta.erb_id
+    assert shared.meta.task == erb.meta.task
+
+
+# ---------------------------------------------------------------------------
+# selective replay
+# ---------------------------------------------------------------------------
+def test_replay_mix_uses_all_pools():
+    cur, per, inc = _erb(20, seed=1), _erb(20, seed=2), _erb(20, seed=3)
+    s = SelectiveReplaySampler(mix=(0.5, 0.25, 0.25))
+    batch = s.sample(np.random.default_rng(0), 32, cur, [per], [inc])
+    assert batch["action"].shape[0] == 32
+
+
+def test_replay_renormalizes_on_empty_pools():
+    cur = _erb(20)
+    s = SelectiveReplaySampler(mix=(0.5, 0.25, 0.25))
+    batch = s.sample(np.random.default_rng(0), 16, cur, [], [])
+    assert batch["action"].shape[0] == 16
+    with pytest.raises(ValueError):
+        s.sample(np.random.default_rng(0), 16, None, [], [])
+
+
+# ---------------------------------------------------------------------------
+# hubs + network (the paper's robustness claims)
+# ---------------------------------------------------------------------------
+def test_hub_sync_converges_without_dropout():
+    hubs = [Hub(i) for i in range(3)]
+    for i, h in enumerate(hubs):
+        h.push(erb_share_slice(_erb(10, seed=i), 5,
+                               np.random.default_rng(i)))
+    sync_hubs(hubs, np.random.default_rng(0), dropout=0.0)
+    ids = [set(h.database) for h in hubs]
+    assert ids[0] == ids[1] == ids[2] and len(ids[0]) == 3
+
+
+@settings(max_examples=10, deadline=None)
+@given(dropout=st.floats(0.0, 0.95))
+def test_hub_sync_monotone_under_dropout(dropout):
+    """Dropout delays but never corrupts: databases only grow, and repeated
+    syncs eventually converge."""
+    rng = np.random.default_rng(3)
+    hubs = [Hub(i) for i in range(3)]
+    for i, h in enumerate(hubs):
+        h.push(erb_share_slice(_erb(10, seed=10 + i), 5, rng))
+    sizes = [len(h.database) for h in hubs]
+    for _ in range(200):
+        sync_hubs(hubs, rng, dropout=dropout)
+        new = [len(h.database) for h in hubs]
+        assert all(b >= a for a, b in zip(sizes, new))
+        sizes = new
+        if all(s == 3 for s in sizes):
+            break
+    assert all(s == 3 for s in sizes)        # converged despite dropout
+
+
+def test_knowledge_survives_agent_deletion():
+    """Deletion ablation invariant: ERBs pushed before an agent leaves
+    remain available to the system."""
+    net = Network(hubs=[Hub(0), Hub(1)], dropout=0.0)
+    net.attach_agent(0, 0)
+    net.attach_agent(1, 1)
+    e = erb_share_slice(_erb(10), 5, np.random.default_rng(0))
+    assert net.agent_push(0, e)
+    net.detach_agent(0)                       # agent leaves
+    net.sync()
+    assert e.meta.erb_id in net.hubs[1].database
+    assert net.agent_pull(1, set()) != []
+
+
+def test_hub_failure_loses_only_unique_erbs():
+    net = Network(hubs=[Hub(0), Hub(1)], dropout=0.0)
+    net.attach_agent(0, 0)
+    e1 = erb_share_slice(_erb(10, seed=1), 5, np.random.default_rng(1))
+    net.agent_push(0, e1)
+    net.sync()                                # replicated on hub 1
+    e2 = erb_share_slice(_erb(10, seed=2), 5, np.random.default_rng(2))
+    net.agent_push(0, e2)                     # only on hub 0
+    net.fail_hub(0)
+    known = net.all_known_erbs()
+    assert e1.meta.erb_id in known            # survived (replicated)
+    assert e2.meta.erb_id not in known        # lost (unique to failed hub)
+    # orphaned agent re-homed
+    assert net.agent_hub[0] == 1
+
+
+def test_network_linear_communication():
+    """Each agent talks to exactly one hub — communication linear in n."""
+    net = Network(hubs=[Hub(0), Hub(1), Hub(2)])
+    for a in range(12):
+        net.attach_agent(a)
+    loads = {}
+    for a, h in net.agent_hub.items():
+        loads[h] = loads.get(h, 0) + 1
+    assert set(net.agent_hub) == set(range(12))
+    assert max(loads.values()) - min(loads.values()) <= 1  # balanced
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+def test_scheduler_orders_events():
+    s = Scheduler()
+    seen = []
+    s.at(2.0, lambda sc, t: seen.append(("b", t)))
+    s.at(1.0, lambda sc, t: seen.append(("a", t)))
+    s.after(0.5, lambda sc, t: seen.append(("c", t)))
+    s.run()
+    assert [x[0] for x in seen] == ["c", "a", "b"]
+    assert s.now == 2.0
+
+
+def test_scheduler_every_and_stop():
+    s = Scheduler()
+    ticks = []
+    s.every(1.0, lambda sc, t: ticks.append(t), until=5.0)
+    s.run()
+    assert ticks == [1.0, 2.0, 3.0, 4.0, 5.0]
+
+
+def test_scheduler_deterministic():
+    def run_once():
+        s = Scheduler()
+        order = []
+        for i in range(10):
+            s.at(1.0, lambda sc, t, i=i: order.append(i))
+        s.run()
+        return order
+    assert run_once() == run_once() == list(range(10))

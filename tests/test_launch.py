@@ -1,0 +1,100 @@
+"""Launch/analysis layer: flop counter, collective parser, configs, specs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (ASSIGNED, INPUT_SHAPES, get_config,
+                                list_configs, param_count)
+from repro.launch.analysis import (_shape_bytes, count_flops,
+                                   parse_collectives)
+
+
+def test_registry_has_all_assigned_archs():
+    names = list_configs()
+    for a in ASSIGNED:
+        assert a in names
+    assert len(ASSIGNED) == 10
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+
+
+@pytest.mark.parametrize("arch,lo,hi", [
+    ("h2o-danube-3-4b", 3.0e9, 5.5e9),
+    ("qwen2.5-14b", 12e9, 17e9),
+    ("starcoder2-15b", 13e9, 18e9),
+    ("deepseek-v2-lite-16b", 13e9, 19e9),
+    ("qwen3-moe-235b-a22b", 2.0e11, 2.7e11),
+    ("jamba-1.5-large-398b", 3.3e11, 4.6e11),
+    ("xlstm-125m", 0.9e8, 2.2e8),
+])
+def test_param_counts_match_published_sizes(arch, lo, hi):
+    total, active = param_count(get_config(arch))
+    assert lo <= total <= hi, (arch, total)
+    assert active <= total
+
+
+def test_active_params_for_moe():
+    total, active = param_count(get_config("qwen3-moe-235b-a22b"))
+    # A22B: ~20-26B active of ~235B total
+    assert 1.5e10 <= active <= 3.0e10
+
+
+def test_flop_counter_exact_on_scan():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=8)
+        return jnp.sum(y)
+    x = jnp.zeros((64, 64))
+    w = jnp.zeros((64, 64))
+    fl = count_flops(f, x, w)
+    expect = 8 * 2 * 64 ** 3
+    assert abs(fl - expect) / expect < 0.01
+
+
+def test_flop_counter_counts_grad():
+    def f(x, w):
+        return jnp.sum(jnp.tanh(x @ w))
+    g = lambda x, w: jax.grad(f, argnums=1)(x, w)
+    x = jnp.zeros((32, 32))
+    w = jnp.zeros((32, 32))
+    fwd = count_flops(f, x, w)
+    both = count_flops(g, x, w)
+    # grad-only jaxpr (argnums=1) keeps fwd + the dw matmul; elementwise
+    # tanh flops inflate fwd slightly, so assert >1.8x
+    assert both >= 1.8 * fwd
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,128]") == 16 * 128 * 4
+    assert _shape_bytes("bf16[8]") == 16
+    assert _shape_bytes("(f32[4,4], s32[2])") == 64 + 8
+
+
+def test_collective_parser_on_synthetic_hlo():
+    hlo = """
+HloModule test
+
+%cond (p: s32[]) -> pred[] {
+  %p = s32[] parameter(0)
+  %c = s32[] constant(24)
+  ROOT %lt = pred[] compare(%p, %c), direction=LT
+}
+
+%body (p: s32[]) -> s32[] {
+  %p = s32[] parameter(0)
+  %ag = f32[16,128]{1,0} all-gather(%x), dimensions={0}
+  ROOT %n = s32[] add(%p, %one)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%b), to_apply=%sum
+  %w = s32[] while(%init), condition=%cond, body=%body
+  ROOT %r = f32[4]{0} copy(%a)
+}
+"""
+    res = parse_collectives(hlo)
+    assert res["all-reduce"] == 4096
+    assert res["all-gather"] == 24 * 16 * 128 * 4  # trip-multiplied

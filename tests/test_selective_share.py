@@ -1,0 +1,51 @@
+"""Beyond-paper: reward-weighted selective sharing (Rolnick-style)."""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.erb import TaskTag, erb_add, erb_init, erb_share_slice
+
+TASK = TaskTag("t1", "axial", "HGG")
+OBS = (4, 4, 4)
+
+
+def _erb_with_rewards(rewards):
+    n = len(rewards)
+    erb = erb_init(max(n, 4), OBS, task=TASK)
+    batch = {
+        "obs": np.zeros((n, *OBS), np.float32),
+        "loc": np.zeros((n, 3), np.float32),
+        "action": np.arange(n, dtype=np.int32),
+        "reward": np.asarray(rewards, np.float32),
+        "next_obs": np.zeros((n, *OBS), np.float32),
+        "next_loc": np.zeros((n, 3), np.float32),
+        "done": np.zeros(n, np.float32),
+    }
+    return erb_add(erb, batch)
+
+
+def test_reward_strategy_prefers_high_surprise():
+    # 50 boring (0 reward) + 10 surprising experiences
+    rewards = [0.0] * 50 + [5.0] * 10
+    erb = _erb_with_rewards(rewards)
+    hits = 0
+    trials = 50
+    for s in range(trials):
+        shared = erb_share_slice(erb, 5, np.random.default_rng(s),
+                                 strategy="reward")
+        hits += int((np.abs(shared.data["reward"]) > 1).sum())
+    # uniform would pick ~10/60 * 5 = 0.83 surprising per share;
+    # reward-weighted should pick far more
+    assert hits / trials > 2.5
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 40), share=st.integers(1, 20),
+       strategy=st.sampled_from(["uniform", "reward"]))
+def test_share_strategies_preserve_invariants(n, share, strategy):
+    rng = np.random.default_rng(0)
+    erb = _erb_with_rewards(rng.standard_normal(n).tolist())
+    shared = erb_share_slice(erb, share, rng, strategy=strategy)
+    assert shared.size == min(n, share)
+    # no duplicate experiences in a share (sampling without replacement)
+    assert len(set(shared.data["action"].tolist())) == shared.size
