@@ -10,8 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
-from repro.core.erb import erb_init
+from repro.configs.adfll_dqn import DQNConfig
 from repro.core.federated import env_for, evaluate_on_tasks
 from repro.core.hub import Hub
 from repro.core.network import Network

@@ -9,6 +9,7 @@ Paper mapping:
   deployment        -> Table 1 + Fig 3 (4 agents / 3 hubs, async, baselines)
   ablation_addition -> Fig 4 (4->16 agents, 75% dropout)
   ablation_deletion -> Fig 5 (24->1 agents, 75% dropout)
+  plane_ablation    -> beyond-paper: ERB vs weight vs hybrid sharing planes
   kernels           -> framework kernel microbenches (Pallas vs oracle)
   roofline          -> EXPERIMENTS.md §Roofline source table (reads the
                        dry-run JSONs; run repro.launch.dryrun --all first)
@@ -16,7 +17,6 @@ Paper mapping:
 from __future__ import annotations
 
 import argparse
-import sys
 import time
 
 
@@ -28,7 +28,8 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (ablation_addition, ablation_deletion,
-                            deployment, forgetting, kernels, roofline)
+                            deployment, forgetting, kernels, plane_ablation,
+                            roofline)
 
     benches = [
         ("deployment_table1", lambda: deployment.run(fast=args.fast)),
@@ -36,6 +37,7 @@ def main(argv=None) -> None:
          lambda: ablation_addition.run(fast=args.fast)),
         ("ablation_deletion_fig5",
          lambda: ablation_deletion.run(fast=args.fast)),
+        ("plane_ablation", lambda: plane_ablation.run(fast=args.fast)),
         ("forgetting_ablation", lambda: forgetting.run(fast=args.fast)),
         ("kernels_micro", kernels.run),
         ("roofline_table", roofline.run),

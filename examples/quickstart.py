@@ -12,7 +12,7 @@ import numpy as np
 
 from repro.configs.adfll_dqn import DQNConfig
 from repro.configs.base import get_config
-from repro.core.erb import TaskTag, erb_init
+from repro.core.erb import TaskTag
 from repro.core.hub import Hub
 from repro.core.network import Network
 from repro.models.model import build_model, init_caches
@@ -60,6 +60,19 @@ _, loss = a1.train_round(LandmarkEnv(vol, lm, dqn), task_b, incoming,
                          erb_capacity=512, share_size=64, train_steps=20)
 print(f"[adfll] agent1 trained on its task + {len(incoming)} foreign "
       f"ERB(s) from the hub, loss={loss:.4f}")
+
+# -------------------------------------------------- 2b. weight plane
+# Beyond the paper: the same hub can also carry FedAsync-style parameter
+# snapshots, mixed with staleness-discounted rates alpha * s(dtau).
+from repro.core.plane import WeightPlane, staleness_alphas
+
+net.register_plane(WeightPlane(max_versions=2))
+net.agent_push(0, a0.snapshot_params(sim_time=1.0), plane="weights")
+snaps = net.agent_pull(1, a1.seen_snap_ids, plane="weights")
+alphas = staleness_alphas(snaps, a1.rounds_done, alpha=0.5, flag="poly")
+n = a1.mix_params(snaps, alphas)
+print(f"[adfll] agent1 mixed {n} peer weight snapshot(s), "
+      f"alpha={[round(float(a), 3) for a in alphas]}")
 
 # ------------------------------------------------------------ 3. kernels
 from repro.kernels.flash_attention.ops import flash_attention

@@ -7,7 +7,7 @@ crops; we default to 24^3 synthetic volumes).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 
@@ -48,6 +48,18 @@ class ADFLLConfig:
     # fractions: (current task, personal past, incoming foreign)
     train_steps_per_round: int = 150
     seed: int = 0
+    # -- sharing planes (beyond-paper: FedAsync-style weight plane) --------
+    # which planes ride the hub topology: ("erb",), ("weights",), or both
+    share_planes: Tuple[str, ...] = ("erb",)
+    mix_alpha: float = 0.6                # base mixing rate for peer weights
+    staleness_flag: str = "poly"          # constant | hinge | poly
+    # "time" measures staleness on the shared scheduler clock (robust to
+    # heterogeneous agent speeds); "round" is FedAsync-literal counters
+    staleness_clock: str = "time"
+    staleness_hinge_a: float = 10.0
+    staleness_hinge_b: float = 4.0
+    staleness_poly_a: float = 0.5
+    weight_max_versions: int = 2          # snapshots kept per agent per hub
 
 
 DQN_CONFIG = DQNConfig()

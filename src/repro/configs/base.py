@@ -8,9 +8,8 @@ exercises the identical code path as the full dry-run.
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass, field, replace
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Block kinds

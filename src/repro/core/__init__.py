@@ -6,5 +6,8 @@ from repro.core.federated import (ADFLLSystem,  # noqa: F401
 from repro.core.hub import Hub, sync_hubs  # noqa: F401
 from repro.core.lifelong import LifelongTrainer  # noqa: F401
 from repro.core.network import Network  # noqa: F401
+from repro.core.plane import (ERBPlane, SharePlane,  # noqa: F401
+                              WeightPlane, WeightSnapshot, mix_params,
+                              staleness_alphas, staleness_weight)
 from repro.core.replay import SelectiveReplaySampler  # noqa: F401
 from repro.core.scheduler import Scheduler  # noqa: F401

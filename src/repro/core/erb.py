@@ -12,10 +12,9 @@ model-free.
 from __future__ import annotations
 
 import itertools
-from dataclasses import dataclass, field, replace
-from typing import Any, Dict, Optional, Tuple
+from dataclasses import dataclass, replace
+from typing import Any, Dict, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

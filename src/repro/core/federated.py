@@ -11,16 +11,17 @@
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
-from repro.core.erb import ERB, TaskTag, erb_init
+from repro.core.erb import TaskTag, erb_init
 from repro.core.hub import Hub
 from repro.core.network import Network
+from repro.core.plane import WeightPlane, staleness_alphas
 from repro.core.scheduler import Scheduler
 from repro.rl.agent import DQNAgent
 from repro.rl.env import LandmarkEnv
@@ -53,6 +54,7 @@ class RoundRecord:
     end: float
     n_incoming: int
     loss: float
+    n_mixed: int = 0      # peer weight snapshots folded in (weight plane)
 
 
 class ADFLLSystem:
@@ -70,6 +72,11 @@ class ADFLLSystem:
             hubs=[Hub(h) for h in range(sys_cfg.n_hubs)],
             dropout=sys_cfg.dropout,
             rng=np.random.default_rng(seed + 1))
+        self.use_erb = "erb" in sys_cfg.share_planes
+        self.use_weights = "weights" in sys_cfg.share_planes
+        if self.use_weights:
+            self.network.register_plane(
+                WeightPlane(max_versions=sys_cfg.weight_max_versions))
         self.agents: Dict[int, DQNAgent] = {}
         self.sched = Scheduler()
         self.history: List[RoundRecord] = []
@@ -125,7 +132,9 @@ class ADFLLSystem:
         task = self._next_task()
         patient = int(self.rng.choice(self.train_patients))
         env = env_for(task, patient, self.dqn_cfg)
-        incoming = self.network.agent_pull(agent_id, agent.seen_erb_ids)
+        incoming = (self.network.agent_pull(agent_id, agent.seen_erb_ids)
+                    if self.use_erb else [])
+        n_mixed = self._mix_peer_weights(agent_id) if self.use_weights else 0
         start = self.sched.now
         shared, loss = agent.train_round(
             env, task, incoming,
@@ -136,15 +145,39 @@ class ADFLLSystem:
         end = start + dur
         self.history.append(RoundRecord(
             agent_id, agent.rounds_done - 1, task.name, start, end,
-            len(incoming), loss))
+            len(incoming), loss, n_mixed))
 
         def finish(s: Scheduler, t: float, aid=agent_id, erb=shared):
             self._outstanding -= 1
-            self.network.agent_push(aid, erb)
+            if self.use_erb:
+                self.network.agent_push(aid, erb)
+            if self.use_weights:
+                a = self.agents.get(aid)
+                if a is not None and getattr(a, "active", True):
+                    self.network.agent_push(aid, a.snapshot_params(t),
+                                            plane="weights")
             self._maybe_continue(aid)
 
         self._outstanding += 1
         self.sched.at(end, finish, tag=f"A{agent_id}_round_done")
+
+    def _mix_peer_weights(self, agent_id: int) -> int:
+        """Pull unseen peer snapshots from the hub and fold them into the
+        agent's params, staleness-discounted (FedAsync alpha*s(dtau))."""
+        agent = self.agents[agent_id]
+        snaps = self.network.agent_pull(agent_id, agent.seen_snap_ids,
+                                        plane="weights")
+        if not snaps:
+            return 0
+        cfg = self.sys_cfg
+        now = (self.sched.now if cfg.staleness_clock == "time"
+               else agent.rounds_done)
+        alphas = staleness_alphas(
+            snaps, now, alpha=cfg.mix_alpha,
+            flag=cfg.staleness_flag, hinge_a=cfg.staleness_hinge_a,
+            hinge_b=cfg.staleness_hinge_b, poly_a=cfg.staleness_poly_a,
+            clock=cfg.staleness_clock)
+        return agent.mix_params(snaps, alphas)
 
     def _maybe_continue(self, agent_id: int):
         """Paper policy: start a new round whenever unseen ERBs exist (or a

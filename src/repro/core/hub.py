@@ -1,40 +1,56 @@
-"""Hub nodes: the homogeneous distributed experience database (Fig. 6/7).
+"""Hub nodes: the homogeneous distributed shared database (Fig. 6/7).
 
 Every agent talks only to its hub (bidirectional push/pull); hubs sync
-their databases with each other periodically. A hub's database maps
-erb_id -> ERB, and the Fig. 7 snapshot table is derivable from metadata.
+their databases with each other periodically.  A hub now carries one
+store per :class:`~repro.core.plane.SharePlane` — the paper's ERB plane
+plus any extra planes (e.g. the FedAsync-style weight plane).  Each
+store maps record_id -> record; the Fig. 7 snapshot table is derivable
+from ERB metadata as before, and ``Hub.database`` remains the ERB store
+for backward compatibility.
 
-Hub failure loses only ERBs no other hub holds; agent failure loses only
-that agent's untrained round — the paper's robustness claims, which the
-property tests assert.
+Hub failure loses only records no other hub holds; agent failure loses
+only that agent's untrained round — the paper's robustness claims, which
+the property tests assert (now for every plane uniformly).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set
+from typing import Any, Dict, List, Sequence, Set
 
 import numpy as np
 
-from repro.core.erb import ERB
+from repro.core.plane import ERBPlane, SharePlane
+
+_DEFAULT_PLANE = ERBPlane()
 
 
 @dataclass
 class Hub:
     hub_id: int
-    database: Dict[str, ERB] = field(default_factory=dict)
+    stores: Dict[str, Dict[str, Any]] = field(default_factory=dict)
     alive: bool = True
 
-    def push(self, erb: ERB) -> None:
-        """Agent -> hub (or hub -> hub) transfer of one ERB."""
-        if self.alive:
-            self.database.setdefault(erb.meta.erb_id, erb)
+    def store(self, plane: str = "erb") -> Dict[str, Any]:
+        """The record_id -> record map for one plane (created on demand)."""
+        return self.stores.setdefault(plane, {})
 
-    def pull_unseen(self, seen: Set[str]) -> List[ERB]:
-        """Hub -> agent: every ERB the agent has not yet learned from."""
+    @property
+    def database(self) -> Dict[str, Any]:
+        """The ERB-plane store (the paper's 'distributed database')."""
+        return self.store("erb")
+
+    def push(self, item: Any, plane: SharePlane = _DEFAULT_PLANE) -> bool:
+        """Agent -> hub (or hub -> hub) transfer of one record."""
+        if not self.alive:
+            return False
+        return plane.admit(self.store(plane.name), item)
+
+    def pull_unseen(self, seen: Set[str], plane: str = "erb") -> List[Any]:
+        """Hub -> agent: every record the agent has not yet consumed."""
         if not self.alive:
             return []
-        return [e for eid, e in sorted(self.database.items())
-                if eid not in seen]
+        return [v for k, v in sorted(self.store(plane).items())
+                if k not in seen]
 
     def snapshot(self) -> List[dict]:
         """Fig. 7 table: one row per ERB in the shared database."""
@@ -49,25 +65,30 @@ class Hub:
 
     def fail(self) -> None:
         self.alive = False
-        self.database.clear()
+        self.stores.clear()
 
 
 def sync_hubs(hubs: Sequence[Hub], rng: np.random.Generator,
-              dropout: float = 0.0) -> int:
-    """Periodic pairwise database sync. Each (record, dest-hub) transfer
-    independently drops with probability ``dropout`` (the 75% ablation).
-    Returns the number of records transferred."""
+              dropout: float = 0.0,
+              planes: Sequence[SharePlane] = (_DEFAULT_PLANE,)) -> int:
+    """Periodic pairwise database sync over every registered plane.
+
+    Each (record, dest-hub) transfer independently drops with probability
+    ``dropout`` (the 75% ablation). Returns the number of records
+    transferred."""
     live = [h for h in hubs if h.alive]
     transferred = 0
-    for src in live:
-        for dst in live:
-            if src is dst:
-                continue
-            for eid, erb in list(src.database.items()):
-                if eid in dst.database:
+    for plane in planes:
+        for src in live:
+            for dst in live:
+                if src is dst:
                     continue
-                if dropout > 0.0 and rng.random() < dropout:
-                    continue
-                dst.push(erb)
-                transferred += 1
+                dst_store = dst.store(plane.name)
+                for rid, rec in sorted(src.store(plane.name).items()):
+                    if rid in dst_store:
+                        continue
+                    if dropout > 0.0 and rng.random() < dropout:
+                        continue
+                    if plane.admit(dst_store, rec):
+                        transferred += 1
     return transferred

@@ -2,16 +2,21 @@
 
 Communication complexity is linear in agents (each talks to one hub);
 hub-hub sync is the only n^2 term and n_hubs << n_agents.
+
+The network is plane-agnostic: it carries a registry of
+:class:`~repro.core.plane.SharePlane` objects (the ERB plane by
+default), and every push/pull names the plane it rides on.  Dropout,
+hub liveness, and hub-hub sync apply to all planes uniformly.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set
+from typing import Any, Dict, List, Optional, Set
 
 import numpy as np
 
-from repro.core.erb import ERB
 from repro.core.hub import Hub, sync_hubs
+from repro.core.plane import ERBPlane, SharePlane
 
 
 @dataclass
@@ -21,12 +26,19 @@ class Network:
     dropout: float = 0.0
     rng: np.random.Generator = field(
         default_factory=lambda: np.random.default_rng(0))
-    # statistics
+    planes: Dict[str, SharePlane] = field(
+        default_factory=lambda: {"erb": ERBPlane()})
+    # statistics (aggregate and per plane)
     n_pushed: int = 0
     n_dropped: int = 0
     n_synced: int = 0
+    plane_pushed: Dict[str, int] = field(default_factory=dict)
 
     # -- wiring ------------------------------------------------------------
+    def register_plane(self, plane: SharePlane) -> SharePlane:
+        self.planes[plane.name] = plane
+        return plane
+
     def attach_agent(self, agent_id: int, hub_id: Optional[int] = None):
         """New agents attach to the least-loaded live hub by default."""
         if hub_id is None:
@@ -43,9 +55,10 @@ class Network:
     def hub_of(self, agent_id: int) -> Hub:
         return self.hubs[self.agent_hub[agent_id]]
 
-    # -- data plane ----------------------------------------------------------
-    def agent_push(self, agent_id: int, erb: ERB) -> bool:
-        """Agent uploads its round ERB to its hub (may drop)."""
+    # -- data planes ---------------------------------------------------------
+    def agent_push(self, agent_id: int, item: Any,
+                   plane: str = "erb") -> bool:
+        """Agent uploads one record to its hub on ``plane`` (may drop)."""
         if self.dropout > 0.0 and self.rng.random() < self.dropout:
             self.n_dropped += 1
             return False
@@ -53,19 +66,23 @@ class Network:
         if not hub.alive:
             self.n_dropped += 1
             return False
-        hub.push(erb)
+        if not hub.push(item, self.planes[plane]):
+            return False          # refused by the plane (duplicate/stale)
         self.n_pushed += 1
+        self.plane_pushed[plane] = self.plane_pushed.get(plane, 0) + 1
         return True
 
-    def agent_pull(self, agent_id: int, seen: Set[str]) -> List[ERB]:
+    def agent_pull(self, agent_id: int, seen: Set[str],
+                   plane: str = "erb") -> List[Any]:
         hub = self.hub_of(agent_id)
-        pulled = hub.pull_unseen(seen)
+        pulled = hub.pull_unseen(seen, plane)
         if self.dropout > 0.0:
             pulled = [e for e in pulled if self.rng.random() >= self.dropout]
         return pulled
 
     def sync(self) -> int:
-        n = sync_hubs(self.hubs, self.rng, self.dropout)
+        n = sync_hubs(self.hubs, self.rng, self.dropout,
+                      planes=[self.planes[k] for k in sorted(self.planes)])
         self.n_synced += n
         return n
 
@@ -79,8 +96,11 @@ class Network:
                 if any(h.alive for h in self.hubs):
                     self.attach_agent(a)
 
-    def all_known_erbs(self) -> Set[str]:
+    def all_known(self, plane: str = "erb") -> Set[str]:
         ids: Set[str] = set()
         for h in self.hubs:
-            ids |= set(h.database)
+            ids |= set(h.store(plane))
         return ids
+
+    def all_known_erbs(self) -> Set[str]:
+        return self.all_known("erb")

@@ -1,0 +1,209 @@
+"""Pluggable sharing planes — the generic data planes federated via hubs.
+
+The paper federates exactly one artifact: experience replay buffers
+(:class:`~repro.core.erb.ERB`).  This module generalizes that into a
+``SharePlane`` protocol so the hub topology can carry *any* record type,
+and adds a second concrete plane:
+
+* :class:`ERBPlane` — the paper's plane. Records are ERBs, identity is
+  ``meta.erb_id``, hubs keep everything (experience never goes stale).
+* :class:`WeightPlane` — a parameter-level plane in the spirit of
+  FedAsync (Xie et al., 1903.03934) and BrainTorrent's peer-to-peer FL:
+  agents push :class:`WeightSnapshot` records (params + round/timestamp
+  provenance) and pull peer snapshots, which they fold into their own
+  parameters with a staleness-discounted mixing rate
+  ``alpha_t = alpha * s(delta_tau)``.
+
+Both planes ride the same :class:`~repro.core.network.Network` /
+:class:`~repro.core.hub.Hub` machinery and the same event-driven
+scheduler, so asynchrony, communication dropout, hub failure, and
+heterogeneous agent speeds apply to them uniformly.
+
+Staleness functions follow FedAsync's three families (``constant`` /
+``hinge`` / ``poly``), clamped to (0, 1] so mixing is always a convex
+combination.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Sequence
+
+import jax
+import numpy as np
+
+from repro.core.erb import ERB
+
+_SNAP_COUNTER = itertools.count()
+
+
+def new_snap_id(prefix: str = "W") -> str:
+    return f"{prefix}_{next(_SNAP_COUNTER):05d}"
+
+
+@dataclass(frozen=True)
+class WeightSnapshot:
+    """One pushed parameter state: the unit of the weight plane.
+
+    ``round_idx`` is the sender's local round counter when the snapshot
+    was taken (the FedAsync ``tau``); ``sim_time`` is scheduler time at
+    the push, kept for analysis/debugging.  ``params`` is a JAX pytree
+    (immutable arrays — safe to share by reference).
+    """
+    snap_id: str
+    agent_id: int
+    round_idx: int
+    sim_time: float
+    params: Any
+
+    @property
+    def record_id(self) -> str:
+        return self.snap_id
+
+
+# ---------------------------------------------------------------------------
+# plane protocol
+# ---------------------------------------------------------------------------
+class SharePlane:
+    """One federated data plane: record identity + hub-side retention.
+
+    A plane never talks to the network itself; :class:`Network` and
+    ``sync_hubs`` consult it when inserting records into a hub's
+    per-plane store (``Dict[record_id, record]``).
+    """
+
+    name: str = "base"
+
+    def key(self, item: Any) -> str:
+        raise NotImplementedError
+
+    def admit(self, store: Dict[str, Any], item: Any) -> bool:
+        """Insert ``item`` into a hub store. Returns True iff newly kept."""
+        k = self.key(item)
+        if k in store:
+            return False
+        store[k] = item
+        self.evict(store)
+        return k in store
+
+    def evict(self, store: Dict[str, Any]) -> None:
+        """Hub-side retention policy; default keeps everything."""
+
+
+class ERBPlane(SharePlane):
+    """The paper's plane: experience replay buffers, kept forever."""
+
+    name = "erb"
+
+    def key(self, item: ERB) -> str:
+        return item.meta.erb_id
+
+
+class WeightPlane(SharePlane):
+    """Parameter snapshots, deduplicated per source agent.
+
+    Hubs keep at most ``max_versions`` snapshots per agent (newest
+    ``round_idx`` wins) and refuse re-insertion of snapshots no newer
+    than what they already hold from that agent — so hub-hub sync never
+    resurrects an evicted stale version.
+    """
+
+    name = "weights"
+
+    def __init__(self, max_versions: int = 2):
+        assert max_versions >= 1
+        self.max_versions = max_versions
+
+    def key(self, item: WeightSnapshot) -> str:
+        return item.snap_id
+
+    def admit(self, store: Dict[str, Any], item: WeightSnapshot) -> bool:
+        if item.snap_id in store:
+            return False
+        newest = max((s.round_idx for s in store.values()
+                      if s.agent_id == item.agent_id), default=None)
+        if newest is not None and item.round_idx <= newest:
+            return False
+        store[item.snap_id] = item
+        self.evict(store)
+        return item.snap_id in store
+
+    def evict(self, store: Dict[str, Any]) -> None:
+        by_agent: Dict[int, List[WeightSnapshot]] = {}
+        for s in store.values():
+            by_agent.setdefault(s.agent_id, []).append(s)
+        for snaps in by_agent.values():
+            snaps.sort(key=lambda s: (s.round_idx, s.snap_id), reverse=True)
+            for stale in snaps[self.max_versions:]:
+                del store[stale.snap_id]
+
+
+# ---------------------------------------------------------------------------
+# staleness weighting (FedAsync s(delta_tau) families)
+# ---------------------------------------------------------------------------
+def staleness_weight(delta_tau: float, flag: str = "poly", *,
+                     hinge_a: float = 10.0, hinge_b: float = 4.0,
+                     poly_a: float = 0.5) -> float:
+    """FedAsync staleness discount ``s(delta_tau)``, clamped to (0, 1].
+
+    ``constant``: 1 — staleness ignored (plain async averaging).
+    ``hinge``:    1 until ``hinge_b`` rounds of lag, then 1/(a*(d-b)).
+    ``poly``:     (d+1)^-a — smooth polynomial decay.
+    """
+    d = max(0.0, float(delta_tau))
+    if flag == "constant":
+        return 1.0
+    if flag == "hinge":
+        if d <= hinge_b:
+            return 1.0
+        return min(1.0, 1.0 / (hinge_a * (d - hinge_b)))
+    if flag == "poly":
+        return float((d + 1.0) ** (-poly_a))
+    raise ValueError(f"unknown staleness flag: {flag!r}")
+
+
+def staleness_alphas(snaps: Sequence[WeightSnapshot], now: float,
+                     *, alpha: float = 0.6, flag: str = "poly",
+                     hinge_a: float = 10.0, hinge_b: float = 4.0,
+                     poly_a: float = 0.5,
+                     clock: str = "round") -> np.ndarray:
+    """Per-snapshot mixing rates ``alpha * s(now - tau_k)``.
+
+    ``clock`` picks the timescale ``tau`` lives on:
+
+    * ``"round"`` — FedAsync-literal: ``tau_k`` is the sender's local
+      round counter and ``now`` the receiver's. Only meaningful when
+      agents advance rounds at comparable rates.
+    * ``"time"``  — ``tau_k`` is the snapshot's push time on the shared
+      scheduler clock and ``now`` the receiver's current time; the
+      right choice under heterogeneous agent speeds, where local round
+      counters are incomparable (a speed-2.5x agent's round 10 is not
+      older than a slow peer's round 4).
+    """
+    taus = [s.round_idx if clock == "round" else s.sim_time
+            for s in snaps]
+    out = [alpha * staleness_weight(now - tau, flag,
+                                    hinge_a=hinge_a, hinge_b=hinge_b,
+                                    poly_a=poly_a)
+           for tau in taus]
+    return np.asarray(out, np.float64)
+
+
+def mix_params(params: Any, snaps: Sequence[WeightSnapshot],
+               alphas: Sequence[float]) -> Any:
+    """Sequential FedAsync mixing: ``p <- (1-a_k) p + a_k w_k``.
+
+    Snapshots are applied stalest-first on the shared clock (ascending
+    ``sim_time``, then ``round_idx``, ties by id) so the freshest peer
+    has the final word — and so the result is deterministic regardless
+    of hub iteration order.
+    """
+    order = sorted(range(len(snaps)),
+                   key=lambda i: (snaps[i].sim_time, snaps[i].round_idx,
+                                  snaps[i].snap_id))
+    for i in order:
+        a = float(alphas[i])
+        params = jax.tree_util.tree_map(
+            lambda p, q, a=a: (1.0 - a) * p + a * q, params,
+            snaps[i].params)
+    return params

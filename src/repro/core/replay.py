@@ -9,7 +9,7 @@ forgetting and what federates learning without sharing weights.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np

@@ -9,13 +9,11 @@ Two kinds of streams:
 """
 from __future__ import annotations
 
-import itertools
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional, Sequence
+from typing import Dict, Iterator, Sequence
 
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.core.erb import ERB, ERBMeta, TaskTag, new_erb_id
 
 

@@ -13,7 +13,6 @@ into VMEM, applies the weight, and writes the output block.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

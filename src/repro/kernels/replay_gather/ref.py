@@ -1,7 +1,6 @@
 """Pure-jnp oracle for replay_gather."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 
 
 def replay_gather_ref(buffer, indices, weights):

@@ -20,11 +20,10 @@ from __future__ import annotations
 import math
 import re
 from collections import defaultdict
-from typing import Any, Dict, Optional
+from typing import Dict
 
 import jax
 import numpy as np
-from jax import core as jcore
 
 # ---------------------------------------------------------------------------
 # jaxpr FLOP counter

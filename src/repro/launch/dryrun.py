@@ -13,8 +13,8 @@ from typing import Optional  # noqa: E402
 
 import jax               # noqa: E402
 
-from repro.configs.base import (ASSIGNED, INPUT_SHAPES, InputShape,  # noqa: E402
-                                ModelConfig, get_config, param_count)
+from repro.configs.base import (ASSIGNED, INPUT_SHAPES,  # noqa: E402
+                                get_config, param_count)
 from repro.launch import analysis  # noqa: E402
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
                                make_production_mesh)

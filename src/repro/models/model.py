@@ -7,7 +7,7 @@ closures are jit-compatible and carry explicit sharding constraints so the
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

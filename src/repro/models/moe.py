@@ -20,7 +20,6 @@ Design (TPU-native, DeepSeek/GShard lineage):
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -28,7 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import dense_init, mlp_apply, mlp_init, truncated_normal
+from repro.models.layers import mlp_apply, mlp_init, truncated_normal
 
 F32 = jnp.float32
 

@@ -3,8 +3,8 @@ and the ADFLL round API (collect -> train on mixed replay -> share ERB).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.configs.adfll_dqn import DQNConfig
 from repro.core.erb import ERB, TaskTag, erb_add, erb_init, erb_share_slice
+from repro.core.plane import WeightSnapshot, mix_params, new_snap_id
 from repro.core.replay import SelectiveReplaySampler
 from repro.kernels.fused_td.ops import td_loss
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
@@ -70,6 +71,7 @@ class DQNAgent:
         self.step_count = 0
         self.personal_erbs: List[ERB] = []
         self.seen_erb_ids: set = set()
+        self.seen_snap_ids: set = set()
         self.rounds_done = 0
         self.sampler = SelectiveReplaySampler(use_pallas=False)
 
@@ -130,6 +132,31 @@ class DQNAgent:
                 self.target_params = self.params
             last = float(loss)
         return last
+
+    # -- weight plane (beyond-paper: FedAsync-style mixing) -------------------
+    def snapshot_params(self, sim_time: float = 0.0) -> WeightSnapshot:
+        """Package current params for the weight plane (marked seen so the
+        agent never pulls its own snapshot back)."""
+        snap = WeightSnapshot(new_snap_id(), self.agent_id,
+                              self.rounds_done, sim_time, self.params)
+        self.seen_snap_ids.add(snap.snap_id)
+        return snap
+
+    def mix_params(self, incoming: Sequence[WeightSnapshot],
+                   alphas: Sequence[float]) -> int:
+        """Fold peer snapshots into our params with staleness-discounted
+        rates: ``p <- (1-a_k) p + a_k w_k`` (stalest first). The target
+        network keeps its own cadence (next periodic sync picks up the
+        mixed params). Returns the number of snapshots consumed."""
+        snaps = [s for s in incoming if s.agent_id != self.agent_id]
+        for s in incoming:
+            self.seen_snap_ids.add(s.snap_id)
+        if not snaps:
+            return 0
+        alphas = [a for s, a in zip(incoming, alphas)
+                  if s.agent_id != self.agent_id]
+        self.params = mix_params(self.params, snaps, alphas)
+        return len(snaps)
 
     # -- ADFLL round (paper A.3) ----------------------------------------------
     def train_round(self, env: LandmarkEnv, task: TaskTag,

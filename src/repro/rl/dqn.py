@@ -1,7 +1,6 @@
 """3D-CNN deep Q-network (DQN, Mnih et al. 2013 adapted to 3D volumes)."""
 from __future__ import annotations
 
-from functools import partial
 from typing import Dict
 
 import jax

@@ -8,7 +8,7 @@ side; the Q-network forward is the jitted part).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Tuple
 
 import numpy as np
 

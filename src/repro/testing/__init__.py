@@ -1,0 +1,2 @@
+from repro.testing.hypothesis_fallback import (given, install,  # noqa: F401
+                                               settings)

@@ -1,0 +1,178 @@
+"""A tiny, dependency-free stand-in for the ``hypothesis`` API we use.
+
+The tier-1 suite property-tests the ADFLL safety claims with hypothesis.
+Real hypothesis (shrinking, coverage-guided generation, the database) is
+strictly better and is declared in the dev requirements — but hermetic
+environments without it must still be able to *collect and run* the
+suite.  ``tests/conftest.py`` calls :func:`install` only when the real
+package is missing, registering this module under ``sys.modules
+['hypothesis']`` before any test module imports it.
+
+Only the surface the suite uses is implemented:
+
+* ``@given(**kwargs)`` with keyword strategies
+* ``@settings(max_examples=..., deadline=...)`` (either decorator order)
+* ``strategies.integers / floats / lists / sampled_from / booleans``
+
+Generation is deterministic: example ``i`` draws from ``random.Random``
+seeded with ``i``, and the first examples probe interval endpoints, so
+failures reproduce exactly across runs (no shrinking, but the seed index
+is reported in the failure message).
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+from typing import Any, Callable, List, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+class SearchStrategy:
+    """Base strategy: ``example(rng, i)`` draws the i-th example."""
+
+    def example(self, rng: random.Random, i: int) -> Any:
+        raise NotImplementedError
+
+    def map(self, fn: Callable[[Any], Any]) -> "SearchStrategy":
+        return _Mapped(self, fn)
+
+
+class _Mapped(SearchStrategy):
+    def __init__(self, base: SearchStrategy, fn: Callable[[Any], Any]):
+        self.base, self.fn = base, fn
+
+    def example(self, rng: random.Random, i: int) -> Any:
+        return self.fn(self.base.example(rng, i))
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def example(self, rng: random.Random, i: int) -> int:
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return rng.randint(self.lo, self.hi)
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float, max_value: float):
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def example(self, rng: random.Random, i: int) -> float:
+        if i == 0:
+            return self.lo
+        if i == 1:
+            return self.hi
+        return rng.uniform(self.lo, self.hi)
+
+
+class _Lists(SearchStrategy):
+    def __init__(self, elements: SearchStrategy, min_size: int = 0,
+                 max_size: int = 10):
+        self.elements = elements
+        self.min_size, self.max_size = int(min_size), int(max_size)
+
+    def example(self, rng: random.Random, i: int) -> List[Any]:
+        n = self.min_size if i == 0 else rng.randint(self.min_size,
+                                                     self.max_size)
+        return [self.elements.example(rng, 2 + rng.randrange(1 << 16))
+                for _ in range(n)]
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, options: Sequence[Any]):
+        self.options = list(options)
+
+    def example(self, rng: random.Random, i: int) -> Any:
+        if i < len(self.options):
+            return self.options[i]
+        return rng.choice(self.options)
+
+
+def integers(min_value: int = 0, max_value: int = 100) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0,
+           **_kw: Any) -> SearchStrategy:
+    return _Floats(min_value, max_value)
+
+
+def lists(elements: SearchStrategy, min_size: int = 0,
+          max_size: int = 10, **_kw: Any) -> SearchStrategy:
+    return _Lists(elements, min_size, max_size)
+
+
+def sampled_from(options: Sequence[Any]) -> SearchStrategy:
+    return _SampledFrom(options)
+
+
+def booleans() -> SearchStrategy:
+    return _SampledFrom([False, True])
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_kw: Any):
+    """Records max_examples on the (possibly already @given-wrapped) fn."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strategies_kw: SearchStrategy):
+    """Keyword-strategy @given. Runs each example eagerly, no shrinking."""
+
+    def deco(fn):
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        getattr(fn, "_fallback_max_examples",
+                                _DEFAULT_MAX_EXAMPLES))
+            for i in range(n):
+                rng = random.Random(i)
+                drawn = {k: s.example(rng, i)
+                         for k, s in sorted(strategies_kw.items())}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {drawn!r}") from exc
+
+        # hide strategy-filled params from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items()
+                     if name not in strategies_kw]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` (call only when the real
+    package is absent)."""
+    if "hypothesis" in sys.modules:
+        return
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__is_repro_fallback__ = True
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "lists", "sampled_from", "booleans",
+                 "SearchStrategy"):
+        setattr(st, name, globals()[name])
+    hyp.strategies = st
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st

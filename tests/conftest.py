@@ -7,6 +7,16 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+# Property tests prefer real hypothesis (declared in requirements-dev);
+# hermetic environments without it fall back to the in-repo mini engine,
+# registered before any test module imports `hypothesis`.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    from repro.testing.hypothesis_fallback import install
+
+    install()
+
 
 @pytest.fixture
 def rng():

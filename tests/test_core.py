@@ -5,7 +5,7 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.erb import (ERB, TaskTag, erb_add, erb_init, erb_sample,
+from repro.core.erb import (TaskTag, erb_add, erb_init, erb_sample,
                             erb_share_slice)
 from repro.core.hub import Hub, sync_hubs
 from repro.core.network import Network

@@ -1,7 +1,6 @@
 """Launch/analysis layer: flop counter, collective parser, configs, specs."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs.base import (ASSIGNED, INPUT_SHAPES, get_config,

@@ -1,6 +1,5 @@
 """RL substrate: synthetic volumes, environment semantics, DQN learning."""
 import numpy as np
-import pytest
 
 from repro.configs.adfll_dqn import DQNConfig
 from repro.core.erb import TaskTag, erb_init

@@ -5,8 +5,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.checkpoint import restore_pytree, save_pytree
 from repro.data.pipeline import (TokenStreamConfig, federated_shards,

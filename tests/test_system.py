@@ -1,11 +1,9 @@
 """End-to-end behaviour of the ADFLL system + comparison systems."""
 import numpy as np
-import pytest
 
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
 from repro.core.federated import (ADFLLSystem, CentralAggregationSystem,
-                                  evaluate_on_tasks, train_all_knowing,
-                                  train_partial, train_sequential_ll)
+                                  evaluate_on_tasks, train_partial)
 from repro.core.lifelong import LifelongTrainer
 from repro.rl.synth import paper_eight_tasks, patient_split
 
