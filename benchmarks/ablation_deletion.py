@@ -55,7 +55,7 @@ def run(seed: int = 0, fast: bool = False, dropout: float = 0.75,
         per_round.append(float(np.mean(errs)))
         print(f"round {rnd + 1}: agents={len(agents)} "
               f"avg_err={per_round[-1]:.2f} "
-              f"erbs_in_system={len(net.all_known_erbs())}")
+              f"erbs_in_system={len(net.all_known('erb'))}")
     print("derived,errors_per_round=" +
           ";".join(f"{e:.2f}" for e in per_round))
     return per_round

@@ -15,9 +15,13 @@ import numpy as np
 
 from benchmarks.stats import paired_ttest
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
-from repro.core.federated import (ADFLLSystem, evaluate_on_tasks,
-                                  train_all_knowing, train_partial,
-                                  train_sequential_ll)
+from repro.core.federated import (
+    ADFLLSystem,
+    evaluate_on_tasks,
+    train_all_knowing,
+    train_partial,
+    train_sequential_ll,
+)
 from repro.rl.synth import paper_eight_tasks, patient_split
 
 DQN = DQNConfig(volume_shape=(20, 20, 20), box_size=(8, 8, 8),
@@ -71,7 +75,7 @@ def run(seed: int = 0, fast: bool = False):
         print(f"ttest,{best_adfll}_vs_{ref},t={t_stat:.2f},p={p:.3f}")
     print(f"derived,makespan_sim={makespan:.2f},"
           f"rounds={len(sysm.history)},"
-          f"erbs_in_system={len(sysm.network.all_known_erbs())}")
+          f"erbs_in_system={len(sysm.network.all_known('erb'))}")
     return means, best_adfll
 
 

@@ -12,13 +12,14 @@ agent speeds — and reports, per configuration:
 * transport volume per plane (records pushed, peer snapshots mixed,
   foreign ERBs consumed).
 
-    PYTHONPATH=src python -m benchmarks.plane_ablation [--fast]
+    PYTHONPATH=src python -m benchmarks.plane_ablation [--fast] [--json OUT]
 
 Sized to finish in well under 5 minutes on CPU.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import numpy as np
 
@@ -59,7 +60,7 @@ def run_one(planes, tasks, train_p, test_p, *, rounds, steps,
     }
 
 
-def run(seed: int = 0, fast: bool = False):
+def run(seed: int = 0, fast: bool = False, json_path=None):
     tasks = paper_eight_tasks()[:4]
     train_p, test_p = patient_split(16)
     rounds = 2
@@ -77,6 +78,12 @@ def run(seed: int = 0, fast: bool = False):
               f"{r['n_foreign_erbs']}")
     for name, r in results.items():
         print(f"derived,{name},pushed={r['pushed']}")
+    if json_path:
+        payload = {"benchmark": "plane_ablation", "seed": seed,
+                   "fast": bool(fast), "configs": results}
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
     return results
 
 
@@ -85,5 +92,7 @@ if __name__ == "__main__":
     ap.add_argument("--fast", action="store_true",
                     help="reduced step counts (CI sanity)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", type=str, default=None, metavar="OUT",
+                    help="write results as JSON (BENCH_*.json for CI gating)")
     args = ap.parse_args()
-    run(seed=args.seed, fast=args.fast)
+    run(seed=args.seed, fast=args.fast, json_path=args.json)

@@ -10,6 +10,8 @@ Paper mapping:
   ablation_addition -> Fig 4 (4->16 agents, 75% dropout)
   ablation_deletion -> Fig 5 (24->1 agents, 75% dropout)
   plane_ablation    -> beyond-paper: ERB vs weight vs hybrid sharing planes
+  gossip_ablation   -> beyond-paper: hub vs gossip vs hybrid topologies,
+                       bytes-on-wire per plane, compressed weight plane
   kernels           -> framework kernel microbenches (Pallas vs oracle)
   roofline          -> EXPERIMENTS.md §Roofline source table (reads the
                        dry-run JSONs; run repro.launch.dryrun --all first)
@@ -27,9 +29,16 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
 
-    from benchmarks import (ablation_addition, ablation_deletion,
-                            deployment, forgetting, kernels, plane_ablation,
-                            roofline)
+    from benchmarks import (
+        ablation_addition,
+        ablation_deletion,
+        deployment,
+        forgetting,
+        gossip_ablation,
+        kernels,
+        plane_ablation,
+        roofline,
+    )
 
     benches = [
         ("deployment_table1", lambda: deployment.run(fast=args.fast)),
@@ -38,6 +47,7 @@ def main(argv=None) -> None:
         ("ablation_deletion_fig5",
          lambda: ablation_deletion.run(fast=args.fast)),
         ("plane_ablation", lambda: plane_ablation.run(fast=args.fast)),
+        ("gossip_ablation", lambda: gossip_ablation.run(fast=args.fast)),
         ("forgetting_ablation", lambda: forgetting.run(fast=args.fast)),
         ("kernels_micro", kernels.run),
         ("roofline_table", roofline.run),

@@ -48,9 +48,27 @@ class ADFLLConfig:
     # fractions: (current task, personal past, incoming foreign)
     train_steps_per_round: int = 150
     seed: int = 0
+    # -- topology (beyond-paper: hub-less gossip, BrainTorrent-style) ------
+    # "hub": agents <-> hubs (the paper); "gossip": peer-to-peer anti-entropy,
+    # no hub in the loop; "hybrid": both transports at once.
+    topology: str = "hub"
+    gossip_sampler: str = "random"        # ring | random | full | timevary
+    gossip_fanout: int = 2                # peers per agent per round
+    gossip_period: float = 0.5            # sim time between anti-entropy rounds
+    # -- link model / bandwidth accounting ---------------------------------
+    # every agent-link message costs latency + bytes/rate of simulated time
+    # and may drop; the defaults are free+lossless (paper-faithful timing).
+    link_latency: float = 0.0
+    link_rate: float = float("inf")       # bytes per unit of simulated time
+    link_drop: float = 0.0                # per-message gossip drop probability
     # -- sharing planes (beyond-paper: FedAsync-style weight plane) --------
-    # which planes ride the hub topology: ("erb",), ("weights",), or both
+    # which planes ride the topology: ("erb",), ("weights",), or both
     share_planes: Tuple[str, ...] = ("erb",)
+    # weight-plane wire compression: "none" (full float32 pytrees),
+    # "int8" (dense quantized snapshots, ~4x), or "topk" (int8 top-k
+    # deltas with sender-side error feedback, >=4x and usually ~15x)
+    weight_compression: str = "none"
+    weight_topk_frac: float = 0.05        # fraction of coords kept per delta
     mix_alpha: float = 0.6                # base mixing rate for peer weights
     staleness_flag: str = "poly"          # constant | hinge | poly
     # "time" measures staleness on the shared scheduler clock (robust to

@@ -1,8 +1,7 @@
 """DeepSeek-V2-Lite (16B, 2.4B active) — MLA attention (kv_lora_rank=512) +
 fine-grained MoE: 2 shared + 64 routed top-6, first layer dense.
 [arXiv:2405.04434]"""
-from repro.configs.base import (FFN_MOE, MLA, MLAConfig, ModelConfig,
-                                MoEConfig, register)
+from repro.configs.base import FFN_MOE, MLA, MLAConfig, ModelConfig, MoEConfig, register
 
 register(ModelConfig(
     name="deepseek-v2-lite-16b",

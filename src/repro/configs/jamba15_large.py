@@ -4,8 +4,16 @@
 One attention layer per 8-layer Jamba block; MoE FFN every other layer
 (16 experts, top-2), dense FFN otherwise.
 """
-from repro.configs.base import (ATTN, FFN_DENSE, FFN_MOE, MAMBA, ModelConfig,
-                                MoEConfig, SSMConfig, register)
+from repro.configs.base import (
+    ATTN,
+    FFN_DENSE,
+    FFN_MOE,
+    MAMBA,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    register,
+)
 
 # 8-layer Jamba block: mamba x3, attn at index 3 (paper places the attention
 # layer mid-block), mamba x4; MoE on every other FFN.

@@ -1,7 +1,6 @@
 """Moonlight-16B-A3B (moonshot-v1-16b-a3b) — DeepSeek-V3-style MoE:
 64 routed experts top-6 + 2 shared. [hf:moonshotai/Moonlight-16B-A3B]"""
-from repro.configs.base import (ATTN, FFN_MOE, ModelConfig, MoEConfig,
-                                register)
+from repro.configs.base import ATTN, FFN_MOE, ModelConfig, MoEConfig, register
 
 register(ModelConfig(
     name="moonshot-v1-16b-a3b",

@@ -1,7 +1,6 @@
 """Qwen3-235B-A22B — 94-layer MoE, 128 experts top-8.
 [hf:Qwen/Qwen3-235B-A22B via Qwen3-30B-A3B assignment]"""
-from repro.configs.base import (ATTN, FFN_MOE, ModelConfig, MoEConfig,
-                                register)
+from repro.configs.base import ATTN, FFN_MOE, ModelConfig, MoEConfig, register
 
 register(ModelConfig(
     name="qwen3-moe-235b-a22b",

@@ -3,8 +3,14 @@
 d_ff=0: xLSTM blocks carry their own projections (mLSTM pre-up-projection
 x2, sLSTM post gated FFN x4/3).
 """
-from repro.configs.base import (FFN_NONE, MLSTM, SLSTM, ModelConfig,
-                                XLSTMConfig, register)
+from repro.configs.base import (
+    FFN_NONE,
+    MLSTM,
+    SLSTM,
+    ModelConfig,
+    XLSTMConfig,
+    register,
+)
 
 register(ModelConfig(
     name="xlstm-125m",

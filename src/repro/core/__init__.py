@@ -1,13 +1,35 @@
 from repro.core.erb import ERB, ERBMeta, TaskTag, erb_init  # noqa: F401
-from repro.core.federated import (ADFLLSystem,  # noqa: F401
-                                  CentralAggregationSystem,
-                                  train_all_knowing, train_partial,
-                                  train_sequential_ll)
+from repro.core.federated import (  # noqa: F401
+    ADFLLSystem,
+    CentralAggregationSystem,
+    train_all_knowing,
+    train_partial,
+    train_sequential_ll,
+)
+from repro.core.gossip import (  # noqa: F401
+    BandwidthMeter,
+    FullMeshSampler,
+    GossipTopology,
+    LinkModel,
+    PeerSampler,
+    RandomKSampler,
+    RingSampler,
+    TimeVaryingSampler,
+    make_sampler,
+)
 from repro.core.hub import Hub, sync_hubs  # noqa: F401
 from repro.core.lifelong import LifelongTrainer  # noqa: F401
 from repro.core.network import Network  # noqa: F401
-from repro.core.plane import (ERBPlane, SharePlane,  # noqa: F401
-                              WeightPlane, WeightSnapshot, mix_params,
-                              staleness_alphas, staleness_weight)
+from repro.core.plane import (  # noqa: F401
+    CompressedWeightPlane,
+    CompressedWeightSnapshot,
+    ERBPlane,
+    SharePlane,
+    WeightPlane,
+    WeightSnapshot,
+    mix_params,
+    staleness_alphas,
+    staleness_weight,
+)
 from repro.core.replay import SelectiveReplaySampler  # noqa: F401
 from repro.core.scheduler import Scheduler  # noqa: F401

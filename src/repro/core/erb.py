@@ -9,6 +9,7 @@ The paper shares experience *data*, never model weights — that is what
 makes ADFLL architecture-agnostic. ERBs are therefore self-describing and
 model-free.
 """
+
 from __future__ import annotations
 
 import itertools
@@ -24,9 +25,10 @@ _ERB_COUNTER = itertools.count()
 @dataclass(frozen=True)
 class TaskTag:
     """One BraTS task-environment: modality x orientation x pathology."""
-    modality: str                 # t1 | t1ce | t2 | flair
-    orientation: str              # axial | coronal | sagittal
-    pathology: str                # HGG | LGG
+
+    modality: str  # t1 | t1ce | t2 | flair
+    orientation: str  # axial | coronal | sagittal
+    pathology: str  # HGG | LGG
     landmark: str = "top_left_ventricle"
 
     @property
@@ -50,6 +52,7 @@ def new_erb_id(prefix: str = "ERB") -> str:
 @dataclass
 class ERB:
     """data: dict of arrays with leading dim = capacity; ``size`` filled."""
+
     meta: ERBMeta
     data: Dict[str, Any]
     capacity: int
@@ -60,9 +63,15 @@ class ERB:
         return self.size
 
 
-def erb_init(capacity: int, obs_shape: Tuple[int, ...], *, task: TaskTag,
-             source_agent: int = -1, round_idx: int = 0,
-             dtype=np.float32) -> ERB:
+def erb_init(
+    capacity: int,
+    obs_shape: Tuple[int, ...],
+    *,
+    task: TaskTag,
+    source_agent: int = -1,
+    round_idx: int = 0,
+    dtype=np.float32,
+) -> ERB:
     data = {
         "obs": np.zeros((capacity, *obs_shape), dtype),
         "loc": np.zeros((capacity, 3), dtype),
@@ -90,14 +99,16 @@ def erb_add(erb: ERB, batch: Dict[str, np.ndarray]) -> ERB:
     return erb
 
 
-def erb_sample(erb: ERB, rng: np.random.Generator, n: int,
-               *, use_pallas: bool = False) -> Dict[str, np.ndarray]:
+def erb_sample(
+    erb: ERB, rng: np.random.Generator, n: int, *, use_pallas: bool = False
+) -> Dict[str, np.ndarray]:
     """Uniformly sample n experiences (with replacement if n > size)."""
     assert erb.size > 0, "sampling an empty ERB"
     replace_ = n > erb.size
     idx = rng.choice(erb.size, size=n, replace=replace_)
     if use_pallas:
         from repro.kernels.replay_gather.ops import replay_gather
+
         flat = {}
         for k, v in erb.data.items():
             arr = jnp.asarray(v).reshape(erb.capacity, -1)
@@ -108,8 +119,9 @@ def erb_sample(erb: ERB, rng: np.random.Generator, n: int,
     return {k: v[idx] for k, v in erb.data.items()}
 
 
-def erb_share_slice(erb: ERB, n: int, rng: np.random.Generator,
-                    strategy: str = "uniform") -> ERB:
+def erb_share_slice(
+    erb: ERB, n: int, rng: np.random.Generator, strategy: str = "uniform"
+) -> ERB:
     """Selective share: a new ERB holding <=n selected experiences.
 
     This is the paper's 'resulting experience from the training is shared'
@@ -124,15 +136,16 @@ def erb_share_slice(erb: ERB, n: int, rng: np.random.Generator,
     """
     n = min(n, erb.size)
     if strategy == "reward":
-        w = np.abs(erb.data["reward"][:erb.size]).astype(np.float64) + 1e-3
+        w = np.abs(erb.data["reward"][: erb.size]).astype(np.float64) + 1e-3
         p = w / w.sum()
         idx = rng.choice(erb.size, size=n, replace=False, p=p)
     else:
         idx = rng.choice(erb.size, size=n, replace=False)
     data = {k: v[idx].copy() for k, v in erb.data.items()}
     # pad to capacity n exactly (shared ERBs are full by construction)
-    meta = ERBMeta(new_erb_id(), erb.meta.task, erb.meta.source_agent,
-                   erb.meta.round_idx, n)
+    meta = ERBMeta(
+        new_erb_id(), erb.meta.task, erb.meta.source_agent, erb.meta.round_idx, n
+    )
     return ERB(meta=meta, data=data, capacity=n, size=n, cursor=0)
 
 

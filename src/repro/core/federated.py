@@ -1,14 +1,17 @@
 """ADFLL system orchestration + the paper's comparison systems.
 
 * :class:`ADFLLSystem` — the contribution: asynchronous decentralized
-  federated lifelong learning over the hub topology, driven by the
-  event-driven scheduler with heterogeneous agent speeds, dropout, and
-  agent churn.
+  federated lifelong learning over a pluggable topology (the paper's
+  hub layout, hub-less gossip, or both), driven by the event-driven
+  scheduler with heterogeneous agent speeds, dropout, and agent churn.
+  Link time (latency + bytes/rate) of every pull/push is charged to
+  simulated time, so message size shows up in the makespan.
 * Agent X (all-knowing), Agent Y (partially-knowing), Agent M (traditional
   sequential lifelong learner) — Table 1 baselines.
 * :class:`CentralAggregationSystem` — conventional synchronous federated
   averaging of DQN weights (the framework the paper positions against).
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -19,9 +22,10 @@ import numpy as np
 
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
 from repro.core.erb import TaskTag, erb_init
+from repro.core.gossip import LinkModel, make_sampler
 from repro.core.hub import Hub
 from repro.core.network import Network
-from repro.core.plane import WeightPlane, staleness_alphas
+from repro.core.plane import CompressedWeightPlane, WeightPlane, staleness_alphas
 from repro.core.scheduler import Scheduler
 from repro.rl.agent import DQNAgent
 from repro.rl.env import LandmarkEnv
@@ -33,14 +37,16 @@ def env_for(task: TaskTag, patient: int, cfg: DQNConfig) -> LandmarkEnv:
     return LandmarkEnv(vol, lm, cfg)
 
 
-def evaluate_on_tasks(agent: DQNAgent, tasks: Sequence[TaskTag],
-                      patients: Sequence[int], cfg: DQNConfig
-                      ) -> Dict[str, float]:
+def evaluate_on_tasks(
+    agent: DQNAgent,
+    tasks: Sequence[TaskTag],
+    patients: Sequence[int],
+    cfg: DQNConfig,
+) -> Dict[str, float]:
     """Mean terminal distance per task over the held-out patients."""
     out = {}
     for t in tasks:
-        errs = [agent.evaluate(env_for(t, p, cfg), n_episodes=4)
-                for p in patients[:4]]
+        errs = [agent.evaluate(env_for(t, p, cfg), n_episodes=4) for p in patients[:4]]
         out[t.name] = float(np.mean(errs))
     return out
 
@@ -54,56 +60,105 @@ class RoundRecord:
     end: float
     n_incoming: int
     loss: float
-    n_mixed: int = 0      # peer weight snapshots folded in (weight plane)
+    n_mixed: int = 0  # peer weight snapshots folded in (weight plane)
+    comm_time: float = 0.0  # link time charged to this round (pull side)
+
+
+def _make_weight_plane(cfg: ADFLLConfig) -> WeightPlane:
+    if cfg.weight_compression == "none":
+        return WeightPlane(max_versions=cfg.weight_max_versions)
+    return CompressedWeightPlane(
+        max_versions=cfg.weight_max_versions,
+        compression=cfg.weight_compression,
+        k_frac=cfg.weight_topk_frac,
+    )
 
 
 class ADFLLSystem:
     """The paper's deployment system (Fig. 2 topology by default)."""
 
-    def __init__(self, sys_cfg: ADFLLConfig, dqn_cfg: DQNConfig,
-                 tasks: Sequence[TaskTag], train_patients: Sequence[int],
-                 *, seed: int = 0):
+    def __init__(
+        self,
+        sys_cfg: ADFLLConfig,
+        dqn_cfg: DQNConfig,
+        tasks: Sequence[TaskTag],
+        train_patients: Sequence[int],
+        *,
+        seed: int = 0,
+    ):
         self.sys_cfg = sys_cfg
         self.dqn_cfg = dqn_cfg
         self.tasks = list(tasks)
         self.train_patients = list(train_patients)
         self.rng = np.random.default_rng(seed)
+        n_hubs = 0 if sys_cfg.topology == "gossip" else sys_cfg.n_hubs
         self.network = Network(
-            hubs=[Hub(h) for h in range(sys_cfg.n_hubs)],
+            hubs=[Hub(h) for h in range(n_hubs)],
             dropout=sys_cfg.dropout,
-            rng=np.random.default_rng(seed + 1))
+            rng=np.random.default_rng(seed + 1),
+            topology=sys_cfg.topology,
+            link=LinkModel(
+                latency=sys_cfg.link_latency,
+                rate=sys_cfg.link_rate,
+                drop=sys_cfg.link_drop,
+            ),
+        )
+        if sys_cfg.topology in ("gossip", "hybrid"):
+            self.network.enable_gossip(
+                make_sampler(
+                    sys_cfg.gossip_sampler,
+                    fanout=sys_cfg.gossip_fanout,
+                    seed=seed + 2,
+                ),
+                rng=np.random.default_rng(seed + 3),
+            )
         self.use_erb = "erb" in sys_cfg.share_planes
         self.use_weights = "weights" in sys_cfg.share_planes
         if self.use_weights:
-            self.network.register_plane(
-                WeightPlane(max_versions=sys_cfg.weight_max_versions))
+            self.network.register_plane(_make_weight_plane(sys_cfg))
         self.agents: Dict[int, DQNAgent] = {}
         self.sched = Scheduler()
         self.history: List[RoundRecord] = []
         self._task_cursor = 0
         self._next_agent_id = 0
-        self._outstanding = 0     # finish events not yet processed
+        self._outstanding = 0  # finish events not yet processed
         for i in range(sys_cfg.n_agents):
-            hub = (sys_cfg.agent_hub[i]
-                   if i < len(sys_cfg.agent_hub) else None)
-            self.add_agent(speed=(sys_cfg.agent_speed[i]
-                                  if i < len(sys_cfg.agent_speed) else 1.0),
-                           hub_id=hub, at=0.0)
-        self.sched.every(sys_cfg.hub_sync_period,
-                         lambda s, t: self.network.sync(), tag="hub_sync")
+            hub = sys_cfg.agent_hub[i] if i < len(sys_cfg.agent_hub) else None
+            self.add_agent(
+                speed=(
+                    sys_cfg.agent_speed[i] if i < len(sys_cfg.agent_speed) else 1.0
+                ),
+                hub_id=hub,
+                at=0.0,
+            )
+        if sys_cfg.topology != "gossip":
+            self.sched.every(
+                sys_cfg.hub_sync_period,
+                lambda s, t: self.network.sync(),
+                tag="hub_sync",
+            )
+        if self.network.gossip is not None:
+            self.sched.every(
+                sys_cfg.gossip_period,
+                lambda s, t: self.network.gossip.anti_entropy(s),
+                tag="gossip",
+            )
 
     # -- membership -----------------------------------------------------------
-    def add_agent(self, *, speed: float = 1.0, hub_id: Optional[int] = None,
-                  at: Optional[float] = None) -> int:
+    def add_agent(
+        self,
+        *,
+        speed: float = 1.0,
+        hub_id: Optional[int] = None,
+        at: Optional[float] = None,
+    ) -> int:
         aid = self._next_agent_id
         self._next_agent_id += 1
-        agent = DQNAgent(aid, self.dqn_cfg, seed=self.sys_cfg.seed + aid,
-                         speed=speed)
+        agent = DQNAgent(aid, self.dqn_cfg, seed=self.sys_cfg.seed + aid, speed=speed)
         self.agents[aid] = agent
         self.network.attach_agent(aid, hub_id)
         t = self.sched.now if at is None else at
-        self.sched.at(t, lambda s, tt, a=aid: self._start_round(a),
-                      tag=f"A{aid}_join")
+        self.sched.at(t, lambda s, tt, a=aid: self._start_round(a), tag=f"A{aid}_join")
         return aid
 
     def remove_agent(self, agent_id: int):
@@ -132,51 +187,90 @@ class ADFLLSystem:
         task = self._next_task()
         patient = int(self.rng.choice(self.train_patients))
         env = env_for(task, patient, self.dqn_cfg)
-        incoming = (self.network.agent_pull(agent_id, agent.seen_erb_ids)
-                    if self.use_erb else [])
-        n_mixed = self._mix_peer_weights(agent_id) if self.use_weights else 0
+        comm = 0.0
+        if self.use_erb:
+            incoming = self.network.agent_pull(agent_id, agent.seen_erb_ids)
+            comm += self.network.last_comm_time
+        else:
+            incoming = []
+        if self.use_weights:
+            n_mixed = self._mix_peer_weights(agent_id)
+            comm += self.network.last_comm_time
+        else:
+            n_mixed = 0
         start = self.sched.now
         shared, loss = agent.train_round(
-            env, task, incoming,
+            env,
+            task,
+            incoming,
             erb_capacity=self.sys_cfg.erb_capacity,
             share_size=self.sys_cfg.erb_share_size,
-            train_steps=self.sys_cfg.train_steps_per_round)
-        dur = self._round_duration(agent, len(incoming))
+            train_steps=self.sys_cfg.train_steps_per_round,
+        )
+        dur = self._round_duration(agent, len(incoming)) + comm
         end = start + dur
-        self.history.append(RoundRecord(
-            agent_id, agent.rounds_done - 1, task.name, start, end,
-            len(incoming), loss, n_mixed))
+        self.history.append(
+            RoundRecord(
+                agent_id,
+                agent.rounds_done - 1,
+                task.name,
+                start,
+                end,
+                len(incoming),
+                loss,
+                n_mixed,
+                comm,
+            )
+        )
 
         def finish(s: Scheduler, t: float, aid=agent_id, erb=shared):
             self._outstanding -= 1
+            # an agent removed mid-round shares nothing: its untrained round
+            # is lost (the paper's failure semantics), and it is no longer
+            # attached to any hub or gossip store anyway
+            a = self.agents.get(aid)
+            if a is None or getattr(a, "active", True) is False:
+                return
+            comm_out = 0.0
             if self.use_erb:
                 self.network.agent_push(aid, erb)
+                comm_out += self.network.last_comm_time
             if self.use_weights:
-                a = self.agents.get(aid)
-                if a is not None and getattr(a, "active", True):
-                    self.network.agent_push(aid, a.snapshot_params(t),
-                                            plane="weights")
-            self._maybe_continue(aid)
+                self.network.agent_push(aid, a.snapshot_params(t), plane="weights")
+                comm_out += self.network.last_comm_time
+            if comm_out > 0.0:
+                # the upload occupies the agent's link before its next round
+                s.at(
+                    t + comm_out,
+                    lambda s2, t2, a2=aid: self._maybe_continue(a2),
+                    tag=f"A{aid}_push_done",
+                )
+            else:
+                self._maybe_continue(aid)
 
         self._outstanding += 1
         self.sched.at(end, finish, tag=f"A{agent_id}_round_done")
 
     def _mix_peer_weights(self, agent_id: int) -> int:
-        """Pull unseen peer snapshots from the hub and fold them into the
-        agent's params, staleness-discounted (FedAsync alpha*s(dtau))."""
+        """Pull unseen peer snapshots and fold them into the agent's
+        params, staleness-discounted (FedAsync alpha*s(dtau)); compressed
+        snapshots are dequantized inside the mix."""
         agent = self.agents[agent_id]
-        snaps = self.network.agent_pull(agent_id, agent.seen_snap_ids,
-                                        plane="weights")
+        snaps = self.network.agent_pull(agent_id, agent.seen_snap_ids, plane="weights")
         if not snaps:
             return 0
         cfg = self.sys_cfg
-        now = (self.sched.now if cfg.staleness_clock == "time"
-               else agent.rounds_done)
+        now = self.sched.now if cfg.staleness_clock == "time" else agent.rounds_done
         alphas = staleness_alphas(
-            snaps, now, alpha=cfg.mix_alpha,
-            flag=cfg.staleness_flag, hinge_a=cfg.staleness_hinge_a,
-            hinge_b=cfg.staleness_hinge_b, poly_a=cfg.staleness_poly_a,
-            clock=cfg.staleness_clock)
+            snaps,
+            now,
+            alpha=cfg.mix_alpha,
+            flag=cfg.staleness_flag,
+            hinge_a=cfg.staleness_hinge_a,
+            hinge_b=cfg.staleness_hinge_b,
+            poly_a=cfg.staleness_poly_a,
+            clock=cfg.staleness_clock,
+        )
         return agent.mix_params(snaps, alphas)
 
     def _maybe_continue(self, agent_id: int):
@@ -191,9 +285,13 @@ class ADFLLSystem:
 
     # -- run ------------------------------------------------------------------
     def run(self, until: float = 1e6) -> float:
-        done = lambda: (self._outstanding == 0 and all(
-            a.rounds_done >= self.sys_cfg.rounds
-            for a in self.agents.values() if getattr(a, "active", True)))
+        def done() -> bool:
+            return self._outstanding == 0 and all(
+                a.rounds_done >= self.sys_cfg.rounds
+                for a in self.agents.values()
+                if getattr(a, "active", True)
+            )
+
         t = self.sched.run(until=until, stop=done)
         self.network.sync()
         return t
@@ -202,9 +300,15 @@ class ADFLLSystem:
 # ---------------------------------------------------------------------------
 # Baselines
 # ---------------------------------------------------------------------------
-def train_all_knowing(dqn_cfg: DQNConfig, tasks: Sequence[TaskTag],
-                      patients: Sequence[int], *, steps_per_task: int = 150,
-                      erb_capacity: int = 2048, seed: int = 100) -> DQNAgent:
+def train_all_knowing(
+    dqn_cfg: DQNConfig,
+    tasks: Sequence[TaskTag],
+    patients: Sequence[int],
+    *,
+    steps_per_task: int = 150,
+    erb_capacity: int = 2048,
+    seed: int = 100,
+) -> DQNAgent:
     """Agent X: all datasets available at once, ONE round over the union."""
     agent = DQNAgent(-1, dqn_cfg, seed=seed)
     rng = np.random.default_rng(seed)
@@ -220,9 +324,15 @@ def train_all_knowing(dqn_cfg: DQNConfig, tasks: Sequence[TaskTag],
     return agent
 
 
-def train_partial(dqn_cfg: DQNConfig, task: TaskTag,
-                  patients: Sequence[int], *, steps: int = 150,
-                  erb_capacity: int = 2048, seed: int = 200) -> DQNAgent:
+def train_partial(
+    dqn_cfg: DQNConfig,
+    task: TaskTag,
+    patients: Sequence[int],
+    *,
+    steps: int = 150,
+    erb_capacity: int = 2048,
+    seed: int = 200,
+) -> DQNAgent:
     """Agent Y: a single dataset, a single round."""
     agent = DQNAgent(-2, dqn_cfg, seed=seed)
     rng = np.random.default_rng(seed)
@@ -233,20 +343,29 @@ def train_partial(dqn_cfg: DQNConfig, task: TaskTag,
     return agent
 
 
-def train_sequential_ll(dqn_cfg: DQNConfig, tasks: Sequence[TaskTag],
-                        patients: Sequence[int], *, steps_per_round: int =
-                        150, erb_capacity: int = 2048,
-                        seed: int = 300) -> DQNAgent:
+def train_sequential_ll(
+    dqn_cfg: DQNConfig,
+    tasks: Sequence[TaskTag],
+    patients: Sequence[int],
+    *,
+    steps_per_round: int = 150,
+    erb_capacity: int = 2048,
+    seed: int = 300,
+) -> DQNAgent:
     """Agent M: traditional lifelong learner — tasks arrive sequentially,
     replay over personal past ERBs only (no federation)."""
     agent = DQNAgent(-3, dqn_cfg, seed=seed)
     rng = np.random.default_rng(seed)
     for t in tasks:
         env = env_for(t, int(rng.choice(patients)), dqn_cfg)
-        agent.train_round(env, t, incoming=(),
-                          erb_capacity=erb_capacity,
-                          share_size=1,  # nothing is shared
-                          train_steps=steps_per_round)
+        agent.train_round(
+            env,
+            t,
+            incoming=(),
+            erb_capacity=erb_capacity,
+            share_size=1,  # nothing is shared
+            train_steps=steps_per_round,
+        )
     return agent
 
 
@@ -256,32 +375,39 @@ class CentralAggregationSystem:
     system for DESIGN.md §1 (requires homogeneous architectures and a
     central node — both restrictions ADFLL removes)."""
 
-    def __init__(self, n_agents: int, dqn_cfg: DQNConfig,
-                 tasks: Sequence[TaskTag], patients: Sequence[int],
-                 *, seed: int = 400):
+    def __init__(
+        self,
+        n_agents: int,
+        dqn_cfg: DQNConfig,
+        tasks: Sequence[TaskTag],
+        patients: Sequence[int],
+        *,
+        seed: int = 400,
+    ):
         self.dqn_cfg = dqn_cfg
         self.tasks = list(tasks)
         self.patients = list(patients)
-        self.agents = [DQNAgent(i, dqn_cfg, seed=seed + i)
-                       for i in range(n_agents)]
+        self.agents = [DQNAgent(i, dqn_cfg, seed=seed + i) for i in range(n_agents)]
         self.rng = np.random.default_rng(seed)
 
-    def round(self, round_idx: int, *, steps: int = 150,
-              erb_capacity: int = 2048):
+    def round(self, round_idx: int, *, steps: int = 150, erb_capacity: int = 2048):
         for i, agent in enumerate(self.agents):
-            task = self.tasks[(round_idx * len(self.agents) + i)
-                              % len(self.tasks)]
-            env = env_for(task, int(self.rng.choice(self.patients)),
-                          self.dqn_cfg)
-            erb = erb_init(erb_capacity, self.dqn_cfg.box_size, task=task,
-                           source_agent=i, round_idx=round_idx)
+            task = self.tasks[(round_idx * len(self.agents) + i) % len(self.tasks)]
+            env = env_for(task, int(self.rng.choice(self.patients)), self.dqn_cfg)
+            erb = erb_init(
+                erb_capacity,
+                self.dqn_cfg.box_size,
+                task=task,
+                source_agent=i,
+                round_idx=round_idx,
+            )
             agent.collect(env, erb, n_episodes=24)
             agent.train_steps(steps, erb, ())
             agent.personal_erbs.append(erb)
         # synchronous central aggregation (the bottleneck ADFLL removes)
         mean_params = jax.tree_util.tree_map(
-            lambda *xs: sum(xs) / len(xs),
-            *[a.params for a in self.agents])
+            lambda *xs: sum(xs) / len(xs), *[a.params for a in self.agents]
+        )
         for a in self.agents:
             a.params = mean_params
             a.target_params = mean_params
@@ -290,3 +416,15 @@ class CentralAggregationSystem:
         for r in range(rounds):
             self.round(r, **kw)
         return self.agents[0]
+
+
+__all__ = [
+    "ADFLLSystem",
+    "CentralAggregationSystem",
+    "RoundRecord",
+    "env_for",
+    "evaluate_on_tasks",
+    "train_all_knowing",
+    "train_partial",
+    "train_sequential_ll",
+]

@@ -1,24 +1,31 @@
 """Hub nodes: the homogeneous distributed shared database (Fig. 6/7).
 
 Every agent talks only to its hub (bidirectional push/pull); hubs sync
-their databases with each other periodically.  A hub now carries one
-store per :class:`~repro.core.plane.SharePlane` — the paper's ERB plane
-plus any extra planes (e.g. the FedAsync-style weight plane).  Each
-store maps record_id -> record; the Fig. 7 snapshot table is derivable
-from ERB metadata as before, and ``Hub.database`` remains the ERB store
-for backward compatibility.
+their databases with each other periodically.  A hub carries one store
+per :class:`~repro.core.plane.SharePlane` — the paper's ERB plane plus
+any extra planes (e.g. the FedAsync-style weight plane).  Each store
+maps record_id -> record; the Fig. 7 snapshot table is derivable from
+ERB metadata as before, and ``Hub.database`` remains the ERB store for
+backward compatibility.
 
 Hub failure loses only records no other hub holds; agent failure loses
 only that agent's untrained round — the paper's robustness claims, which
 the property tests assert (now for every plane uniformly).
+
+Hub-hub sync can account bytes-on-wire on a shared
+:class:`~repro.core.gossip.BandwidthMeter` so the backbone traffic is
+comparable with the gossip topology's; backbone transfer *time* is not
+modeled (hubs are assumed to sit on fast interconnect).
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Sequence, Set
+from typing import Any, Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
+from repro.core.gossip import BandwidthMeter
 from repro.core.plane import ERBPlane, SharePlane
 
 _DEFAULT_PLANE = ERBPlane()
@@ -49,33 +56,39 @@ class Hub:
         """Hub -> agent: every record the agent has not yet consumed."""
         if not self.alive:
             return []
-        return [v for k, v in sorted(self.store(plane).items())
-                if k not in seen]
+        return [v for k, v in sorted(self.store(plane).items()) if k not in seen]
 
     def snapshot(self) -> List[dict]:
         """Fig. 7 table: one row per ERB in the shared database."""
-        return [{
-            "erb_id": e.meta.erb_id,
-            "modality": e.meta.task.modality,
-            "landmark": e.meta.task.landmark,
-            "pathology": e.meta.task.pathology,
-            "source_agent": e.meta.source_agent,
-            "size": e.meta.size,
-        } for _, e in sorted(self.database.items())]
+        return [
+            {
+                "erb_id": e.meta.erb_id,
+                "modality": e.meta.task.modality,
+                "landmark": e.meta.task.landmark,
+                "pathology": e.meta.task.pathology,
+                "source_agent": e.meta.source_agent,
+                "size": e.meta.size,
+            }
+            for _, e in sorted(self.database.items())
+        ]
 
     def fail(self) -> None:
         self.alive = False
         self.stores.clear()
 
 
-def sync_hubs(hubs: Sequence[Hub], rng: np.random.Generator,
-              dropout: float = 0.0,
-              planes: Sequence[SharePlane] = (_DEFAULT_PLANE,)) -> int:
+def sync_hubs(
+    hubs: Sequence[Hub],
+    rng: np.random.Generator,
+    dropout: float = 0.0,
+    planes: Sequence[SharePlane] = (_DEFAULT_PLANE,),
+    meter: Optional[BandwidthMeter] = None,
+) -> int:
     """Periodic pairwise database sync over every registered plane.
 
     Each (record, dest-hub) transfer independently drops with probability
-    ``dropout`` (the 75% ablation). Returns the number of records
-    transferred."""
+    ``dropout`` (the 75% ablation).  Delivered transfers are accounted on
+    ``meter`` when given.  Returns the number of records transferred."""
     live = [h for h in hubs if h.alive]
     transferred = 0
     for plane in planes:
@@ -91,4 +104,6 @@ def sync_hubs(hubs: Sequence[Hub], rng: np.random.Generator,
                         continue
                     if plane.admit(dst_store, rec):
                         transferred += 1
+                        if meter is not None:
+                            meter.account(plane.name, plane.payload_nbytes(rec))
     return transferred

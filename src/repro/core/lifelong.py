@@ -7,6 +7,7 @@ example (examples/federated_lm.py) uses it to lifelong-train a transformer
 from the zoo on a stream of text "tasks", proving the architecture-
 agnosticism claim at framework level.
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -22,27 +23,32 @@ from repro.core.replay import SelectiveReplaySampler
 class LifelongTrainer:
     """train_step(state, batch) -> (state, metrics); batches are pytrees
     of numpy arrays sampled from ERBs via selective replay."""
+
     train_step: Callable
     state: Any
     batch_size: int
     mix: Sequence[float] = (0.5, 0.25, 0.25)
-    rng: np.random.Generator = field(
-        default_factory=lambda: np.random.default_rng(0))
+    rng: np.random.Generator = field(default_factory=lambda: np.random.default_rng(0))
     personal: List[ERB] = field(default_factory=list)
     seen_erb_ids: set = field(default_factory=set)
 
     def __post_init__(self):
         self.sampler = SelectiveReplaySampler(mix=self.mix)
 
-    def steps(self, n: int, current: Optional[ERB],
-              incoming: Sequence[ERB] = ()) -> Dict[str, float]:
+    def steps(
+        self, n: int, current: Optional[ERB], incoming: Sequence[ERB] = ()
+    ) -> Dict[str, float]:
         for e in incoming:
             self.seen_erb_ids.add(e.meta.erb_id)
         metrics: Dict[str, float] = {}
         for _ in range(n):
-            batch = self.sampler.sample(self.rng, self.batch_size, current,
-                                        personal=self.personal,
-                                        incoming=incoming)
+            batch = self.sampler.sample(
+                self.rng,
+                self.batch_size,
+                current,
+                personal=self.personal,
+                incoming=incoming,
+            )
             self.state, m = self.train_step(self.state, batch)
             metrics = {k: float(v) for k, v in m.items()}
         if current is not None:

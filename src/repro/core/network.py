@@ -1,13 +1,28 @@
-"""Decentralized topology: agents <-> hubs, hub peering, failure injection.
+"""Pluggable topology: hub/agent routing, hub-less gossip, failure injection.
 
-Communication complexity is linear in agents (each talks to one hub);
-hub-hub sync is the only n^2 term and n_hubs << n_agents.
+Three topologies share one transport API (``agent_push`` / ``agent_pull``
+/ ``sync``):
+
+* ``"hub"`` — the paper's Fig. 2 layout: each agent talks to one hub,
+  hubs sync pairwise.  Communication is linear in agents; hub-hub sync
+  is the only n^2 term and n_hubs << n_agents.
+* ``"gossip"`` — no hubs at all: agents publish into their own local
+  store and :class:`~repro.core.gossip.GossipTopology` replicates
+  records peer-to-peer in anti-entropy rounds (BrainTorrent-style).
+* ``"hybrid"`` — both at once: pushes land on the hub *and* the local
+  gossip store; pulls merge the two, deduplicated per plane key.
 
 The network is plane-agnostic: it carries a registry of
 :class:`~repro.core.plane.SharePlane` objects (the ERB plane by
-default), and every push/pull names the plane it rides on.  Dropout,
+default), and every push/pull names the plane it rides on.  Records are
+wire-encoded once at the ingress edge (``plane.encode``), and every
+hub-link message is priced by the :class:`~repro.core.gossip.LinkModel`
+and accounted on the shared :class:`~repro.core.gossip.BandwidthMeter`;
+``last_comm_time`` exposes the link time of the most recent push/pull so
+the scheduler-driven system can charge it to simulated time.  Dropout,
 hub liveness, and hub-hub sync apply to all planes uniformly.
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -15,6 +30,7 @@ from typing import Any, Dict, List, Optional, Set
 
 import numpy as np
 
+from repro.core.gossip import BandwidthMeter, GossipTopology, LinkModel, PeerSampler
 from repro.core.hub import Hub, sync_hubs
 from repro.core.plane import ERBPlane, SharePlane
 
@@ -24,23 +40,59 @@ class Network:
     hubs: List[Hub]
     agent_hub: Dict[int, int] = field(default_factory=dict)
     dropout: float = 0.0
-    rng: np.random.Generator = field(
-        default_factory=lambda: np.random.default_rng(0))
-    planes: Dict[str, SharePlane] = field(
-        default_factory=lambda: {"erb": ERBPlane()})
+    rng: np.random.Generator = field(default_factory=lambda: np.random.default_rng(0))
+    planes: Dict[str, SharePlane] = field(default_factory=lambda: {"erb": ERBPlane()})
+    topology: str = "hub"  # hub | gossip | hybrid
+    link: LinkModel = field(default_factory=LinkModel)
+    meter: BandwidthMeter = field(default_factory=BandwidthMeter)
+    gossip: Optional[GossipTopology] = None
     # statistics (aggregate and per plane)
     n_pushed: int = 0
     n_dropped: int = 0
     n_synced: int = 0
     plane_pushed: Dict[str, int] = field(default_factory=dict)
+    # link time of the most recent agent_push/agent_pull (0 for free links)
+    last_comm_time: float = 0.0
+
+    def __post_init__(self):
+        if self.topology not in ("hub", "gossip", "hybrid"):
+            raise ValueError(f"unknown topology: {self.topology!r}")
 
     # -- wiring ------------------------------------------------------------
+    def enable_gossip(
+        self,
+        sampler: PeerSampler,
+        *,
+        rng: Optional[np.random.Generator] = None,
+    ) -> GossipTopology:
+        """Attach a gossip overlay sharing this network's planes/meter/link."""
+        self.gossip = GossipTopology(
+            self.planes, sampler, link=self.link, meter=self.meter, rng=rng
+        )
+        for aid in self.agent_hub:
+            self.gossip.add_agent(aid)
+        return self.gossip
+
     def register_plane(self, plane: SharePlane) -> SharePlane:
         self.planes[plane.name] = plane
         return plane
 
     def attach_agent(self, agent_id: int, hub_id: Optional[int] = None):
-        """New agents attach to the least-loaded live hub by default."""
+        """New agents attach to the least-loaded live hub by default.
+
+        Under ``hybrid``, agents attached before :meth:`enable_gossip`
+        are back-filled into the overlay from ``agent_hub``; under pure
+        ``gossip`` there is no hub record to back-fill from, so
+        attaching before the overlay exists would silently lose the
+        agent — refuse instead."""
+        if self.gossip is not None:
+            self.gossip.add_agent(agent_id)
+        if self.topology == "gossip":
+            if self.gossip is None:
+                raise RuntimeError(
+                    "topology='gossip' needs enable_gossip() before agents attach"
+                )
+            return
         if hub_id is None:
             loads = {h.hub_id: 0 for h in self.hubs if h.alive}
             for a, hid in self.agent_hub.items():
@@ -51,38 +103,95 @@ class Network:
 
     def detach_agent(self, agent_id: int):
         self.agent_hub.pop(agent_id, None)
+        if self.gossip is not None:
+            self.gossip.remove_agent(agent_id)
+        for plane in self.planes.values():
+            plane.forget_agent(agent_id)
 
     def hub_of(self, agent_id: int) -> Hub:
         return self.hubs[self.agent_hub[agent_id]]
 
     # -- data planes ---------------------------------------------------------
-    def agent_push(self, agent_id: int, item: Any,
-                   plane: str = "erb") -> bool:
-        """Agent uploads one record to its hub on ``plane`` (may drop)."""
-        if self.dropout > 0.0 and self.rng.random() < self.dropout:
-            self.n_dropped += 1
-            return False
-        hub = self.hub_of(agent_id)
-        if not hub.alive:
-            self.n_dropped += 1
-            return False
-        if not hub.push(item, self.planes[plane]):
-            return False          # refused by the plane (duplicate/stale)
-        self.n_pushed += 1
-        self.plane_pushed[plane] = self.plane_pushed.get(plane, 0) + 1
-        return True
+    def agent_push(self, agent_id: int, item: Any, plane: str = "erb") -> bool:
+        """Agent publishes one record on ``plane``.
 
-    def agent_pull(self, agent_id: int, seen: Set[str],
-                   plane: str = "erb") -> List[Any]:
-        hub = self.hub_of(agent_id)
-        pulled = hub.pull_unseen(seen, plane)
-        if self.dropout > 0.0:
-            pulled = [e for e in pulled if self.rng.random() >= self.dropout]
-        return pulled
+        Hub topologies upload to the agent's hub (may drop); gossip
+        topologies insert into the agent's own local store (free — the
+        wire cost is paid when anti-entropy replicates it).  Returns
+        True iff the record was newly kept anywhere.
+        """
+        if self.topology != "hub" and self.gossip is None:
+            raise RuntimeError(f"topology={self.topology!r} needs enable_gossip()")
+        pl = self.planes[plane]
+        self.last_comm_time = 0.0
+        # decide the hub link's fate BEFORE encoding: a dropped upload must
+        # not advance sender-side codec state (compressed delta chains stay
+        # consistent with what some live store actually received)
+        hub_up = False
+        if self.topology != "gossip":
+            if self.dropout > 0.0 and self.rng.random() < self.dropout:
+                self.n_dropped += 1
+            elif not self.hub_of(agent_id).alive:
+                self.n_dropped += 1
+            else:
+                hub_up = True
+        if self.gossip is None and not hub_up:
+            return False  # pure hub: the upload is lost, nothing to encode
+        item = pl.encode(item)
+        delivered = False
+        if self.gossip is not None and self.gossip.insert_local(agent_id, item, pl):
+            delivered = True
+        if hub_up and self.hub_of(agent_id).push(item, pl):
+            nbytes = pl.payload_nbytes(item)
+            self.meter.account(plane, nbytes)
+            self.last_comm_time = self.link.transfer_time(nbytes)
+            delivered = True
+        if delivered:
+            self.n_pushed += 1
+            self.plane_pushed[plane] = self.plane_pushed.get(plane, 0) + 1
+        return delivered
+
+    def agent_pull(
+        self, agent_id: int, seen: Set[str], plane: str = "erb"
+    ) -> List[Any]:
+        """Every unseen record reachable by the agent on ``plane``.
+
+        Local gossip copies are free (their wire cost was paid at
+        anti-entropy delivery), so under ``hybrid`` the hub leg only
+        downloads — and only prices — records the agent does not already
+        hold locally."""
+        pl = self.planes[plane]
+        self.last_comm_time = 0.0
+        local: List[Any] = []
+        if self.gossip is not None:
+            local = self.gossip.pull_local(agent_id, seen, plane)
+        out: List[Any] = []
+        if self.topology != "gossip":
+            skip = set(seen) | {pl.key(e) for e in local}
+            pulled = self.hub_of(agent_id).pull_unseen(skip, plane)
+            if self.dropout > 0.0:
+                pulled = [e for e in pulled if self.rng.random() >= self.dropout]
+            comm = 0.0
+            for e in pulled:
+                nbytes = pl.payload_nbytes(e)
+                self.meter.account(plane, nbytes)
+                comm += self.link.transfer_time(nbytes)
+            self.last_comm_time = comm
+            out.extend(pulled)
+        out.extend(local)
+        return out
 
     def sync(self) -> int:
-        n = sync_hubs(self.hubs, self.rng, self.dropout,
-                      planes=[self.planes[k] for k in sorted(self.planes)])
+        """Hub-hub backbone sync (no-op under pure gossip)."""
+        if self.topology == "gossip":
+            return 0
+        n = sync_hubs(
+            self.hubs,
+            self.rng,
+            self.dropout,
+            planes=[self.planes[k] for k in sorted(self.planes)],
+            meter=self.meter,
+        )
         self.n_synced += n
         return n
 
@@ -100,7 +209,6 @@ class Network:
         ids: Set[str] = set()
         for h in self.hubs:
             ids |= set(h.store(plane))
+        if self.gossip is not None:
+            ids |= self.gossip.all_known(plane)
         return ids
-
-    def all_known_erbs(self) -> Set[str]:
-        return self.all_known("erb")

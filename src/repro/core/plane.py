@@ -3,7 +3,7 @@
 The paper federates exactly one artifact: experience replay buffers
 (:class:`~repro.core.erb.ERB`).  This module generalizes that into a
 ``SharePlane`` protocol so the hub topology can carry *any* record type,
-and adds a second concrete plane:
+and adds parameter-level planes:
 
 * :class:`ERBPlane` — the paper's plane. Records are ERBs, identity is
   ``meta.erb_id``, hubs keep everything (experience never goes stale).
@@ -13,9 +13,20 @@ and adds a second concrete plane:
   provenance) and pull peer snapshots, which they fold into their own
   parameters with a staleness-discounted mixing rate
   ``alpha_t = alpha * s(delta_tau)``.
+* :class:`CompressedWeightPlane` — the same plane, wire-efficient:
+  snapshots cross the network as int8-quantized pytrees or top-k
+  int8-quantized deltas (:class:`CompressedWeightSnapshot`) instead of
+  full float32 pytrees, and are dequantized on the receiving side
+  inside :func:`mix_params`.
 
-Both planes ride the same :class:`~repro.core.network.Network` /
-:class:`~repro.core.hub.Hub` machinery and the same event-driven
+Every plane also prices its records (``payload_nbytes``) and may
+re-encode them at the network ingress edge (``encode``); the transport
+layers (hub links, gossip links) use both for bandwidth accounting, so
+simulated time reflects message size.
+
+Planes ride the same :class:`~repro.core.network.Network` /
+:class:`~repro.core.hub.Hub` machinery (or the hub-less
+:class:`~repro.core.gossip.GossipTopology`) and the same event-driven
 scheduler, so asynchrony, communication dropout, hub failure, and
 heterogeneous agent speeds apply to them uniformly.
 
@@ -23,11 +34,12 @@ Staleness functions follow FedAsync's three families (``constant`` /
 ``hinge`` / ``poly``), clamped to (0, 1] so mixing is always a convex
 combination.
 """
+
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Any, Dict, List, Sequence
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -50,6 +62,7 @@ class WeightSnapshot:
     the push, kept for analysis/debugging.  ``params`` is a JAX pytree
     (immutable arrays — safe to share by reference).
     """
+
     snap_id: str
     agent_id: int
     round_idx: int
@@ -62,14 +75,95 @@ class WeightSnapshot:
 
 
 # ---------------------------------------------------------------------------
+# quantized wire format (CompressedWeightPlane)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class QuantizedLeaf:
+    """One pytree leaf on the wire: int8 codes + scale (+ top-k indices).
+
+    Dense leaves (``idx is None``) carry a code per element; sparse
+    delta leaves carry codes only for the ``idx`` coordinates.
+    """
+
+    q: np.ndarray  # int8 codes, flat
+    scale: float
+    shape: Tuple[int, ...]
+    idx: Optional[np.ndarray] = None  # int32 flat coords (top-k deltas)
+
+    @property
+    def nbytes(self) -> int:
+        n = self.q.nbytes + 4  # codes + float32 scale
+        if self.idx is not None:
+            n += self.idx.nbytes
+        return n
+
+    def dequantize_dense(self) -> np.ndarray:
+        return (self.q.astype(np.float32) * self.scale).reshape(self.shape)
+
+
+def _quantize_int8(x: np.ndarray) -> Tuple[np.ndarray, float]:
+    """Symmetric per-tensor int8: ``x ~= q * scale`` with |q| <= 127."""
+    amax = float(np.max(np.abs(x))) if x.size else 0.0
+    if amax <= 0.0:
+        return np.zeros(x.shape, np.int8), 0.0
+    scale = amax / 127.0
+    q = np.clip(np.rint(x / scale), -127, 127).astype(np.int8)
+    return q, scale
+
+
+@dataclass(frozen=True)
+class CompressedWeightSnapshot:
+    """Wire-format weight record: quantized leaves instead of a pytree.
+
+    ``mode`` is ``"dense"`` (int8 full snapshot, self-contained) or
+    ``"delta"`` (top-k int8-quantized delta vs the sender's previous
+    transmitted state).  Delta records carry the sender-side
+    reconstruction (``dense_params``) so hub replication and late pulls
+    need not replay the delta chain — equivalent to assuming reliable
+    in-order delta delivery per sender.  The transports uphold that:
+    encoding happens once at the network ingress edge *after* the
+    hub-link drop/liveness decision (a dropped upload never advances
+    the chain), and gossip anti-entropy retries a record from the
+    sender's persistent store until a copy lands, so every encoded
+    delta eventually reaches some live store.  ``payload_nbytes``
+    counts only what would cross the wire: codes, indices, and scales.
+    """
+
+    snap_id: str
+    agent_id: int
+    round_idx: int
+    sim_time: float
+    mode: str
+    leaves: Tuple[QuantizedLeaf, ...]
+    treedef: Any
+    payload_nbytes: int
+    dense_params: Any = None  # delta mode: sender-side reconstruction
+
+    @property
+    def record_id(self) -> str:
+        return self.snap_id
+
+    def dequantize(self) -> Any:
+        """Materialize the float32 pytree this record represents."""
+        if self.dense_params is not None:
+            return self.dense_params
+        arrs = [leaf.dequantize_dense() for leaf in self.leaves]
+        return jax.tree_util.tree_unflatten(self.treedef, arrs)
+
+
+# ---------------------------------------------------------------------------
 # plane protocol
 # ---------------------------------------------------------------------------
 class SharePlane:
     """One federated data plane: record identity + hub-side retention.
 
-    A plane never talks to the network itself; :class:`Network` and
-    ``sync_hubs`` consult it when inserting records into a hub's
-    per-plane store (``Dict[record_id, record]``).
+    A plane never talks to the network itself; :class:`Network`,
+    ``sync_hubs``, and :class:`~repro.core.gossip.GossipTopology`
+    consult it when inserting records into a per-plane store
+    (``Dict[record_id, record]``), when encoding records for the wire,
+    and when pricing them for bandwidth accounting.
     """
 
     name: str = "base"
@@ -89,6 +183,17 @@ class SharePlane:
     def evict(self, store: Dict[str, Any]) -> None:
         """Hub-side retention policy; default keeps everything."""
 
+    def encode(self, item: Any) -> Any:
+        """Wire encoding, applied once at the network ingress edge."""
+        return item
+
+    def payload_nbytes(self, item: Any) -> int:
+        """Approximate bytes-on-wire of one record (bandwidth accounting)."""
+        return 64  # bare metadata envelope; concrete planes override
+
+    def forget_agent(self, agent_id: int) -> None:
+        """Drop any per-sender codec state for a departed agent."""
+
 
 class ERBPlane(SharePlane):
     """The paper's plane: experience replay buffers, kept forever."""
@@ -97,6 +202,9 @@ class ERBPlane(SharePlane):
 
     def key(self, item: ERB) -> str:
         return item.meta.erb_id
+
+    def payload_nbytes(self, item: ERB) -> int:
+        return 64 + sum(np.asarray(v).nbytes for v in item.data.values())
 
 
 class WeightPlane(SharePlane):
@@ -120,8 +228,10 @@ class WeightPlane(SharePlane):
     def admit(self, store: Dict[str, Any], item: WeightSnapshot) -> bool:
         if item.snap_id in store:
             return False
-        newest = max((s.round_idx for s in store.values()
-                      if s.agent_id == item.agent_id), default=None)
+        newest = max(
+            (s.round_idx for s in store.values() if s.agent_id == item.agent_id),
+            default=None,
+        )
         if newest is not None and item.round_idx <= newest:
             return False
         store[item.snap_id] = item
@@ -134,16 +244,110 @@ class WeightPlane(SharePlane):
             by_agent.setdefault(s.agent_id, []).append(s)
         for snaps in by_agent.values():
             snaps.sort(key=lambda s: (s.round_idx, s.snap_id), reverse=True)
-            for stale in snaps[self.max_versions:]:
+            for stale in snaps[self.max_versions :]:
                 del store[stale.snap_id]
+
+    def payload_nbytes(self, item: Any) -> int:
+        if isinstance(item, CompressedWeightSnapshot):
+            return item.payload_nbytes
+        leaves = jax.tree_util.tree_leaves(item.params)
+        return 32 + sum(np.asarray(x).nbytes for x in leaves)
+
+
+class CompressedWeightPlane(WeightPlane):
+    """Weight plane whose records cross the wire compressed.
+
+    ``compression="int8"``: every snapshot is a dense int8-quantized
+    pytree — self-contained, ~4x smaller than float32.
+
+    ``compression="topk"`` (default): the first snapshot from each agent
+    is a dense int8 keyframe; each later one carries only the largest
+    ``k_frac`` fraction of coordinates of the delta vs the sender's last
+    *transmitted* state, int8-quantized.  Because the next delta is
+    taken against the reconstruction (not the raw previous params), the
+    untransmitted residual accumulates and is sent once it grows —
+    sender-side error feedback, so repeated pushes converge to the true
+    parameters even with aggressive sparsification.
+
+    Dedup/retention semantics are inherited from :class:`WeightPlane`
+    unchanged; only the wire format differs.
+    """
+
+    def __init__(
+        self,
+        max_versions: int = 2,
+        compression: str = "topk",
+        k_frac: float = 0.05,
+    ):
+        super().__init__(max_versions=max_versions)
+        if compression not in ("int8", "topk"):
+            raise ValueError(f"unknown compression: {compression!r}")
+        self.compression = compression
+        self.k_frac = float(k_frac)
+        self._ref: Dict[int, Any] = {}  # per-sender transmitted state
+
+    def forget_agent(self, agent_id: int) -> None:
+        """Departed senders free their reference pytree (churn runs would
+        otherwise hold one full model copy per agent that ever pushed)."""
+        self._ref.pop(agent_id, None)
+
+    def encode(self, item: Any) -> Any:
+        if isinstance(item, CompressedWeightSnapshot):
+            return item  # already on the wire format (hub-hub relay)
+        flat, treedef = jax.tree_util.tree_flatten(item.params)
+        flat = [np.asarray(x, np.float32) for x in flat]
+        ref = self._ref.get(item.agent_id)
+        leaves: List[QuantizedLeaf] = []
+        recon: List[np.ndarray] = []
+        if self.compression == "int8" or ref is None:
+            mode = "dense"
+            for x in flat:
+                q, scale = _quantize_int8(x.ravel())
+                leaf = QuantizedLeaf(q, scale, x.shape)
+                leaves.append(leaf)
+                recon.append(leaf.dequantize_dense())
+        else:
+            mode = "delta"
+            ref_flat = [
+                np.asarray(r, np.float32) for r in jax.tree_util.tree_leaves(ref)
+            ]
+            for x, r in zip(flat, ref_flat, strict=True):
+                d = (x - r).ravel()
+                k = max(1, int(round(self.k_frac * d.size)))
+                idx = np.sort(np.argpartition(np.abs(d), -k)[-k:]).astype(np.int32)
+                q, scale = _quantize_int8(d[idx])
+                leaves.append(QuantizedLeaf(q, scale, x.shape, idx=idx))
+                rec = r.ravel().copy()
+                rec[idx] += q.astype(np.float32) * scale
+                recon.append(rec.reshape(x.shape))
+        recon_tree = jax.tree_util.tree_unflatten(treedef, recon)
+        if self.compression == "topk":
+            self._ref[item.agent_id] = recon_tree
+        payload = 32 + sum(leaf.nbytes for leaf in leaves)
+        return CompressedWeightSnapshot(
+            item.snap_id,
+            item.agent_id,
+            item.round_idx,
+            item.sim_time,
+            mode,
+            tuple(leaves),
+            treedef,
+            payload,
+            dense_params=recon_tree if mode == "delta" else None,
+        )
 
 
 # ---------------------------------------------------------------------------
 # staleness weighting (FedAsync s(delta_tau) families)
 # ---------------------------------------------------------------------------
-def staleness_weight(delta_tau: float, flag: str = "poly", *,
-                     hinge_a: float = 10.0, hinge_b: float = 4.0,
-                     poly_a: float = 0.5) -> float:
+def staleness_weight(
+    delta_tau: float,
+    flag: str = "poly",
+    *,
+    hinge_a: float = 10.0,
+    hinge_b: float = 4.0,
+    poly_a: float = 0.5,
+) -> float:
     """FedAsync staleness discount ``s(delta_tau)``, clamped to (0, 1].
 
     ``constant``: 1 — staleness ignored (plain async averaging).
@@ -162,11 +366,17 @@ def staleness_weight(delta_tau: float, flag: str = "poly", *,
     raise ValueError(f"unknown staleness flag: {flag!r}")
 
 
-def staleness_alphas(snaps: Sequence[WeightSnapshot], now: float,
-                     *, alpha: float = 0.6, flag: str = "poly",
-                     hinge_a: float = 10.0, hinge_b: float = 4.0,
-                     poly_a: float = 0.5,
-                     clock: str = "round") -> np.ndarray:
+def staleness_alphas(
+    snaps: Sequence[WeightSnapshot],
+    now: float,
+    *,
+    alpha: float = 0.6,
+    flag: str = "poly",
+    hinge_a: float = 10.0,
+    hinge_b: float = 4.0,
+    poly_a: float = 0.5,
+    clock: str = "round",
+) -> np.ndarray:
     """Per-snapshot mixing rates ``alpha * s(now - tau_k)``.
 
     ``clock`` picks the timescale ``tau`` lives on:
@@ -180,30 +390,42 @@ def staleness_alphas(snaps: Sequence[WeightSnapshot], now: float,
       counters are incomparable (a speed-2.5x agent's round 10 is not
       older than a slow peer's round 4).
     """
-    taus = [s.round_idx if clock == "round" else s.sim_time
-            for s in snaps]
-    out = [alpha * staleness_weight(now - tau, flag,
-                                    hinge_a=hinge_a, hinge_b=hinge_b,
-                                    poly_a=poly_a)
-           for tau in taus]
+    taus = [s.round_idx if clock == "round" else s.sim_time for s in snaps]
+    out = [
+        alpha
+        * staleness_weight(
+            now - tau, flag, hinge_a=hinge_a, hinge_b=hinge_b, poly_a=poly_a
+        )
+        for tau in taus
+    ]
     return np.asarray(out, np.float64)
 
 
-def mix_params(params: Any, snaps: Sequence[WeightSnapshot],
-               alphas: Sequence[float]) -> Any:
+def snapshot_params(snap: Any) -> Any:
+    """The float32 pytree a snapshot carries, dequantizing if compressed."""
+    if hasattr(snap, "dequantize"):
+        return snap.dequantize()
+    return snap.params
+
+
+def mix_params(params: Any, snaps: Sequence[Any], alphas: Sequence[float]) -> Any:
     """Sequential FedAsync mixing: ``p <- (1-a_k) p + a_k w_k``.
 
     Snapshots are applied stalest-first on the shared clock (ascending
     ``sim_time``, then ``round_idx``, ties by id) so the freshest peer
     has the final word — and so the result is deterministic regardless
-    of hub iteration order.
+    of hub iteration order.  Compressed snapshots are dequantized here,
+    on the receiving side (dequantize-and-apply).
     """
-    order = sorted(range(len(snaps)),
-                   key=lambda i: (snaps[i].sim_time, snaps[i].round_idx,
-                                  snaps[i].snap_id))
+    order = sorted(
+        range(len(snaps)),
+        key=lambda i: (snaps[i].sim_time, snaps[i].round_idx, snaps[i].snap_id),
+    )
     for i in order:
         a = float(alphas[i])
         params = jax.tree_util.tree_map(
-            lambda p, q, a=a: (1.0 - a) * p + a * q, params,
-            snaps[i].params)
+            lambda p, q, a=a: (1.0 - a) * p + a * q,
+            params,
+            snapshot_params(snaps[i]),
+        )
     return params

@@ -7,6 +7,7 @@ During training an agent samples each minibatch from three pools:
 Mixing (2) and (3) into every update is what prevents catastrophic
 forgetting and what federates learning without sharing weights.
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -21,21 +22,27 @@ from repro.core.erb import ERB, erb_sample, stack_batches
 class SelectiveReplaySampler:
     """mix = (current, personal, incoming) fractions; renormalized over
     non-empty pools."""
+
     mix: Sequence[float] = (0.5, 0.25, 0.25)
     use_pallas: bool = False
 
-    def sample(self, rng: np.random.Generator, batch_size: int,
-               current: Optional[ERB],
-               personal: Sequence[ERB] = (),
-               incoming: Sequence[ERB] = ()) -> Dict[str, np.ndarray]:
+    def sample(
+        self,
+        rng: np.random.Generator,
+        batch_size: int,
+        current: Optional[ERB],
+        personal: Sequence[ERB] = (),
+        incoming: Sequence[ERB] = (),
+    ) -> Dict[str, np.ndarray]:
         pools: List[List[ERB]] = [
-            [e for e in ([current] if current is not None else [])
-             if len(e) > 0],
+            [e for e in ([current] if current is not None else []) if len(e) > 0],
             [e for e in personal if len(e) > 0],
             [e for e in incoming if len(e) > 0],
         ]
-        weights = np.array([m if pool else 0.0
-                            for m, pool in zip(self.mix, pools)], np.float64)
+        weights = np.array(
+            [m if pool else 0.0 for m, pool in zip(self.mix, pools, strict=True)],
+            np.float64,
+        )
         if weights.sum() == 0:
             raise ValueError("all replay pools are empty")
         weights = weights / weights.sum()
@@ -43,16 +50,16 @@ class SelectiveReplaySampler:
         counts[int(np.argmax(weights))] += batch_size - counts.sum()
 
         batches = []
-        for pool, n in zip(pools, counts):
+        for pool, n in zip(pools, counts, strict=True):
             if n == 0 or not pool:
                 continue
             # spread n over the ERBs in this pool, uniformly per-ERB
-            per = np.bincount(rng.integers(0, len(pool), size=n),
-                              minlength=len(pool))
-            for erb, m in zip(pool, per):
+            per = np.bincount(rng.integers(0, len(pool), size=n), minlength=len(pool))
+            for erb, m in zip(pool, per, strict=True):
                 if m > 0:
-                    batches.append(erb_sample(erb, rng, int(m),
-                                              use_pallas=self.use_pallas))
+                    batches.append(
+                        erb_sample(erb, rng, int(m), use_pallas=self.use_pallas)
+                    )
         batch = stack_batches(batches)
         perm = rng.permutation(batch_size)
         return {k: v[perm] for k, v in batch.items()}

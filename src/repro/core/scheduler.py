@@ -2,14 +2,16 @@
 
 XLA programs are bulk-synchronous, so ADFLL's *asynchrony* lives here, at
 the host control plane: a discrete-event simulator with heterogeneous
-agent speeds (the paper's V100-vs-T4 deployment), hub sync timers, agent
-churn (addition/deletion ablations), and the paper's round policy —
-"when an agent finishes training on a task, as long as there are new ERBs
-it has not learned from, it starts a new round".
+agent speeds (the paper's V100-vs-T4 deployment), hub sync timers,
+gossip anti-entropy timers, agent churn (addition/deletion ablations),
+and the paper's round policy — "when an agent finishes training on a
+task, as long as there are new ERBs it has not learned from, it starts a
+new round".
 
 The *content* of a round (DQN training on real tensors) executes eagerly
 when its event fires; only simulated time is virtual.
 """
+
 from __future__ import annotations
 
 import heapq
@@ -43,16 +45,43 @@ class Scheduler:
     def after(self, delay: float, fn: EventFn, tag: str = "") -> None:
         self.at(self.now + delay, fn, tag)
 
-    def every(self, period: float, fn: EventFn, tag: str = "",
-              until: Optional[float] = None) -> None:
+    def every(
+        self,
+        period: float,
+        fn: EventFn,
+        tag: str = "",
+        until: Optional[float] = None,
+        phase: Optional[float] = None,
+    ) -> None:
+        """Periodic event; first firing after ``phase`` (default: one
+        period), so co-periodic timers can be offset from each other."""
+
         def tick(sched: "Scheduler", t: float):
             fn(sched, t)
             if until is None or t + period <= until:
                 sched.at(t + period, tick, tag)
-        self.at(self.now + period, tick, tag)
 
-    def run(self, until: float = float("inf"),
-            stop: Optional[Callable[[], bool]] = None) -> float:
+        first = period if phase is None else phase
+        self.at(self.now + first, tick, tag)
+
+    def cancel(self, tag: str) -> None:
+        """Drop every *pending* event carrying ``tag``.
+
+        Periodic timers stop because their next tick is removed before it
+        can re-arm; the tag itself stays usable — re-registering an event
+        under it later works.  A timer cannot cancel itself from inside
+        its own callback (the re-arm happens after the callback returns);
+        cancel from another event or use ``until`` for that."""
+        if not tag:
+            return
+        self._heap = [e for e in self._heap if e.tag != tag]
+        heapq.heapify(self._heap)
+
+    def run(
+        self,
+        until: float = float("inf"),
+        stop: Optional[Callable[[], bool]] = None,
+    ) -> float:
         while self._heap:
             ev = heapq.heappop(self._heap)
             if ev.time > until:

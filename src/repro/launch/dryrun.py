@@ -13,15 +13,31 @@ from typing import Optional  # noqa: E402
 
 import jax               # noqa: E402
 
-from repro.configs.base import (ASSIGNED, INPUT_SHAPES,  # noqa: E402
-                                get_config, param_count)
+from repro.configs.base import (  # noqa: E402
+    ASSIGNED,
+    INPUT_SHAPES,
+    get_config,
+    param_count,
+)
 from repro.launch import analysis  # noqa: E402
-from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,  # noqa: E402
-                               make_production_mesh)
-from repro.launch.specs import (cache_specs, input_specs, opt_cfg_for,  # noqa: E402
-                                params_specs, state_specs)
-from repro.models.model import (make_prefill_step, make_serve_step,  # noqa: E402
-                                make_train_step)
+from repro.launch.mesh import (  # noqa: E402
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+)
+from repro.launch.specs import (  # noqa: E402
+    cache_specs,
+    input_specs,
+    opt_cfg_for,
+    params_specs,
+    state_specs,
+)
+from repro.models.model import (  # noqa: E402
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
 from repro.models.sharding import ShardingPolicy  # noqa: E402
 
 # Per-(arch, mode) gradient-accumulation settings found during the baseline

@@ -13,8 +13,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.models.model import (init_caches, init_params, make_prefill_step,
-                                make_serve_step)
+from repro.models.model import (
+    init_caches,
+    init_params,
+    make_prefill_step,
+    make_serve_step,
+)
 from repro.models.sharding import ShardingPolicy
 
 

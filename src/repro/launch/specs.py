@@ -13,8 +13,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import InputShape, ModelConfig
 from repro.models import model as model_lib
-from repro.models.sharding import (ShardingPolicy, cache_shardings,
-                                   tree_shardings)
+from repro.models.sharding import ShardingPolicy, cache_shardings, tree_shardings
 from repro.optim.adamw import AdamWConfig, adamw_init
 
 

@@ -6,8 +6,16 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import (ATTN, FFN_DENSE, FFN_MOE, MAMBA, MLA, MLSTM,
-                                SLSTM, ModelConfig)
+from repro.configs.base import (
+    ATTN,
+    FFN_DENSE,
+    FFN_MOE,
+    MAMBA,
+    MLA,
+    MLSTM,
+    SLSTM,
+    ModelConfig,
+)
 from repro.models import attention, ssm
 from repro.models.layers import mlp_apply, mlp_init, norm_apply, norm_init
 from repro.models.moe import moe_apply, moe_init

@@ -1,2 +1,1 @@
-from repro.optim.adamw import (adamw_init, adamw_update,  # noqa: F401
-                               cosine_schedule)
+from repro.optim.adamw import adamw_init, adamw_update, cosine_schedule  # noqa: F401

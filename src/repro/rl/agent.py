@@ -145,15 +145,17 @@ class DQNAgent:
     def mix_params(self, incoming: Sequence[WeightSnapshot],
                    alphas: Sequence[float]) -> int:
         """Fold peer snapshots into our params with staleness-discounted
-        rates: ``p <- (1-a_k) p + a_k w_k`` (stalest first). The target
-        network keeps its own cadence (next periodic sync picks up the
-        mixed params). Returns the number of snapshots consumed."""
+        rates: ``p <- (1-a_k) p + a_k w_k`` (stalest first). Compressed
+        snapshots (``CompressedWeightSnapshot``) are transparent here:
+        ``mix_params`` dequantizes them on apply. The target network
+        keeps its own cadence (next periodic sync picks up the mixed
+        params). Returns the number of snapshots consumed."""
         snaps = [s for s in incoming if s.agent_id != self.agent_id]
         for s in incoming:
             self.seen_snap_ids.add(s.snap_id)
         if not snaps:
             return 0
-        alphas = [a for s, a in zip(incoming, alphas)
+        alphas = [a for s, a in zip(incoming, alphas, strict=True)
                   if s.agent_id != self.agent_id]
         self.params = mix_params(self.params, snaps, alphas)
         return len(snaps)

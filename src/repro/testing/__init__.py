@@ -1,2 +1,1 @@
-from repro.testing.hypothesis_fallback import (given, install,  # noqa: F401
-                                               settings)
+from repro.testing.hypothesis_fallback import given, install, settings  # noqa: F401

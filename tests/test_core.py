@@ -1,12 +1,12 @@
 """ADFLL core invariants: ERBs, selective replay, hubs, network, scheduler.
 Property-based tests (hypothesis) cover the system's safety claims."""
+
 import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.core.erb import (TaskTag, erb_add, erb_init, erb_sample,
-                            erb_share_slice)
+from repro.core.erb import TaskTag, erb_add, erb_init, erb_sample, erb_share_slice
 from repro.core.hub import Hub, sync_hubs
 from repro.core.network import Network
 from repro.core.replay import SelectiveReplaySampler
@@ -35,11 +35,12 @@ def _erb(n, cap=32, seed=0):
 # ERB properties
 # ---------------------------------------------------------------------------
 @settings(max_examples=30, deadline=None)
-@given(adds=st.lists(st.integers(1, 40), min_size=1, max_size=6),
-       cap=st.integers(4, 64))
+@given(
+    adds=st.lists(st.integers(1, 40), min_size=1, max_size=6),
+    cap=st.integers(4, 64),
+)
 def test_erb_ring_never_exceeds_capacity(adds, cap):
     erb = erb_init(cap, OBS, task=TASK)
-    rng = np.random.default_rng(0)
     total = 0
     for n in adds:
         batch = {k: v[:n] for k, v in _erb(n, cap=max(adds)).data.items()}
@@ -56,8 +57,7 @@ def test_erb_sample_count_and_membership(n, want):
     rng = np.random.default_rng(1)
     batch = erb_sample(erb, rng, want)
     assert batch["action"].shape[0] == want
-    assert set(batch["action"].tolist()) <= set(
-        erb.data["action"][:erb.size].tolist())
+    assert set(batch["action"].tolist()) <= set(erb.data["action"][: erb.size].tolist())
 
 
 @settings(max_examples=20, deadline=None)
@@ -95,8 +95,7 @@ def test_replay_renormalizes_on_empty_pools():
 def test_hub_sync_converges_without_dropout():
     hubs = [Hub(i) for i in range(3)]
     for i, h in enumerate(hubs):
-        h.push(erb_share_slice(_erb(10, seed=i), 5,
-                               np.random.default_rng(i)))
+        h.push(erb_share_slice(_erb(10, seed=i), 5, np.random.default_rng(i)))
     sync_hubs(hubs, np.random.default_rng(0), dropout=0.0)
     ids = [set(h.database) for h in hubs]
     assert ids[0] == ids[1] == ids[2] and len(ids[0]) == 3
@@ -115,11 +114,11 @@ def test_hub_sync_monotone_under_dropout(dropout):
     for _ in range(200):
         sync_hubs(hubs, rng, dropout=dropout)
         new = [len(h.database) for h in hubs]
-        assert all(b >= a for a, b in zip(sizes, new))
+        assert all(b >= a for a, b in zip(sizes, new, strict=True))
         sizes = new
         if all(s == 3 for s in sizes):
             break
-    assert all(s == 3 for s in sizes)        # converged despite dropout
+    assert all(s == 3 for s in sizes)  # converged despite dropout
 
 
 def test_knowledge_survives_agent_deletion():
@@ -130,7 +129,7 @@ def test_knowledge_survives_agent_deletion():
     net.attach_agent(1, 1)
     e = erb_share_slice(_erb(10), 5, np.random.default_rng(0))
     assert net.agent_push(0, e)
-    net.detach_agent(0)                       # agent leaves
+    net.detach_agent(0)  # agent leaves
     net.sync()
     assert e.meta.erb_id in net.hubs[1].database
     assert net.agent_pull(1, set()) != []
@@ -141,13 +140,13 @@ def test_hub_failure_loses_only_unique_erbs():
     net.attach_agent(0, 0)
     e1 = erb_share_slice(_erb(10, seed=1), 5, np.random.default_rng(1))
     net.agent_push(0, e1)
-    net.sync()                                # replicated on hub 1
+    net.sync()  # replicated on hub 1
     e2 = erb_share_slice(_erb(10, seed=2), 5, np.random.default_rng(2))
-    net.agent_push(0, e2)                     # only on hub 0
+    net.agent_push(0, e2)  # only on hub 0
     net.fail_hub(0)
-    known = net.all_known_erbs()
-    assert e1.meta.erb_id in known            # survived (replicated)
-    assert e2.meta.erb_id not in known        # lost (unique to failed hub)
+    known = net.all_known("erb")
+    assert e1.meta.erb_id in known  # survived (replicated)
+    assert e2.meta.erb_id not in known  # lost (unique to failed hub)
     # orphaned agent re-homed
     assert net.agent_hub[0] == 1
 
@@ -194,4 +193,5 @@ def test_scheduler_deterministic():
             s.at(1.0, lambda sc, t, i=i: order.append(i))
         s.run()
         return order
+
     assert run_once() == run_once() == list(range(10))

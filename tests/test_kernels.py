@@ -1,5 +1,6 @@
 """Per-kernel correctness: Pallas (interpret=True) vs pure-jnp oracles,
 swept over shapes / dtypes / masking configs."""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,36 +22,35 @@ def _qkv(rng, b, s, hq, hkv, d, dtype):
     return q, k, v
 
 
-@pytest.mark.parametrize("b,s,hq,hkv,d", [
-    (1, 128, 4, 4, 32),        # MHA
-    (2, 256, 8, 2, 16),        # GQA 4:1
-    (1, 512, 4, 1, 64),        # MQA
-])
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,d",
+    [
+        (1, 128, 4, 4, 32),  # MHA
+        (2, 256, 8, 2, 16),  # GQA 4:1
+        (1, 512, 4, 1, 64),  # MQA
+    ],
+)
 @pytest.mark.parametrize("window", [None, 64])
 def test_flash_attention_matches_ref(rng, b, s, hq, hkv, d, window):
     q, k, v = _qkv(rng, b, s, hq, hkv, d, jnp.float32)
-    out = flash_attention(q, k, v, causal=True, window=window,
-                          block_q=64, block_k=64)
+    out = flash_attention(q, k, v, causal=True, window=window, block_q=64, block_k=64)
     ref = attention_ref(q, k, v, causal=True, window=window)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
 
 
-@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5),
-                                        (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5), (jnp.bfloat16, 3e-2)])
 def test_flash_attention_dtypes(rng, dtype, atol):
     q, k, v = _qkv(rng, 1, 128, 4, 2, 32, dtype)
     out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
     ref = attention_ref(q, k, v, causal=True)
-    np.testing.assert_allclose(np.asarray(out, np.float32),
-                               np.asarray(ref, np.float32),
-                               atol=atol, rtol=atol)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), atol=atol, rtol=atol
+    )
 
 
 def test_flash_attention_softcap(rng):
     q, k, v = _qkv(rng, 1, 128, 2, 2, 16, jnp.float32)
-    out = flash_attention(q, k, v, causal=True, softcap=20.0,
-                          block_q=64, block_k=64)
+    out = flash_attention(q, k, v, causal=True, softcap=20.0, block_q=64, block_k=64)
     ref = attention_ref(q, k, v, causal=True, softcap=20.0)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
 
@@ -63,8 +63,7 @@ def test_flash_attention_uneven_blocks(rng):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
 
 
-@pytest.mark.parametrize("cap,feat,batch", [(64, 16, 8), (256, 128, 32),
-                                            (128, 33, 5)])
+@pytest.mark.parametrize("cap,feat,batch", [(64, 16, 8), (256, 128, 32), (128, 33, 5)])
 def test_replay_gather_matches_ref(rng, cap, feat, batch):
     buf = jnp.asarray(rng.standard_normal((cap, feat)), jnp.float32)
     idx = jnp.asarray(rng.integers(0, cap, batch), jnp.int32)
@@ -74,8 +73,7 @@ def test_replay_gather_matches_ref(rng, cap, feat, batch):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
 
 
-@pytest.mark.parametrize("b,a,gamma", [(64, 6, 0.9), (128, 4, 0.99),
-                                       (32, 6, 0.5)])
+@pytest.mark.parametrize("b,a,gamma", [(64, 6, 0.9), (128, 4, 0.99), (32, 6, 0.5)])
 def test_fused_td_matches_ref(rng, b, a, gamma):
     q_sel = jnp.asarray(rng.standard_normal((b, 1)), jnp.float32)
     q_next = jnp.asarray(rng.standard_normal((b, a)), jnp.float32)
@@ -100,6 +98,6 @@ def test_td_loss_gradient_matches_autodiff(rng):
     def ref_loss(q):
         loss, _ = fused_td_ref(q, q_next, r, d, gamma=0.9)
         return jnp.mean(loss)
+
     g_ref = jax.grad(ref_loss)(q_sel)
-    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_ref),
-                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(g_fused), np.asarray(g_ref), atol=1e-6)

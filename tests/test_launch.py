@@ -1,12 +1,17 @@
 """Launch/analysis layer: flop counter, collective parser, configs, specs."""
+
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs.base import (ASSIGNED, INPUT_SHAPES, get_config,
-                                list_configs, param_count)
-from repro.launch.analysis import (_shape_bytes, count_flops,
-                                   parse_collectives)
+from repro.configs.base import (
+    ASSIGNED,
+    INPUT_SHAPES,
+    get_config,
+    list_configs,
+    param_count,
+)
+from repro.launch.analysis import _shape_bytes, count_flops, parse_collectives
 
 
 def test_registry_has_all_assigned_archs():
@@ -14,19 +19,21 @@ def test_registry_has_all_assigned_archs():
     for a in ASSIGNED:
         assert a in names
     assert len(ASSIGNED) == 10
-    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
-                                 "long_500k"}
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
 
 
-@pytest.mark.parametrize("arch,lo,hi", [
-    ("h2o-danube-3-4b", 3.0e9, 5.5e9),
-    ("qwen2.5-14b", 12e9, 17e9),
-    ("starcoder2-15b", 13e9, 18e9),
-    ("deepseek-v2-lite-16b", 13e9, 19e9),
-    ("qwen3-moe-235b-a22b", 2.0e11, 2.7e11),
-    ("jamba-1.5-large-398b", 3.3e11, 4.6e11),
-    ("xlstm-125m", 0.9e8, 2.2e8),
-])
+@pytest.mark.parametrize(
+    "arch,lo,hi",
+    [
+        ("h2o-danube-3-4b", 3.0e9, 5.5e9),
+        ("qwen2.5-14b", 12e9, 17e9),
+        ("starcoder2-15b", 13e9, 18e9),
+        ("deepseek-v2-lite-16b", 13e9, 19e9),
+        ("qwen3-moe-235b-a22b", 2.0e11, 2.7e11),
+        ("jamba-1.5-large-398b", 3.3e11, 4.6e11),
+        ("xlstm-125m", 0.9e8, 2.2e8),
+    ],
+)
 def test_param_counts_match_published_sizes(arch, lo, hi):
     total, active = param_count(get_config(arch))
     assert lo <= total <= hi, (arch, total)
@@ -43,19 +50,24 @@ def test_flop_counter_exact_on_scan():
     def f(x, w):
         def body(c, _):
             return c @ w, None
+
         y, _ = jax.lax.scan(body, x, None, length=8)
         return jnp.sum(y)
+
     x = jnp.zeros((64, 64))
     w = jnp.zeros((64, 64))
     fl = count_flops(f, x, w)
-    expect = 8 * 2 * 64 ** 3
+    expect = 8 * 2 * 64**3
     assert abs(fl - expect) / expect < 0.01
 
 
 def test_flop_counter_counts_grad():
     def f(x, w):
         return jnp.sum(jnp.tanh(x @ w))
-    g = lambda x, w: jax.grad(f, argnums=1)(x, w)
+
+    def g(x, w):
+        return jax.grad(f, argnums=1)(x, w)
+
     x = jnp.zeros((32, 32))
     w = jnp.zeros((32, 32))
     fwd = count_flops(f, x, w)

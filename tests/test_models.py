@@ -1,12 +1,18 @@
 """Per-arch smoke tests (reduced configs) + decode/forward parity."""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs.base import ASSIGNED, get_config
-from repro.models.model import (build_model, init_caches, init_params,
-                                make_prefill_step, make_serve_step)
+from repro.models.model import (
+    build_model,
+    init_caches,
+    init_params,
+    make_prefill_step,
+    make_serve_step,
+)
 from repro.models.rope import positions_for
 
 B, S = 2, 64
@@ -15,12 +21,16 @@ B, S = 2, 64
 def _batch(cfg, rng, b=B, s=S):
     labels = rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)
     if cfg.input_kind == "embeds":
-        return {"embeds": jnp.asarray(rng.standard_normal(
-            (b, s, cfg.d_model)).astype(np.float32)),
-            "labels": jnp.asarray(labels)}
-    return {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
-        "labels": jnp.asarray(labels)}
+        return {
+            "embeds": jnp.asarray(
+                rng.standard_normal((b, s, cfg.d_model)).astype(np.float32)
+            ),
+            "labels": jnp.asarray(labels),
+        }
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "labels": jnp.asarray(labels),
+    }
 
 
 @pytest.mark.parametrize("arch", ASSIGNED)
@@ -39,8 +49,12 @@ def test_arch_smoke_train_step(arch, rng):
     # table ~untouched, so check across all leaves)
     changed = any(
         not np.array_equal(np.asarray(a), np.asarray(b))
-        for a, b in zip(jax.tree_util.tree_leaves(state["params"]),
-                        jax.tree_util.tree_leaves(state2["params"])))
+        for a, b in zip(
+            jax.tree_util.tree_leaves(state["params"]),
+            jax.tree_util.tree_leaves(state2["params"]),
+            strict=True,
+        )
+    )
     assert changed
 
 
@@ -52,25 +66,31 @@ def test_arch_smoke_serve_step(arch, rng):
     serve = jax.jit(make_serve_step(cfg))
     batch = {"pos": jnp.array([0, 3], jnp.int32)}
     if cfg.input_kind == "embeds":
-        batch["embeds"] = jnp.asarray(rng.standard_normal(
-            (B, 1, cfg.d_model)).astype(np.float32))
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((B, 1, cfg.d_model)).astype(np.float32)
+        )
     else:
         batch["tokens"] = jnp.zeros((B, 1), jnp.int32)
     logits, new_caches = serve(params, caches, batch)
     assert logits.shape == (B, cfg.vocab_size)
     assert np.isfinite(np.asarray(logits, np.float32)).all()
     # cache structure preserved
-    assert jax.tree_util.tree_structure(caches) == \
-        jax.tree_util.tree_structure(new_caches)
+    assert jax.tree_util.tree_structure(caches) == jax.tree_util.tree_structure(
+        new_caches
+    )
 
 
-@pytest.mark.parametrize("arch", ["h2o-danube-3-4b", "deepseek-v2-lite-16b",
-                                  "xlstm-125m", "jamba-1.5-large-398b"])
+@pytest.mark.parametrize(
+    "arch",
+    ["h2o-danube-3-4b", "deepseek-v2-lite-16b", "xlstm-125m", "jamba-1.5-large-398b"],
+)
 def test_decode_matches_teacher_forcing(arch, rng):
     """Token-by-token decode with caches must reproduce the teacher-forced
     forward logits — catches KV-cache / recurrent-state bugs."""
     import dataclasses
+
     from repro.models.model import forward, logits_fn
+
     cfg = get_config(arch).reduced()
     if cfg.input_kind == "embeds":
         pytest.skip("token parity test is for token models")
@@ -78,32 +98,33 @@ def test_decode_matches_teacher_forcing(arch, rng):
         # disable capacity dropping: teacher-forced MoE drops overflow
         # tokens while single-token decode never does (cap >= 1)
         cfg = dataclasses.replace(
-            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0)
+        )
     params = init_params(cfg, jax.random.PRNGKey(1))
     s = 12
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, s)), jnp.int32)
 
     pos = positions_for(cfg, 1, s)
     hidden, _, _ = forward(cfg, params, toks, pos, mode="train")
-    full_logits = logits_fn(cfg, params, hidden)          # [1, s, V]
+    full_logits = logits_fn(cfg, params, hidden)  # [1, s, V]
 
     serve = jax.jit(make_serve_step(cfg))
     caches = init_caches(cfg, 1, s + 1)
     step_logits = []
     for t in range(s):
-        batch = {"tokens": toks[:, t:t + 1],
-                 "pos": jnp.array([t], jnp.int32)}
+        batch = {"tokens": toks[:, t : t + 1], "pos": jnp.array([t], jnp.int32)}
         lg, caches = serve(params, caches, batch)
         step_logits.append(np.asarray(lg, np.float32))
-    step_logits = np.stack(step_logits, 1)                # [1, s, V]
-    np.testing.assert_allclose(step_logits,
-                               np.asarray(full_logits, np.float32),
-                               atol=2e-3, rtol=2e-3)
+    step_logits = np.stack(step_logits, 1)  # [1, s, V]
+    np.testing.assert_allclose(
+        step_logits, np.asarray(full_logits, np.float32), atol=2e-3, rtol=2e-3
+    )
 
 
 def test_prefill_matches_forward(rng):
     cfg = get_config("h2o-danube-3-4b").reduced()
     from repro.models.model import forward, logits_fn
+
     params = init_params(cfg, jax.random.PRNGKey(2))
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 16)), jnp.int32)
     prefill = jax.jit(make_prefill_step(cfg))
@@ -111,9 +132,12 @@ def test_prefill_matches_forward(rng):
     pos = positions_for(cfg, 1, 16)
     hidden, _, _ = forward(cfg, params, toks, pos, mode="train")
     full = logits_fn(cfg, params, hidden)
-    np.testing.assert_allclose(np.asarray(last, np.float32),
-                               np.asarray(full, np.float32)[:, -1],
-                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(
+        np.asarray(last, np.float32),
+        np.asarray(full, np.float32)[:, -1],
+        atol=2e-3,
+        rtol=2e-3,
+    )
     assert caches is not None
 
 
@@ -121,14 +145,15 @@ def test_sliding_window_restricts_attention(rng):
     """With window w, logits at position t must not depend on tokens
     earlier than t - w."""
     import dataclasses
+
     from repro.models.model import forward, logits_fn
-    cfg = dataclasses.replace(get_config("h2o-danube-3-4b").reduced(),
-                              sliding_window=4)
+
+    cfg = dataclasses.replace(get_config("h2o-danube-3-4b").reduced(), sliding_window=4)
     params = init_params(cfg, jax.random.PRNGKey(3))
     s = 16
     t1 = rng.integers(0, cfg.vocab_size, (1, s)).astype(np.int32)
     t2 = t1.copy()
-    t2[0, :4] = (t2[0, :4] + 7) % cfg.vocab_size          # perturb old tokens
+    t2[0, :4] = (t2[0, :4] + 7) % cfg.vocab_size  # perturb old tokens
     outs = []
     for t in (t1, t2):
         pos = positions_for(cfg, 1, s)
@@ -158,6 +183,6 @@ def test_loss_decreases_tiny_lm(rng):
     batch = _batch(cfg, rng, b=4, s=32)
     losses = []
     for _ in range(8):
-        state, metrics = step(state, batch)   # same batch -> must overfit
+        state, metrics = step(state, batch)  # same batch -> must overfit
         losses.append(float(metrics["loss"]))
     assert losses[-1] < losses[0] - 0.3, losses

@@ -1,22 +1,35 @@
 """RL substrate: synthetic volumes, environment semantics, DQN learning."""
+
 import numpy as np
 
 from repro.configs.adfll_dqn import DQNConfig
 from repro.core.erb import TaskTag, erb_init
 from repro.rl.agent import DQNAgent
 from repro.rl.env import LandmarkEnv
-from repro.rl.synth import (MODALITIES, ORIENTATIONS, PATHOLOGIES, all_tasks,
-                            make_volume, paper_eight_tasks, patient_split)
+from repro.rl.synth import (
+    MODALITIES,
+    ORIENTATIONS,
+    PATHOLOGIES,
+    all_tasks,
+    make_volume,
+    paper_eight_tasks,
+    patient_split,
+)
 
-CFG = DQNConfig(volume_shape=(16, 16, 16), box_size=(6, 6, 6),
-                conv_features=(4,), hidden=(32,), max_episode_steps=12,
-                batch_size=16, eps_decay_steps=50)
+CFG = DQNConfig(
+    volume_shape=(16, 16, 16),
+    box_size=(6, 6, 6),
+    conv_features=(4,),
+    hidden=(32,),
+    max_episode_steps=12,
+    batch_size=16,
+    eps_decay_steps=50,
+)
 
 
 def test_twenty_four_environments():
     tasks = all_tasks()
-    assert len(tasks) == len(MODALITIES) * len(ORIENTATIONS) * \
-        len(PATHOLOGIES) == 24
+    assert len(tasks) == len(MODALITIES) * len(ORIENTATIONS) * len(PATHOLOGIES) == 24
     assert len(set(t.name for t in tasks)) == 24
     assert len(paper_eight_tasks()) == 8
 
@@ -34,7 +47,7 @@ def test_volume_deterministic_and_orientation_consistent():
     t_co = TaskTag("t1", "coronal", "HGG")
     v1, l1 = make_volume(t_ax, 3, n=16)
     v2, l2 = make_volume(t_ax, 3, n=16)
-    np.testing.assert_array_equal(v1, v2)      # deterministic
+    np.testing.assert_array_equal(v1, v2)  # deterministic
     v3, l3 = make_volume(t_co, 3, n=16)
     # coronal is an axis permutation of the same anatomy
     assert v3.shape == v1.shape
@@ -42,8 +55,7 @@ def test_volume_deterministic_and_orientation_consistent():
 
 
 def test_modalities_differ():
-    vols = [make_volume(TaskTag(m, "axial", "HGG"), 1, n=16)[0]
-            for m in MODALITIES]
+    vols = [make_volume(TaskTag(m, "axial", "HGG"), 1, n=16)[0] for m in MODALITIES]
     for i in range(len(vols)):
         for j in range(i + 1, len(vols)):
             assert not np.allclose(vols[i], vols[j])
@@ -56,8 +68,7 @@ def test_env_reward_is_distance_decrease(rng):
     for a in range(6):
         acts = np.full(8, a, np.int32)
         new, r, done = env.step(locs, acts)
-        np.testing.assert_allclose(r, env.dist(locs) - env.dist(new),
-                                   atol=1e-5)
+        np.testing.assert_allclose(r, env.dist(locs) - env.dist(new), atol=1e-5)
     # observations centered correctly and padded at borders
     obs = env.observe(np.array([[0, 0, 0], [8, 8, 8]], np.int32))
     assert obs.shape == (2, 6, 6, 6)
@@ -89,8 +100,13 @@ def test_train_round_produces_shared_erb(rng):
     env = LandmarkEnv(vol, lm, CFG)
     agent = DQNAgent(1, CFG, seed=1)
     shared, loss = agent.train_round(
-        env, TaskTag("flair", "axial", "HGG"), incoming=(),
-        erb_capacity=512, share_size=64, train_steps=10)
+        env,
+        TaskTag("flair", "axial", "HGG"),
+        incoming=(),
+        erb_capacity=512,
+        share_size=64,
+        train_steps=10,
+    )
     assert 0 < shared.size <= 64
     assert shared.meta.source_agent == 1
     assert agent.rounds_done == 1

@@ -1,4 +1,5 @@
 """Beyond-paper: reward-weighted selective sharing (Rolnick-style)."""
+
 import numpy as np
 from hypothesis import given, settings
 from hypothesis import strategies as st
@@ -31,8 +32,7 @@ def test_reward_strategy_prefers_high_surprise():
     hits = 0
     trials = 50
     for s in range(trials):
-        shared = erb_share_slice(erb, 5, np.random.default_rng(s),
-                                 strategy="reward")
+        shared = erb_share_slice(erb, 5, np.random.default_rng(s), strategy="reward")
         hits += int((np.abs(shared.data["reward"]) > 1).sum())
     # uniform would pick ~10/60 * 5 = 0.83 surprising per share;
     # reward-weighted should pick far more
@@ -40,8 +40,11 @@ def test_reward_strategy_prefers_high_surprise():
 
 
 @settings(max_examples=20, deadline=None)
-@given(n=st.integers(2, 40), share=st.integers(1, 20),
-       strategy=st.sampled_from(["uniform", "reward"]))
+@given(
+    n=st.integers(2, 40),
+    share=st.integers(1, 20),
+    strategy=st.sampled_from(["uniform", "reward"]),
+)
 def test_share_strategies_preserve_invariants(n, share, strategy):
     rng = np.random.default_rng(0)
     erb = _erb_with_rewards(rng.standard_normal(n).tolist())

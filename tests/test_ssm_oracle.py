@@ -1,5 +1,6 @@
 """Recurrent-mixer oracles: the chunked/parallel training-mode scans must
 equal a naive per-step recurrence (the mathematical definition)."""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -37,8 +38,7 @@ def test_mamba_chunked_scan_matches_naive(rng, s, chunk):
     y, h_last = ssm._selective_scan_chunked(dt, b_seq, c_seq, xf, a, chunk)
     y_ref, h_ref = _naive_selective_scan(dt, b_seq, c_seq, xf, a)
     np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-4, rtol=1e-4)
-    np.testing.assert_allclose(np.asarray(h_last), h_ref, atol=1e-4,
-                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_last), h_ref, atol=1e-4, rtol=1e-4)
 
 
 def test_mamba_train_equals_stepwise_decode(rng):
@@ -53,12 +53,13 @@ def test_mamba_train_equals_stepwise_decode(rng):
     state = ssm.mamba_state_init(cfg, b, F32)
     outs = []
     for t in range(s):
-        y_t, state = ssm.mamba_apply(cfg, p, u[:, t:t + 1], mode="decode",
-                                     state=state)
+        y_t, state = ssm.mamba_apply(
+            cfg, p, u[:, t : t + 1], mode="decode", state=state
+        )
         outs.append(np.asarray(y_t, np.float32))
-    np.testing.assert_allclose(np.concatenate(outs, 1),
-                               np.asarray(y_train, np.float32),
-                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(
+        np.concatenate(outs, 1), np.asarray(y_train, np.float32), atol=2e-3, rtol=2e-3
+    )
 
 
 def test_mlstm_train_equals_stepwise_decode(rng):
@@ -71,12 +72,13 @@ def test_mlstm_train_equals_stepwise_decode(rng):
     state = ssm.mlstm_state_init(cfg, b, F32)
     outs = []
     for t in range(s):
-        y_t, state = ssm.mlstm_apply(cfg, p, u[:, t:t + 1], mode="decode",
-                                     state=state)
+        y_t, state = ssm.mlstm_apply(
+            cfg, p, u[:, t : t + 1], mode="decode", state=state
+        )
         outs.append(np.asarray(y_t, np.float32))
-    np.testing.assert_allclose(np.concatenate(outs, 1),
-                               np.asarray(y_train, np.float32),
-                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(
+        np.concatenate(outs, 1), np.asarray(y_train, np.float32), atol=2e-3, rtol=2e-3
+    )
 
 
 def test_slstm_train_equals_stepwise_decode(rng):
@@ -89,12 +91,13 @@ def test_slstm_train_equals_stepwise_decode(rng):
     state = ssm.slstm_state_init(cfg, b, F32)
     outs = []
     for t in range(s):
-        y_t, state = ssm.slstm_apply(cfg, p, u[:, t:t + 1], mode="decode",
-                                     state=state)
+        y_t, state = ssm.slstm_apply(
+            cfg, p, u[:, t : t + 1], mode="decode", state=state
+        )
         outs.append(np.asarray(y_t, np.float32))
-    np.testing.assert_allclose(np.concatenate(outs, 1),
-                               np.asarray(y_train, np.float32),
-                               atol=2e-3, rtol=2e-3)
+    np.testing.assert_allclose(
+        np.concatenate(outs, 1), np.asarray(y_train, np.float32), atol=2e-3, rtol=2e-3
+    )
 
 
 def test_causal_conv1d_state_handoff(rng):
@@ -106,7 +109,6 @@ def test_causal_conv1d_state_handoff(rng):
     state = jnp.zeros((b, k - 1, c), F32)
     outs = []
     for t in range(s):
-        y_t, state = ssm.causal_conv1d(x[:, t:t + 1], w, bias, state)
+        y_t, state = ssm.causal_conv1d(x[:, t : t + 1], w, bias, state)
         outs.append(np.asarray(y_t))
-    np.testing.assert_allclose(np.concatenate(outs, 1),
-                               np.asarray(y_full), atol=1e-5)
+    np.testing.assert_allclose(np.concatenate(outs, 1), np.asarray(y_full), atol=1e-5)

@@ -1,4 +1,5 @@
 """Substrate: optimizer, checkpointing, data pipeline, sharding rules."""
+
 import os
 
 import jax
@@ -7,15 +8,23 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import restore_pytree, save_pytree
-from repro.data.pipeline import (TokenStreamConfig, federated_shards,
-                                 lm_task_erb, token_batches)
-from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
-                               cosine_schedule, global_norm)
+from repro.data.pipeline import (
+    TokenStreamConfig,
+    federated_shards,
+    lm_task_erb,
+    token_batches,
+)
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+)
 
 
 def test_adamw_reduces_quadratic():
-    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
-                      total_steps=1000)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=1000)
     params = {"w": jnp.array([3.0, -2.0])}
     opt = adamw_init(cfg, params)
     for _ in range(50):
@@ -32,21 +41,25 @@ def test_adamw_clips_gradients():
 
 def test_cosine_schedule_shape():
     cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
-    lrs = [float(cosine_schedule(cfg, jnp.asarray(s)))
-           for s in [0, 5, 10, 55, 100]]
+    lrs = [float(cosine_schedule(cfg, jnp.asarray(s))) for s in [0, 5, 10, 55, 100]]
     assert lrs[0] == 0.0 and lrs[1] == pytest.approx(0.5)
     assert lrs[2] == pytest.approx(1.0)
     assert lrs[3] < 1.0 and lrs[4] == pytest.approx(0.0, abs=1e-6)
 
 
 def test_checkpoint_roundtrip(tmp_path):
-    tree = {"a": {"b": jnp.arange(6).reshape(2, 3).astype(jnp.float32)},
-            "c": jnp.ones((4,), jnp.int32)}
+    tree = {
+        "a": {"b": jnp.arange(6).reshape(2, 3).astype(jnp.float32)},
+        "c": jnp.ones((4,), jnp.int32),
+    }
     path = os.path.join(tmp_path, "ck.npz")
     save_pytree(path, tree)
     back = restore_pytree(path, tree)
-    for x, y in zip(jax.tree_util.tree_leaves(tree),
-                    jax.tree_util.tree_leaves(back)):
+    for x, y in zip(
+        jax.tree_util.tree_leaves(tree),
+        jax.tree_util.tree_leaves(back),
+        strict=True,
+    ):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
@@ -90,6 +103,7 @@ def test_lm_task_erb_wraps_batches():
 # ---------------------------------------------------------------------------
 def test_leaf_pspec_rules():
     from jax.sharding import PartitionSpec as P
+
     from repro.configs.base import get_config
     from repro.models.sharding import ShardingPolicy, leaf_pspec
 
@@ -97,34 +111,35 @@ def test_leaf_pspec_rules():
     pol = ShardingPolicy()
     cfg = get_config("qwen3-moe-235b-a22b")
     # axis size 1 divides everything -> template axes survive
-    assert leaf_pspec("groups/b0/mixer/wq/w", (94, 4096, 8192), mesh, pol,
-                      cfg) == P(None, "data", "model")
-    assert leaf_pspec("groups/b0/ffn/w1", (94, 128, 4096, 1536), mesh, pol,
-                      cfg) == P(None, "model", "data", None)
-    assert leaf_pspec("embed/tok", (151936, 4096), mesh, pol, cfg) == \
-        P("model", "data")
+    assert leaf_pspec("groups/b0/mixer/wq/w", (94, 4096, 8192), mesh, pol, cfg) == P(
+        None, "data", "model"
+    )
+    assert leaf_pspec("groups/b0/ffn/w1", (94, 128, 4096, 1536), mesh, pol, cfg) == P(
+        None, "model", "data", None
+    )
+    assert leaf_pspec("embed/tok", (151936, 4096), mesh, pol, cfg) == P(
+        "model", "data"
+    )
     # unknown leaves replicate
-    assert leaf_pspec("whatever/unknown", (3, 3), mesh, pol, cfg) == \
-        P(None, None)
+    assert leaf_pspec("whatever/unknown", (3, 3), mesh, pol, cfg) == P(None, None)
 
 
 def test_moe_local_equals_shard_map_on_one_device(rng):
     """moe_apply must agree between the local path and the shard_map path
     (1-device mesh)."""
     import jax.numpy as jnp
+
     from repro.configs.base import get_config
     from repro.models.model import init_params
     from repro.models.moe import moe_apply
 
     cfg = get_config("qwen3-moe-235b-a22b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
-    moe_p = jax.tree_util.tree_map(lambda x: x[0],
-                                   params["groups"]["b0"]["ffn"])
-    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)),
-                    jnp.float32)
+    moe_p = jax.tree_util.tree_map(lambda x: x[0], params["groups"]["b0"]["ffn"])
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
     y_local, aux_local = moe_apply(cfg, moe_p, x, mesh=None)
     mesh = jax.make_mesh((1, 1), ("data", "model"))
-    y_mesh, aux_mesh = moe_apply(cfg, moe_p, x, mesh=mesh,
-                                 batch_axes=("data",))
-    np.testing.assert_allclose(np.asarray(y_local), np.asarray(y_mesh),
-                               atol=1e-5, rtol=1e-5)
+    y_mesh, aux_mesh = moe_apply(cfg, moe_p, x, mesh=mesh, batch_axes=("data",))
+    np.testing.assert_allclose(
+        np.asarray(y_local), np.asarray(y_mesh), atol=1e-5, rtol=1e-5
+    )

@@ -1,17 +1,33 @@
 """End-to-end behaviour of the ADFLL system + comparison systems."""
+
 import numpy as np
 
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
-from repro.core.federated import (ADFLLSystem, CentralAggregationSystem,
-                                  evaluate_on_tasks, train_partial)
+from repro.core.federated import (
+    ADFLLSystem,
+    CentralAggregationSystem,
+    evaluate_on_tasks,
+    train_partial,
+)
 from repro.core.lifelong import LifelongTrainer
 from repro.rl.synth import paper_eight_tasks, patient_split
 
-DQN = DQNConfig(volume_shape=(16, 16, 16), box_size=(6, 6, 6),
-                conv_features=(4,), hidden=(32,), max_episode_steps=12,
-                batch_size=16, eps_decay_steps=100)
-SYS = ADFLLConfig(rounds=2, train_steps_per_round=15, erb_capacity=512,
-                  erb_share_size=64, hub_sync_period=0.25)
+DQN = DQNConfig(
+    volume_shape=(16, 16, 16),
+    box_size=(6, 6, 6),
+    conv_features=(4,),
+    hidden=(32,),
+    max_episode_steps=12,
+    batch_size=16,
+    eps_decay_steps=100,
+)
+SYS = ADFLLConfig(
+    rounds=2,
+    train_steps_per_round=15,
+    erb_capacity=512,
+    erb_share_size=64,
+    hub_sync_period=0.25,
+)
 TASKS = paper_eight_tasks()
 TRAIN_P, TEST_P = patient_split(16)
 
@@ -27,7 +43,7 @@ def test_adfll_deployment_runs_asynchronously():
     # experiences propagated: someone trained on incoming ERBs
     assert any(r.n_incoming > 0 for r in sysm.history)
     # hubs hold the shared database
-    assert len(sysm.network.all_known_erbs()) >= SYS.n_agents
+    assert len(sysm.network.all_known("erb")) >= SYS.n_agents
 
 
 def test_adfll_heterogeneous_speed_speedup():
@@ -37,8 +53,7 @@ def test_adfll_heterogeneous_speed_speedup():
     end = sysm.run()
     per_agent_end = {}
     for r in sysm.history:
-        per_agent_end[r.agent_id] = max(
-            per_agent_end.get(r.agent_id, 0.0), r.end)
+        per_agent_end[r.agent_id] = max(per_agent_end.get(r.agent_id, 0.0), r.end)
     # total makespan = slowest agent; fast agents idle-free finish earlier
     assert per_agent_end[2] <= per_agent_end[0]
     assert end >= max(per_agent_end.values())
@@ -48,13 +63,13 @@ def test_agent_addition_catches_up():
     """Addition ablation: a late joiner can learn from the accumulated
     hub database within its first round."""
     sysm = ADFLLSystem(SYS, DQN, TASKS, TRAIN_P, seed=2)
-    sysm.run(until=0.6)                       # some rounds complete
+    sysm.run(until=0.6)  # some rounds complete
     sysm.network.sync()
     new_id = sysm.add_agent(speed=2.0)
     sysm.run()
     recs = [r for r in sysm.history if r.agent_id == new_id]
     assert recs, "new agent never trained"
-    assert recs[0].n_incoming > 0             # caught up from the database
+    assert recs[0].n_incoming > 0  # caught up from the database
 
 
 def test_evaluation_and_baselines_tiny():
@@ -70,8 +85,12 @@ def test_central_aggregation_averages_weights():
     p0 = sysm.agents[0].params
     p1 = sysm.agents[1].params
     import jax
-    for a, b in zip(jax.tree_util.tree_leaves(p0),
-                    jax.tree_util.tree_leaves(p1)):
+
+    for a, b in zip(
+        jax.tree_util.tree_leaves(p0),
+        jax.tree_util.tree_leaves(p1),
+        strict=True,
+    ):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
@@ -80,6 +99,7 @@ def test_lifelong_trainer_is_model_agnostic():
     architecture-agnosticism claim."""
     import jax
     import jax.numpy as jnp
+
     from repro.configs.base import get_config
     from repro.data.pipeline import TokenStreamConfig, lm_task_erb
     from repro.launch.specs import opt_cfg_for
@@ -91,8 +111,7 @@ def test_lifelong_trainer_is_model_agnostic():
     raw_step = jax.jit(make_train_step(cfg, opt))
 
     def np_step(state, batch):
-        batch = {k: jnp.asarray(v % cfg.vocab_size)
-                 for k, v in batch.items()}
+        batch = {k: jnp.asarray(v % cfg.vocab_size) for k, v in batch.items()}
         return raw_step(state, batch)
 
     sc = TokenStreamConfig(cfg.vocab_size, seq_len=32, batch_size=4)

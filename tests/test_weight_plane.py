@@ -1,5 +1,6 @@
 """Weight plane: staleness weighting, hub-side dedup/retention, transport
 under dropout and hub failure, and deterministic hybrid-sharing runs."""
+
 import jax
 import numpy as np
 import pytest
@@ -10,9 +11,14 @@ from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
 from repro.core.federated import ADFLLSystem
 from repro.core.hub import Hub, sync_hubs
 from repro.core.network import Network
-from repro.core.plane import (WeightPlane, WeightSnapshot, mix_params,
-                              new_snap_id, staleness_alphas,
-                              staleness_weight)
+from repro.core.plane import (
+    WeightPlane,
+    WeightSnapshot,
+    mix_params,
+    new_snap_id,
+    staleness_alphas,
+    staleness_weight,
+)
 from repro.rl.synth import paper_eight_tasks, patient_split
 
 FLAGS = ["constant", "hinge", "poly"]
@@ -20,8 +26,7 @@ FLAGS = ["constant", "hinge", "poly"]
 
 def _snap(agent_id, round_idx, value=1.0, sim_time=0.0):
     params = {"w": np.full((3,), value, np.float32)}
-    return WeightSnapshot(new_snap_id(), agent_id, round_idx, sim_time,
-                          params)
+    return WeightSnapshot(new_snap_id(), agent_id, round_idx, sim_time, params)
 
 
 # ---------------------------------------------------------------------------
@@ -41,8 +46,7 @@ def test_staleness_weight_fresh_is_one(flag):
 
 
 @settings(max_examples=30, deadline=None)
-@given(d1=st.integers(0, 30), d2=st.integers(0, 30),
-       flag=st.sampled_from(FLAGS))
+@given(d1=st.integers(0, 30), d2=st.integers(0, 30), flag=st.sampled_from(FLAGS))
 def test_staleness_weight_monotone_nonincreasing(d1, d2, flag):
     lo, hi = min(d1, d2), max(d1, d2)
     assert staleness_weight(hi, flag) <= staleness_weight(lo, flag)
@@ -62,8 +66,8 @@ def test_staleness_weight_unknown_flag_raises():
 def test_staleness_alphas_orders_by_round():
     snaps = [_snap(0, 0), _snap(1, 4)]
     a = staleness_alphas(snaps, 4, alpha=0.5, flag="poly", poly_a=0.5)
-    assert a[1] == pytest.approx(0.5)          # fresh peer: full alpha
-    assert a[0] == pytest.approx(0.5 * 5 ** -0.5)
+    assert a[1] == pytest.approx(0.5)  # fresh peer: full alpha
+    assert a[0] == pytest.approx(0.5 * 5**-0.5)
 
 
 def test_staleness_alphas_time_clock_ignores_local_rounds():
@@ -71,13 +75,15 @@ def test_staleness_alphas_time_clock_ignores_local_rounds():
     read as stale: the shared-clock mode keys on push sim_time instead."""
     fast_fresh = _snap(0, round_idx=10, sim_time=4.0)
     slow_stale = _snap(1, round_idx=1, sim_time=0.0)
-    a = staleness_alphas([fast_fresh, slow_stale], 4.0, alpha=0.5,
-                         flag="poly", poly_a=0.5, clock="time")
-    assert a[0] == pytest.approx(0.5)          # pushed just now: full alpha
-    assert a[1] == pytest.approx(0.5 * 5 ** -0.5)
+    a = staleness_alphas(
+        [fast_fresh, slow_stale], 4.0, alpha=0.5, flag="poly", poly_a=0.5, clock="time"
+    )
+    assert a[0] == pytest.approx(0.5)  # pushed just now: full alpha
+    assert a[1] == pytest.approx(0.5 * 5**-0.5)
     # round clock would invert that judgement (delta 10-4<0 vs 4-1)
-    b = staleness_alphas([fast_fresh, slow_stale], 4, alpha=0.5,
-                         flag="poly", poly_a=0.5, clock="round")
+    b = staleness_alphas(
+        [fast_fresh, slow_stale], 4, alpha=0.5, flag="poly", poly_a=0.5, clock="round"
+    )
     assert b[0] > b[1]  # literal FedAsync counters: kept as an option
 
 
@@ -89,10 +95,8 @@ def test_mix_params_convex_combination():
     out = mix_params(params, [_snap(1, 0, value=2.0)], [0.25])
     np.testing.assert_allclose(out["w"], 0.5)
     # alpha=0 keeps params, alpha=1 adopts the peer wholesale
-    np.testing.assert_allclose(
-        mix_params(params, [_snap(1, 0, 2.0)], [0.0])["w"], 0.0)
-    np.testing.assert_allclose(
-        mix_params(params, [_snap(1, 0, 2.0)], [1.0])["w"], 2.0)
+    np.testing.assert_allclose(mix_params(params, [_snap(1, 0, 2.0)], [0.0])["w"], 0.0)
+    np.testing.assert_allclose(mix_params(params, [_snap(1, 0, 2.0)], [1.0])["w"], 2.0)
 
 
 def test_mix_params_stalest_first_order():
@@ -107,8 +111,14 @@ def test_mix_params_stalest_first_order():
 
 def test_agent_mix_params_skips_own_snapshot():
     from repro.rl.agent import DQNAgent
-    dqn = DQNConfig(volume_shape=(12, 12, 12), box_size=(4, 4, 4),
-                    conv_features=(2,), hidden=(8,), batch_size=4)
+
+    dqn = DQNConfig(
+        volume_shape=(12, 12, 12),
+        box_size=(4, 4, 4),
+        conv_features=(2,),
+        hidden=(8,),
+        batch_size=4,
+    )
     ag = DQNAgent(7, dqn, seed=0)
     own = WeightSnapshot(new_snap_id(), 7, 0, 0.0, ag.params)
     before = jax.tree_util.tree_leaves(ag.params)[0]
@@ -128,7 +138,7 @@ def test_weight_plane_keeps_newest_versions_per_agent():
     assert plane.admit(store, s0)
     assert plane.admit(store, s1)
     assert plane.admit(store, s2)
-    assert set(store) == {s1.snap_id, s2.snap_id}   # s0 evicted
+    assert set(store) == {s1.snap_id, s2.snap_id}  # s0 evicted
 
 
 def test_weight_plane_rejects_stale_reinsertion():
@@ -138,8 +148,8 @@ def test_weight_plane_rejects_stale_reinsertion():
     old, new = _snap(0, 0), _snap(0, 3)
     assert plane.admit(store, old)
     assert plane.admit(store, new)
-    assert not plane.admit(store, old)              # stale: refused
-    assert not plane.admit(store, new)              # duplicate: refused
+    assert not plane.admit(store, old)  # stale: refused
+    assert not plane.admit(store, new)  # duplicate: refused
     assert set(store) == {new.snap_id}
 
 
@@ -158,8 +168,11 @@ def test_weight_plane_sync_replicates_across_hubs():
 # network transport: dropout + hub failure
 # ---------------------------------------------------------------------------
 def _weight_net(n_hubs=2, dropout=0.0):
-    net = Network(hubs=[Hub(i) for i in range(n_hubs)], dropout=dropout,
-                  rng=np.random.default_rng(0))
+    net = Network(
+        hubs=[Hub(i) for i in range(n_hubs)],
+        dropout=dropout,
+        rng=np.random.default_rng(0),
+    )
     net.register_plane(WeightPlane(max_versions=2))
     return net
 
@@ -182,7 +195,7 @@ def test_weight_push_refused_for_stale_snapshot():
     net.attach_agent(0, 0)
     old, new = _snap(0, 0), _snap(0, 3)
     assert net.agent_push(0, new, plane="weights")
-    assert not net.agent_push(0, old, plane="weights")   # stale: refused
+    assert not net.agent_push(0, old, plane="weights")  # stale: refused
     assert net.plane_pushed == {"weights": 1}
     assert net.n_pushed == 1
 
@@ -200,39 +213,53 @@ def test_weight_plane_survives_hub_failure_when_replicated():
     net.attach_agent(0, 0)
     replicated = _snap(0, 0)
     net.agent_push(0, replicated, plane="weights")
-    net.sync()                                      # now on both hubs
+    net.sync()  # now on both hubs
     unique = _snap(0, 1)
-    net.agent_push(0, unique, plane="weights")      # hub 0 only
+    net.agent_push(0, unique, plane="weights")  # hub 0 only
     net.fail_hub(0)
     known = net.all_known("weights")
-    assert replicated.snap_id in known              # survived
-    assert unique.snap_id not in known              # lost with hub 0
-    assert net.agent_hub[0] == 1                    # agent re-homed
+    assert replicated.snap_id in known  # survived
+    assert unique.snap_id not in known  # lost with hub 0
+    assert net.agent_hub[0] == 1  # agent re-homed
 
 
 def test_erb_and_weight_planes_are_isolated():
     net = _weight_net()
     net.attach_agent(0, 0)
     net.agent_push(0, _snap(0, 0), plane="weights")
-    assert net.all_known_erbs() == set()
+    assert net.all_known("erb") == set()
     assert len(net.all_known("weights")) == 1
 
 
 # ---------------------------------------------------------------------------
 # end-to-end: hybrid sharing through the scheduler, deterministic
 # ---------------------------------------------------------------------------
-TINY_DQN = DQNConfig(volume_shape=(12, 12, 12), box_size=(4, 4, 4),
-                     conv_features=(2,), hidden=(8,), batch_size=4,
-                     max_episode_steps=4, eps_decay_steps=20)
+TINY_DQN = DQNConfig(
+    volume_shape=(12, 12, 12),
+    box_size=(4, 4, 4),
+    conv_features=(2,),
+    hidden=(8,),
+    batch_size=4,
+    max_episode_steps=4,
+    eps_decay_steps=20,
+)
 
 
 def _tiny_sys(planes, seed=0, n_agents=2):
-    cfg = ADFLLConfig(n_agents=n_agents, n_hubs=1, agent_hub=(0,) * n_agents,
-                      agent_speed=(1.0, 2.0)[:n_agents], rounds=2,
-                      erb_capacity=128, erb_share_size=16,
-                      train_steps_per_round=3, hub_sync_period=0.5,
-                      share_planes=planes, mix_alpha=0.5,
-                      staleness_flag="poly")
+    cfg = ADFLLConfig(
+        n_agents=n_agents,
+        n_hubs=1,
+        agent_hub=(0,) * n_agents,
+        agent_speed=(1.0, 2.0)[:n_agents],
+        rounds=2,
+        erb_capacity=128,
+        erb_share_size=16,
+        train_steps_per_round=3,
+        hub_sync_period=0.5,
+        share_planes=planes,
+        mix_alpha=0.5,
+        staleness_flag="poly",
+    )
     tasks = paper_eight_tasks()[:2]
     train_p, _ = patient_split(8)
     return ADFLLSystem(cfg, TINY_DQN, tasks, train_p, seed=seed)
@@ -242,17 +269,17 @@ def test_hybrid_run_mixes_weights_and_shares_erbs():
     sysm = _tiny_sys(("erb", "weights"))
     sysm.run()
     assert all(a.rounds_done >= 2 for a in sysm.agents.values())
-    assert any(r.n_mixed > 0 for r in sysm.history)     # weights flowed
+    assert any(r.n_mixed > 0 for r in sysm.history)  # weights flowed
     assert any(r.n_incoming > 0 for r in sysm.history)  # ERBs flowed
     assert len(sysm.network.all_known("weights")) > 0
-    assert len(sysm.network.all_known_erbs()) > 0
+    assert len(sysm.network.all_known("erb")) > 0
 
 
 def test_weight_only_run_shares_no_erbs():
     sysm = _tiny_sys(("weights",))
     sysm.run()
     assert all(r.n_incoming == 0 for r in sysm.history)
-    assert sysm.network.all_known_erbs() == set()
+    assert sysm.network.all_known("erb") == set()
     assert any(r.n_mixed > 0 for r in sysm.history)
 
 
@@ -260,12 +287,15 @@ def test_hybrid_run_deterministic_under_fixed_seed():
     def fingerprint():
         sysm = _tiny_sys(("erb", "weights"), seed=3)
         sysm.run()
-        hist = [(r.agent_id, r.round_idx, r.task, round(r.end, 9),
-                 r.n_incoming, r.n_mixed) for r in sysm.history]
-        leaves = [np.asarray(x).sum()
-                  for a in sorted(sysm.agents)
-                  for x in jax.tree_util.tree_leaves(
-                      sysm.agents[a].params)]
+        hist = [
+            (r.agent_id, r.round_idx, r.task, round(r.end, 9), r.n_incoming, r.n_mixed)
+            for r in sysm.history
+        ]
+        leaves = [
+            np.asarray(x).sum()
+            for a in sorted(sysm.agents)
+            for x in jax.tree_util.tree_leaves(sysm.agents[a].params)
+        ]
         return hist, np.asarray(leaves)
 
     h1, p1 = fingerprint()
