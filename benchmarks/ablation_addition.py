@@ -1,67 +1,31 @@
 """Fig 4 reproduction: addition-of-agents ablation.
 
-4 -> 8 -> 12 -> 16 agents over 4 rounds, 75% communication dropout,
-synchronous protocol (as the paper simulated on the DGX-1), evaluated on
-the top-left-ventricle task across all 24 imaging environments. Expected
-qualitative result: average error decreases round over round, and newly
-added agents catch up within one round via the hub database.
+4 -> 8 -> 12 -> 16 agents under 75% communication dropout, evaluated on
+the task suite at every churn boundary.  The churn is a declarative
+schedule inside the ``churn_addition_fig4`` scenario (timed
+``ChurnEvent`` additions on the asynchronous scheduler), so this module
+only runs the scenario and prints its evaluation curve.  Expected
+qualitative result: average error decreases phase over phase, and newly
+added agents catch up via the hub database.
 """
+
 from __future__ import annotations
 
-import numpy as np
+from repro import experiments
 
-from repro.configs.adfll_dqn import DQNConfig
-from repro.core.federated import env_for, evaluate_on_tasks
-from repro.core.hub import Hub
-from repro.core.network import Network
-from repro.rl.agent import DQNAgent
-from repro.rl.synth import all_tasks, patient_split
-
-DQN = DQNConfig(volume_shape=(16, 16, 16), box_size=(6, 6, 6),
-                conv_features=(4, 8), hidden=(48,), max_episode_steps=16,
-                batch_size=24, eps_decay_steps=200)
+SCENARIO = "churn_addition_fig4"
 
 
-def run(seed: int = 0, fast: bool = False, dropout: float = 0.75,
-        schedule=(4, 8, 12, 16)):
-    tasks = all_tasks()
-    train_p, test_p = patient_split(40)
-    steps = 15 if fast else 40
-    rng = np.random.default_rng(seed)
-    net = Network(hubs=[Hub(i) for i in range(3)], dropout=dropout,
-                  rng=np.random.default_rng(seed + 1))
-    agents = []
-
-    def new_agent(i):
-        a = DQNAgent(i, DQN, seed=seed + i)
-        net.attach_agent(i)
-        return a
-
-    per_round = []
-    task_cursor = 0
-    for rnd, n_target in enumerate(schedule):
-        while len(agents) < n_target:
-            agents.append(new_agent(len(agents)))
-        # synchronous round: every agent trains one task + shares
-        for a in agents:
-            task = tasks[task_cursor % len(tasks)]
-            task_cursor += 1
-            env = env_for(task, int(rng.choice(train_p)), DQN)
-            incoming = net.agent_pull(a.agent_id, a.seen_erb_ids)
-            shared, _ = a.train_round(env, task, incoming,
-                                      erb_capacity=1024, share_size=128,
-                                      train_steps=steps)
-            net.agent_push(a.agent_id, shared)
-        net.sync()
-        errs = [np.mean(list(evaluate_on_tasks(
-            a, tasks[: (4 if fast else 8)], test_p, DQN).values()))
-            for a in agents]
-        per_round.append(float(np.mean(errs)))
-        print(f"round {rnd + 1}: agents={len(agents)} "
-              f"avg_err={per_round[-1]:.2f} dropout={dropout}")
-    print("derived,errors_per_round=" +
-          ";".join(f"{e:.2f}" for e in per_round))
-    return per_round
+def run(seed: int = 0, fast: bool = False):
+    report = experiments.run(SCENARIO, fast=fast, seed=seed)
+    for i, p in enumerate(report.eval_curve):
+        print(
+            f"phase {i + 1}: t={p.t:.2f} agents={p.n_agents} "
+            f"avg_err={p.mean_err:.2f}"
+        )
+    errs = [p.mean_err for p in report.eval_curve]
+    print("derived,errors_per_phase=" + ";".join(f"{e:.2f}" for e in errs))
+    return errs
 
 
 if __name__ == "__main__":

@@ -1,64 +1,35 @@
 """Fig 5 reproduction: deletion-of-agents ablation.
 
-24 -> 12 -> 6 -> 3 -> 1 agents over 5 rounds, 75% dropout. Expected
+24 -> 12 -> 6 -> 3 -> 1 agents under 75% dropout, evaluated at every
+churn boundary.  The deletions are a declarative schedule inside the
+``churn_deletion_fig5`` scenario (timed ``ChurnEvent`` removals — the
+newest joiners retire first, their ERBs staying on the hubs).  Expected
 qualitative result: average error keeps decreasing even as agents leave —
-the collective knowledge lives in the hub ERB database, not in the agents.
+the collective knowledge lives in the hub ERB database, not in the
+agents.
 """
+
 from __future__ import annotations
 
-import numpy as np
+from repro import experiments
 
-from repro.configs.adfll_dqn import DQNConfig
-from repro.core.federated import env_for, evaluate_on_tasks
-from repro.core.hub import Hub
-from repro.core.network import Network
-from repro.rl.agent import DQNAgent
-from repro.rl.synth import all_tasks, patient_split
-
-DQN = DQNConfig(volume_shape=(16, 16, 16), box_size=(6, 6, 6),
-                conv_features=(4, 8), hidden=(48,), max_episode_steps=16,
-                batch_size=24, eps_decay_steps=200)
+SCENARIO = "churn_deletion_fig5"
 
 
-def run(seed: int = 0, fast: bool = False, dropout: float = 0.75,
-        schedule=(24, 12, 6, 3, 1)):
-    tasks = all_tasks()
-    train_p, test_p = patient_split(40)
-    steps = 12 if fast else 30
-    rng = np.random.default_rng(seed)
-    net = Network(hubs=[Hub(i) for i in range(3)], dropout=dropout,
-                  rng=np.random.default_rng(seed + 1))
-    agents = [DQNAgent(i, DQN, seed=seed + i) for i in range(schedule[0])]
-    for a in agents:
-        net.attach_agent(a.agent_id)
-
-    per_round = []
-    task_cursor = 0
-    for rnd, n_target in enumerate(schedule):
-        # delete agents down to the target (their ERBs stay on the hubs)
-        while len(agents) > n_target:
-            gone = agents.pop()
-            net.detach_agent(gone.agent_id)
-        for a in agents:
-            task = tasks[task_cursor % len(tasks)]
-            task_cursor += 1
-            env = env_for(task, int(rng.choice(train_p)), DQN)
-            incoming = net.agent_pull(a.agent_id, a.seen_erb_ids)
-            shared, _ = a.train_round(env, task, incoming,
-                                      erb_capacity=1024, share_size=128,
-                                      train_steps=steps)
-            net.agent_push(a.agent_id, shared)
-        net.sync()
-        errs = [np.mean(list(evaluate_on_tasks(
-            a, tasks[: (4 if fast else 8)], test_p, DQN).values()))
-            for a in agents]
-        per_round.append(float(np.mean(errs)))
-        print(f"round {rnd + 1}: agents={len(agents)} "
-              f"avg_err={per_round[-1]:.2f} "
-              f"erbs_in_system={len(net.all_known('erb'))}")
-    print("derived,errors_per_round=" +
-          ";".join(f"{e:.2f}" for e in per_round))
-    return per_round
+def run(seed: int = 0, fast: bool = False):
+    report = experiments.run(SCENARIO, fast=fast, seed=seed)
+    for i, p in enumerate(report.eval_curve):
+        print(
+            f"phase {i + 1}: t={p.t:.2f} agents={p.n_agents} "
+            f"avg_err={p.mean_err:.2f}"
+        )
+    errs = [p.mean_err for p in report.eval_curve]
+    print(
+        "derived,errors_per_phase="
+        + ";".join(f"{e:.2f}" for e in errs)
+        + f",erbs_in_system={report.records_known.get('erb', 0)}"
+    )
+    return errs
 
 
 if __name__ == "__main__":

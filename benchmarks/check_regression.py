@@ -1,18 +1,20 @@
 """Benchmark regression gate for CI.
 
 Compares a freshly produced ``BENCH_*.json`` (written by a benchmark's
-``--json`` flag) against the baseline checked in under
-``benchmarks/baselines/``: the run fails when any config's mean distance
-error regresses by more than ``--tol`` (relative) AND more than
-``--abs-floor`` voxels (absolute — small baselines would otherwise turn
-float jitter into failures).  Configs present only in the current run
-(newly added benchmarks) pass; configs missing from the current run fail.
+``--json`` flag or ``python -m repro.experiments --json``) against the
+baseline checked in under ``benchmarks/baselines/``: the run fails when
+any config's mean distance error regresses by more than ``--tol``
+(relative) AND more than ``--abs-floor`` voxels (absolute — small
+baselines would otherwise turn float jitter into failures).  Configs
+present only in the current run (newly added benchmarks) pass; configs
+missing from the current run fail.
 
     python -m benchmarks.check_regression BASELINE CURRENT \
         [--tol 0.2] [--abs-floor 0.75]
 
 Exit code 0 = within tolerance, 1 = regression (or malformed input).
 """
+
 from __future__ import annotations
 
 import argparse
@@ -22,8 +24,7 @@ import sys
 METRIC = "mean_dist_err"
 
 
-def compare(baseline: dict, current: dict, *, tol: float,
-            abs_floor: float) -> list:
+def compare(baseline: dict, current: dict, *, tol: float, abs_floor: float) -> list:
     """Returns a list of human-readable failure strings (empty = pass)."""
     failures = []
     base_cfgs = baseline.get("configs", {})
@@ -42,7 +43,8 @@ def compare(baseline: dict, current: dict, *, tol: float,
         if c > b * (1.0 + tol) and c > b + abs_floor:
             failures.append(
                 f"{name}: {METRIC} {c:.3f} vs baseline {b:.3f} "
-                f"(>{tol:.0%} worse and >+{abs_floor} absolute)")
+                f"(>{tol:.0%} worse and >+{abs_floor} absolute)"
+            )
         else:
             print(f"ok {name}: {METRIC} {c:.3f} (baseline {b:.3f})")
     return failures
@@ -52,17 +54,24 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("baseline", help="checked-in benchmarks/baselines/*.json")
     ap.add_argument("current", help="freshly written BENCH_*.json")
-    ap.add_argument("--tol", type=float, default=0.20,
-                    help="max relative regression of mean distance error")
-    ap.add_argument("--abs-floor", type=float, default=0.75,
-                    help="regressions below this absolute delta never fail")
+    ap.add_argument(
+        "--tol",
+        type=float,
+        default=0.20,
+        help="max relative regression of mean distance error",
+    )
+    ap.add_argument(
+        "--abs-floor",
+        type=float,
+        default=0.75,
+        help="regressions below this absolute delta never fail",
+    )
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.current) as f:
         current = json.load(f)
-    failures = compare(baseline, current, tol=args.tol,
-                       abs_floor=args.abs_floor)
+    failures = compare(baseline, current, tol=args.tol, abs_floor=args.abs_floor)
     for msg in failures:
         print(f"REGRESSION {msg}", file=sys.stderr)
     return 1 if failures else 0

@@ -6,76 +6,58 @@ Columns: Agent X (all-knowing, 1 round), Agent Y (partially-knowing,
 Euclidean distance (voxels, synthetic volumes) on held-out patients over
 the 8 task-environments; paired t-tests as in the paper.
 
+Every system is constructed through the declarative scenario registry
+(``repro.experiments``): the ADFLL deployment is ``paper_fig2`` and the
+Table-1 baseline rows are the ``baseline_*`` scenarios, so this module
+is scenario selection + reporting only.
+
 Validation target (DESIGN.md §6): the *orderings* —
 best-ADFLL <= AgentX < AgentM << AgentY — and significance vs Agent Y.
 """
+
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks.stats import paired_ttest
-from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
-from repro.core.federated import (
-    ADFLLSystem,
-    evaluate_on_tasks,
-    train_all_knowing,
-    train_partial,
-    train_sequential_ll,
-)
-from repro.rl.synth import paper_eight_tasks, patient_split
+from repro import experiments
 
-DQN = DQNConfig(volume_shape=(20, 20, 20), box_size=(8, 8, 8),
-                conv_features=(4, 8), hidden=(64,), max_episode_steps=24,
-                batch_size=32, eps_decay_steps=300, target_update=40)
-SYS = ADFLLConfig(rounds=3, train_steps_per_round=80, erb_capacity=2048,
-                  erb_share_size=256, hub_sync_period=0.2)
+# label -> (registered scenario, seed offset kept from the classic script)
+BASELINES = {
+    "AgentX": ("baseline_all_knowing", 100),
+    "AgentY": ("baseline_partial", 200),
+    "AgentM": ("baseline_sequential", 300),
+}
 
 
 def run(seed: int = 0, fast: bool = False):
-    tasks = paper_eight_tasks()
-    train_p, test_p = patient_split(40)
-    steps = 20 if fast else SYS.train_steps_per_round
-    sys_cfg = ADFLLConfig(rounds=SYS.rounds, train_steps_per_round=steps,
-                          erb_capacity=SYS.erb_capacity,
-                          erb_share_size=SYS.erb_share_size,
-                          hub_sync_period=SYS.hub_sync_period)
-
-    sysm = ADFLLSystem(sys_cfg, DQN, tasks, train_p, seed=seed)
-    makespan = sysm.run()
-
-    agent_x = train_all_knowing(DQN, tasks, train_p,
-                                steps_per_task=steps, seed=seed + 100)
-    agent_y = train_partial(DQN, tasks[0], train_p, steps=steps,
-                            seed=seed + 200)
-    agent_m = train_sequential_ll(DQN, tasks, train_p,
-                                  steps_per_round=steps, seed=seed + 300)
-
-    cols = {"AgentX": agent_x, "AgentY": agent_y, "AgentM": agent_m}
-    for aid, ag in sorted(sysm.agents.items()):
-        cols[f"Agent{aid + 1}"] = ag
+    adfll = experiments.run("paper_fig2", fast=fast, seed=seed)
 
     table = {}
-    for name, ag in cols.items():
-        table[name] = evaluate_on_tasks(ag, tasks, test_p, DQN)
+    for scenario, offset in BASELINES.values():
+        report = experiments.run(scenario, fast=fast, seed=seed + offset)
+        table.update(report.task_errors)
+    table.update(adfll.task_errors)  # Agent1..Agent4
 
     # ---- print Table 1 ----
-    names = list(cols)
+    names = [*BASELINES, *sorted(adfll.task_errors)]
+    task_names = list(next(iter(table.values())))
     print("task," + ",".join(names))
-    for t in tasks:
-        print(t.name + "," + ",".join(f"{table[n][t.name]:.2f}"
-                                      for n in names))
+    for t in task_names:
+        print(t + "," + ",".join(f"{table[n][t]:.2f}" for n in names))
     means = {n: float(np.mean(list(table[n].values()))) for n in names}
     print("mean," + ",".join(f"{means[n]:.2f}" for n in names))
 
-    per_task = {n: [table[n][t.name] for t in tasks] for n in names}
-    best_adfll = min((n for n in names if n.startswith("Agent") and
-                      n[-1].isdigit()), key=lambda n: means[n])
+    per_task = {n: [table[n][t] for t in task_names] for n in names}
+    best_adfll = min(adfll.task_errors, key=lambda n: means[n])
     for ref in ("AgentX", "AgentM", "AgentY"):
         t_stat, p = paired_ttest(per_task[ref], per_task[best_adfll])
         print(f"ttest,{best_adfll}_vs_{ref},t={t_stat:.2f},p={p:.3f}")
-    print(f"derived,makespan_sim={makespan:.2f},"
-          f"rounds={len(sysm.history)},"
-          f"erbs_in_system={len(sysm.network.all_known('erb'))}")
+    print(
+        f"derived,makespan_sim={adfll.makespan:.2f},"
+        f"rounds={adfll.n_rounds},"
+        f"erbs_in_system={adfll.records_known.get('erb', 0)}"
+    )
     return means, best_adfll
 
 

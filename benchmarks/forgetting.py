@@ -8,6 +8,7 @@ regression on task A.
 
     forgetting = err_A(after B) - err_A(after A)
 """
+
 from __future__ import annotations
 
 import numpy as np
@@ -18,13 +19,18 @@ from repro.core.federated import env_for
 from repro.rl.agent import DQNAgent
 from repro.rl.synth import paper_eight_tasks, patient_split
 
-DQN = DQNConfig(volume_shape=(16, 16, 16), box_size=(6, 6, 6),
-                conv_features=(4, 8), hidden=(48,), max_episode_steps=16,
-                batch_size=24, eps_decay_steps=200)
+DQN = DQNConfig(
+    volume_shape=(16, 16, 16),
+    box_size=(6, 6, 6),
+    conv_features=(4, 8),
+    hidden=(48,),
+    max_episode_steps=16,
+    batch_size=24,
+    eps_decay_steps=200,
+)
 
 
-def _train_task_chain(replay: bool, steps: int, seed: int = 0,
-                      n_tasks: int = 4):
+def _train_task_chain(replay: bool, steps: int, seed: int = 0, n_tasks: int = 4):
     """Train sequentially over n_tasks; return task-0 error after task 0
     and after the final task (drift accumulates over the chain)."""
     tasks = paper_eight_tasks()[:n_tasks]
@@ -38,7 +44,7 @@ def _train_task_chain(replay: bool, steps: int, seed: int = 0,
         env = env_for(task, int(rng.choice(train_p)), DQN)
         erb = erb_init(1024, DQN.box_size, task=task)
         agent.collect(env, erb, n_episodes=24)
-        agent.train_steps(steps, erb)        # personal replay iff enabled
+        agent.train_steps(steps, erb)  # personal replay iff enabled
         if replay:
             agent.personal_erbs.append(erb)
         if i == 0:
@@ -54,17 +60,22 @@ def run(fast: bool = False, seeds=(0, 1)):
     for replay in (False, True):
         f = []
         for s in seeds:
-            before, after = _train_task_chain(replay, steps, seed=s,
-                                              n_tasks=n_tasks)
+            before, after = _train_task_chain(replay, steps, seed=s, n_tasks=n_tasks)
             f.append(after - before)
         tag = "with_replay" if replay else "no_replay"
         rows.append((tag, float(np.mean(f))))
-        print(f"{tag}: task-0 error drift after {n_tasks}-task chain = "
-              f"{np.mean(f):+.2f} (per-seed: {[round(x, 2) for x in f]})")
+        drift = float(np.mean(f))
+        per_seed = [round(x, 2) for x in f]
+        print(
+            f"{tag}: task-0 error drift after {n_tasks}-task chain = "
+            f"{drift:+.2f} (per-seed: {per_seed})"
+        )
     no_r = dict(rows)["no_replay"]
     with_r = dict(rows)["with_replay"]
-    print(f"derived,forgetting_no_replay={no_r:.2f},"
-          f"forgetting_with_replay={with_r:.2f}")
+    print(
+        f"derived,forgetting_no_replay={no_r:.2f},"
+        f"forgetting_with_replay={with_r:.2f}"
+    )
     return rows
 
 

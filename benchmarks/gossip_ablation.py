@@ -1,16 +1,15 @@
 """Topology ablation: hub vs hub-less gossip vs hybrid (+ compression).
 
 The paper's deployment routes every share through hubs; BrainTorrent-style
-gossip removes the hub from the loop entirely.  This ablation runs the
-deployment system once per topology — identical tasks, seeds, and
-heterogeneous agent speeds, both sharing planes active — over a *priced*
-link (latency + bytes/rate), and reports per configuration:
+gossip removes the hub from the loop entirely.  Each row is a registered
+scenario (``topo_hub`` / ``topo_gossip`` / ``topo_hybrid`` /
+``topo_gossip_topk``) — identical tasks, seeds, and heterogeneous agent
+speeds, both sharing planes active — over a *priced* link (latency +
+bytes/rate), and the report carries per configuration:
 
-* mean terminal distance error over the task suite (mean across agents
-  and across each agent's per-task mean, on held-out patients),
-* simulated makespan (event-driven scheduler time; hub rounds block on
-  agent-link transfer time, while gossip replication runs in background
-  anti-entropy events whose deliveries land at latency + bytes/rate off
+* mean terminal distance error over the task suite,
+* simulated makespan (hub rounds block on agent-link transfer time,
+  while gossip replication runs in background anti-entropy events off
   the training critical path — so makespan differences between rows
   reflect that architectural difference, and bytes-on-wire is the
   like-for-like transport comparison),
@@ -32,89 +31,62 @@ from __future__ import annotations
 import argparse
 import json
 
-import numpy as np
+from benchmarks import plane_ablation
+from repro import experiments
 
-from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
-from repro.core.federated import ADFLLSystem, evaluate_on_tasks
-from repro.rl.synth import paper_eight_tasks, patient_split
-
-DQN = DQNConfig(volume_shape=(16, 16, 16), box_size=(6, 6, 6),
-                conv_features=(4,), hidden=(32,), max_episode_steps=12,
-                batch_size=16, eps_decay_steps=100)
-
-# every config shares both planes over a priced link; only transport differs
-TOPOLOGY_CONFIGS = {
-    "hub": dict(topology="hub"),
-    "gossip": dict(topology="gossip", gossip_sampler="random",
-                   gossip_fanout=2),
-    "hybrid": dict(topology="hybrid", gossip_sampler="random",
-                   gossip_fanout=2),
-    "gossip_topk": dict(topology="gossip", gossip_sampler="random",
-                        gossip_fanout=2, weight_compression="topk",
-                        weight_topk_frac=0.05),
+# classic row name -> registered scenario
+TOPOLOGY_SCENARIOS = {
+    "hub": "topo_hub",
+    "gossip": "topo_gossip",
+    "hybrid": "topo_hybrid",
+    "gossip_topk": "topo_gossip_topk",
 }
 
-LINK = dict(link_latency=0.002, link_rate=float(2 ** 22))  # 4 MiB / sim-unit
+
+ROW_KEYS = (
+    *plane_ablation.ROW_KEYS,
+    "comm_time",
+    "bytes_by_plane",
+    "msgs_by_plane",
+    "total_bytes",
+)
 
 
-def run_one(overrides, tasks, train_p, test_p, *, rounds, steps, seed=0):
-    sys_cfg = ADFLLConfig(rounds=rounds, train_steps_per_round=steps,
-                          erb_capacity=512, erb_share_size=64,
-                          hub_sync_period=0.25, gossip_period=0.25,
-                          share_planes=("erb", "weights"),
-                          mix_alpha=0.6, staleness_flag="poly",
-                          staleness_poly_a=0.5, seed=seed,
-                          **LINK, **overrides)
-    sysm = ADFLLSystem(sys_cfg, DQN, tasks, train_p, seed=seed)
-    makespan = sysm.run()
-    per_agent = [float(np.mean(list(
-        evaluate_on_tasks(ag, tasks, test_p, DQN).values())))
-        for _, ag in sorted(sysm.agents.items())]
-    meter = sysm.network.meter
-    out = {
-        "mean_dist_err": float(np.mean(per_agent)),
-        "best_agent_err": float(np.min(per_agent)),
-        "sim_makespan": float(makespan),
-        "comm_time": float(sum(r.comm_time for r in sysm.history)),
-        "n_mixed": sum(r.n_mixed for r in sysm.history),
-        "n_foreign_erbs": sum(r.n_incoming for r in sysm.history),
-        "pushed": dict(sysm.network.plane_pushed),
-        "bytes_by_plane": dict(meter.bytes_by_plane),
-        "msgs_by_plane": dict(meter.msgs_by_plane),
-        "total_bytes": meter.total_bytes,
-    }
-    if sysm.network.gossip is not None:
-        st = sysm.network.gossip.stats
-        out["gossip"] = {"rounds": st.n_rounds, "exchanges": st.n_exchanges,
-                         "sent": st.n_sent, "delivered": st.n_delivered,
-                         "dropped": st.n_dropped}
+def _row(report):
+    out = plane_ablation.summary_row(report, ROW_KEYS)
+    if "gossip" in report.extra:
+        out["gossip"] = report.extra["gossip"]
     return out
 
 
 def run(seed=0, fast=False, json_path=None):
-    tasks = paper_eight_tasks()[:4]
-    train_p, test_p = patient_split(16)
-    rounds = 2
-    steps = 10 if fast else 30
-
     results = {}
-    print("config,mean_dist_err,best_agent_err,sim_makespan,"
-          "erb_bytes,weight_bytes,n_mixed,n_foreign_erbs")
-    for name, overrides in TOPOLOGY_CONFIGS.items():
-        r = run_one(overrides, tasks, train_p, test_p, rounds=rounds,
-                    steps=steps, seed=seed)
+    print(
+        "config,mean_dist_err,best_agent_err,sim_makespan,"
+        "erb_bytes,weight_bytes,n_mixed,n_foreign_erbs"
+    )
+    for name, scenario in TOPOLOGY_SCENARIOS.items():
+        r = _row(experiments.run(scenario, fast=fast, seed=seed))
         results[name] = r
-        print(f"{name},{r['mean_dist_err']:.3f},{r['best_agent_err']:.3f},"
-              f"{r['sim_makespan']:.2f},"
-              f"{r['bytes_by_plane'].get('erb', 0)},"
-              f"{r['bytes_by_plane'].get('weights', 0)},"
-              f"{r['n_mixed']},{r['n_foreign_erbs']}")
+        print(
+            f"{name},{r['mean_dist_err']:.3f},{r['best_agent_err']:.3f},"
+            f"{r['sim_makespan']:.2f},"
+            f"{r['bytes_by_plane'].get('erb', 0)},"
+            f"{r['bytes_by_plane'].get('weights', 0)},"
+            f"{r['n_mixed']},{r['n_foreign_erbs']}"
+        )
     for name, r in results.items():
-        print(f"derived,{name},total_bytes={r['total_bytes']},"
-              f"gossip={r.get('gossip')}")
+        print(
+            f"derived,{name},total_bytes={r['total_bytes']},"
+            f"gossip={r.get('gossip')}"
+        )
     if json_path:
-        payload = {"benchmark": "gossip_ablation", "seed": seed,
-                   "fast": bool(fast), "configs": results}
+        payload = {
+            "benchmark": "gossip_ablation",
+            "seed": seed,
+            "fast": bool(fast),
+            "configs": results,
+        }
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {json_path}")
@@ -123,10 +95,16 @@ def run(seed=0, fast=False, json_path=None):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true",
-                    help="reduced step counts (CI sanity)")
+    ap.add_argument(
+        "--fast", action="store_true", help="reduced step counts (CI sanity)"
+    )
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--json", type=str, default=None, metavar="OUT",
-                    help="write results as JSON (BENCH_*.json for CI gating)")
+    ap.add_argument(
+        "--json",
+        type=str,
+        default=None,
+        metavar="OUT",
+        help="write results as JSON (BENCH_*.json for CI gating)",
+    )
     args = ap.parse_args()
     run(seed=args.seed, fast=args.fast, json_path=args.json)

@@ -4,6 +4,7 @@ On CPU the interpret-mode timings are NOT TPU performance — the value here
 is (a) correctness at benchmark shapes and (b) the harness a TPU run would
 use unchanged (interpret=False).
 """
+
 from __future__ import annotations
 
 import time
@@ -14,13 +15,17 @@ import numpy as np
 
 
 def _time(fn, *args, iters=3):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        fn(*args).block_until_ready()
+    out = fn(*args)  # warmup / compile
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
         (out[0] if isinstance(out, tuple) else out).block_until_ready()
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _row(name, us, ref_us, err):
+    return (name, us, f"ref_us={ref_us:.0f};max_err={err:.2e}")
 
 
 def run():
@@ -34,31 +39,32 @@ def run():
     v = jnp.asarray(rng.standard_normal((b, s, hkv, d)), jnp.float32)
     from repro.kernels.flash_attention.ops import flash_attention
     from repro.kernels.flash_attention.ref import attention_ref
-    t_pl = _time(lambda a, b_, c: flash_attention(a, b_, c, block_q=128,
-                                                  block_k=128), q, k, v)
+
+    t_pl = _time(
+        lambda a, b_, c: flash_attention(a, b_, c, block_q=128, block_k=128), q, k, v
+    )
     t_ref = _time(jax.jit(attention_ref), q, k, v)
-    err = float(jnp.max(jnp.abs(
-        flash_attention(q, k, v, block_q=128, block_k=128)
-        - attention_ref(q, k, v))))
-    rows.append(("flash_attention_interp", t_pl,
-                 f"ref_us={t_ref:.0f};max_err={err:.2e}"))
+    out_pl = flash_attention(q, k, v, block_q=128, block_k=128)
+    err = float(jnp.max(jnp.abs(out_pl - attention_ref(q, k, v))))
+    rows.append(_row("flash_attention_interp", t_pl, t_ref, err))
 
     # replay gather
     from repro.kernels.replay_gather.ops import replay_gather
     from repro.kernels.replay_gather.ref import replay_gather_ref
+
     buf = jnp.asarray(rng.standard_normal((4096, 512)), jnp.float32)
     idx = jnp.asarray(rng.integers(0, 4096, 256), jnp.int32)
     w = jnp.ones((256,), jnp.float32)
     t_pl = _time(replay_gather, buf, idx, w)
     t_ref = _time(jax.jit(replay_gather_ref), buf, idx, w)
-    err = float(jnp.max(jnp.abs(replay_gather(buf, idx, w)
-                                - replay_gather_ref(buf, idx, w))))
-    rows.append(("replay_gather_interp", t_pl,
-                 f"ref_us={t_ref:.0f};max_err={err:.2e}"))
+    diff = replay_gather(buf, idx, w) - replay_gather_ref(buf, idx, w)
+    err = float(jnp.max(jnp.abs(diff)))
+    rows.append(_row("replay_gather_interp", t_pl, t_ref, err))
 
     # fused td
     from repro.kernels.fused_td.kernel import fused_td
     from repro.kernels.fused_td.ref import fused_td_ref
+
     qs = jnp.asarray(rng.standard_normal((1024, 1)), jnp.float32)
     qn = jnp.asarray(rng.standard_normal((1024, 6)), jnp.float32)
     r = jnp.asarray(rng.standard_normal((1024, 1)), jnp.float32)
@@ -68,19 +74,18 @@ def run():
     t_pl = _time(f_pl, qs, qn, r, dn)
     t_ref = _time(f_ref, qs, qn, r, dn)
     err = float(jnp.max(jnp.abs(f_pl(qs, qn, r, dn) - f_ref(qs, qn, r, dn))))
-    rows.append(("fused_td_interp", t_pl,
-                 f"ref_us={t_ref:.0f};max_err={err:.2e}"))
+    rows.append(_row("fused_td_interp", t_pl, t_ref, err))
 
     # fused rmsnorm
     from repro.kernels.rmsnorm.ops import rmsnorm
     from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
     x = jnp.asarray(rng.standard_normal((2048, 768)), jnp.float32)
     sc = jnp.asarray(rng.standard_normal((768,)), jnp.float32)
     t_pl = _time(rmsnorm, x, sc)
     t_ref = _time(jax.jit(rmsnorm_ref), x, sc)
     err = float(jnp.max(jnp.abs(rmsnorm(x, sc) - rmsnorm_ref(x, sc))))
-    rows.append(("rmsnorm_interp", t_pl,
-                 f"ref_us={t_ref:.0f};max_err={err:.2e}"))
+    rows.append(_row("rmsnorm_interp", t_pl, t_ref, err))
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")
     return rows

@@ -2,9 +2,10 @@
 
 The paper federates experience (ERBs) only; the weight plane adds
 FedAsync-style staleness-weighted parameter mixing over the same hub
-topology.  This ablation runs the deployment system once per plane
-configuration — identical tasks, seeds, topology, and heterogeneous
-agent speeds — and reports, per configuration:
+topology.  Each row is a registered scenario (``plane_erb_only`` /
+``plane_weight_only`` / ``plane_hybrid``) — identical tasks, seeds,
+topology, and heterogeneous agent speeds — and the report carries, per
+configuration:
 
 * mean terminal distance error over the task suite (mean across agents
   and across each agent's per-task mean, on held-out patients),
@@ -16,71 +17,59 @@ agent speeds — and reports, per configuration:
 
 Sized to finish in well under 5 minutes on CPU.
 """
+
 from __future__ import annotations
 
 import argparse
 import json
 
-import numpy as np
+from repro import experiments
 
-from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
-from repro.core.federated import ADFLLSystem, evaluate_on_tasks
-from repro.rl.synth import paper_eight_tasks, patient_split
-
-DQN = DQNConfig(volume_shape=(16, 16, 16), box_size=(6, 6, 6),
-                conv_features=(4,), hidden=(32,), max_episode_steps=12,
-                batch_size=16, eps_decay_steps=100)
-
-PLANE_CONFIGS = {
-    "erb_only": ("erb",),
-    "weight_only": ("weights",),
-    "hybrid": ("erb", "weights"),
+# classic row name -> registered scenario
+PLANE_SCENARIOS = {
+    "erb_only": "plane_erb_only",
+    "weight_only": "plane_weight_only",
+    "hybrid": "plane_hybrid",
 }
 
 
-def run_one(planes, tasks, train_p, test_p, *, rounds, steps,
-            seed: int = 0):
-    sys_cfg = ADFLLConfig(rounds=rounds, train_steps_per_round=steps,
-                          erb_capacity=512, erb_share_size=64,
-                          hub_sync_period=0.25, share_planes=planes,
-                          mix_alpha=0.6, staleness_flag="poly",
-                          staleness_poly_a=0.5, seed=seed)
-    sysm = ADFLLSystem(sys_cfg, DQN, tasks, train_p, seed=seed)
-    makespan = sysm.run()
-    per_agent = [float(np.mean(list(
-        evaluate_on_tasks(ag, tasks, test_p, DQN).values())))
-        for _, ag in sorted(sysm.agents.items())]
-    return {
-        "mean_dist_err": float(np.mean(per_agent)),
-        "best_agent_err": float(np.min(per_agent)),
-        "sim_makespan": float(makespan),
-        "n_mixed": sum(r.n_mixed for r in sysm.history),
-        "n_foreign_erbs": sum(r.n_incoming for r in sysm.history),
-        "pushed": dict(sysm.network.plane_pushed),
-    }
+ROW_KEYS = (
+    "mean_dist_err",
+    "best_agent_err",
+    "sim_makespan",
+    "n_mixed",
+    "n_foreign_erbs",
+    "pushed",
+)
+
+
+def summary_row(report, keys=ROW_KEYS):
+    """One benchmark row: the named subset of ``Report.summary()``
+    (shared with gossip_ablation so the BENCH_*.json shapes can't
+    drift apart)."""
+    summary = report.summary()
+    return {k: summary[k] for k in keys}
 
 
 def run(seed: int = 0, fast: bool = False, json_path=None):
-    tasks = paper_eight_tasks()[:4]
-    train_p, test_p = patient_split(16)
-    rounds = 2
-    steps = 10 if fast else 30
-
     results = {}
-    print("config,mean_dist_err,best_agent_err,sim_makespan,"
-          "n_mixed,n_foreign_erbs")
-    for name, planes in PLANE_CONFIGS.items():
-        r = run_one(planes, tasks, train_p, test_p, rounds=rounds,
-                    steps=steps, seed=seed)
+    print("config,mean_dist_err,best_agent_err,sim_makespan,n_mixed,n_foreign_erbs")
+    for name, scenario in PLANE_SCENARIOS.items():
+        r = summary_row(experiments.run(scenario, fast=fast, seed=seed))
         results[name] = r
-        print(f"{name},{r['mean_dist_err']:.3f},{r['best_agent_err']:.3f},"
-              f"{r['sim_makespan']:.2f},{r['n_mixed']},"
-              f"{r['n_foreign_erbs']}")
+        print(
+            f"{name},{r['mean_dist_err']:.3f},{r['best_agent_err']:.3f},"
+            f"{r['sim_makespan']:.2f},{r['n_mixed']},{r['n_foreign_erbs']}"
+        )
     for name, r in results.items():
         print(f"derived,{name},pushed={r['pushed']}")
     if json_path:
-        payload = {"benchmark": "plane_ablation", "seed": seed,
-                   "fast": bool(fast), "configs": results}
+        payload = {
+            "benchmark": "plane_ablation",
+            "seed": seed,
+            "fast": bool(fast),
+            "configs": results,
+        }
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"wrote {json_path}")
@@ -89,10 +78,16 @@ def run(seed: int = 0, fast: bool = False, json_path=None):
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true",
-                    help="reduced step counts (CI sanity)")
+    ap.add_argument(
+        "--fast", action="store_true", help="reduced step counts (CI sanity)"
+    )
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--json", type=str, default=None, metavar="OUT",
-                    help="write results as JSON (BENCH_*.json for CI gating)")
+    ap.add_argument(
+        "--json",
+        type=str,
+        default=None,
+        metavar="OUT",
+        help="write results as JSON (BENCH_*.json for CI gating)",
+    )
     args = ap.parse_args()
     run(seed=args.seed, fast=args.fast, json_path=args.json)

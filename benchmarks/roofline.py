@@ -1,5 +1,6 @@
 """Roofline table: read the dry-run JSONs and print per (arch x shape x
 mesh) the three terms + bottleneck (EXPERIMENTS.md §Roofline source)."""
+
 from __future__ import annotations
 
 import glob
@@ -22,8 +23,10 @@ def run():
     if not rows:
         print("roofline,-,no dry-run results (run repro.launch.dryrun --all)")
         return
-    hdr = ("arch,shape,mesh,compute_s,memory_s,collective_s,bottleneck,"
-           "useful_flops_ratio,peak_GB_per_dev")
+    hdr = (
+        "arch,shape,mesh,compute_s,memory_s,collective_s,bottleneck,"
+        "useful_flops_ratio,peak_GB_per_dev"
+    )
     print(hdr)
     for r in rows:
         tag = "2x16x16" if r.get("multi_pod") else "16x16"
@@ -35,10 +38,13 @@ def run():
             continue
         t = r["roofline"]
         peak = r["memory_analysis"]["peak_bytes"] / 1e9
-        print(f"{r['arch']},{r['shape']},{tag},"
-              f"{t['compute_s']:.4g},{t['memory_s']:.4g},"
-              f"{t['collective_s']:.4g},{t['bottleneck'][:-2]},"
-              f"{r.get('useful_flops_ratio', 0) or 0:.3f},{peak:.2f}")
+        ratio = r.get("useful_flops_ratio", 0) or 0
+        print(
+            f"{r['arch']},{r['shape']},{tag},"
+            f"{t['compute_s']:.4g},{t['memory_s']:.4g},"
+            f"{t['collective_s']:.4g},{t['bottleneck'][:-2]},"
+            f"{ratio:.3f},{peak:.2f}"
+        )
 
 
 if __name__ == "__main__":

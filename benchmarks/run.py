@@ -1,21 +1,23 @@
 """Benchmark harness — one entry per paper table/figure + framework rows.
 
 Prints ``name,us_per_call,derived`` CSV lines (one per benchmark) followed
-by each benchmark's own detailed output.
+by each benchmark's own detailed output.  Every system benchmark builds
+its systems through the ``repro.experiments`` scenario registry.
 
     PYTHONPATH=src python -m benchmarks.run [--fast]
 
 Paper mapping:
-  deployment        -> Table 1 + Fig 3 (4 agents / 3 hubs, async, baselines)
-  ablation_addition -> Fig 4 (4->16 agents, 75% dropout)
-  ablation_deletion -> Fig 5 (24->1 agents, 75% dropout)
-  plane_ablation    -> beyond-paper: ERB vs weight vs hybrid sharing planes
-  gossip_ablation   -> beyond-paper: hub vs gossip vs hybrid topologies,
-                       bytes-on-wire per plane, compressed weight plane
+  deployment        -> Table 1 + Fig 3 (scenario paper_fig2 + baseline_*)
+  ablation_addition -> Fig 4 (scenario churn_addition_fig4)
+  ablation_deletion -> Fig 5 (scenario churn_deletion_fig5)
+  plane_ablation    -> beyond-paper: plane_* scenarios (ERB/weights/hybrid)
+  gossip_ablation   -> beyond-paper: topo_* scenarios, bytes-on-wire per
+                       plane, compressed weight plane
   kernels           -> framework kernel microbenches (Pallas vs oracle)
   roofline          -> EXPERIMENTS.md §Roofline source table (reads the
                        dry-run JSONs; run repro.launch.dryrun --all first)
 """
+
 from __future__ import annotations
 
 import argparse
@@ -24,8 +26,9 @@ import time
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fast", action="store_true",
-                    help="reduced step counts (CI sanity)")
+    ap.add_argument(
+        "--fast", action="store_true", help="reduced step counts (CI sanity)"
+    )
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
 
@@ -42,10 +45,8 @@ def main(argv=None) -> None:
 
     benches = [
         ("deployment_table1", lambda: deployment.run(fast=args.fast)),
-        ("ablation_addition_fig4",
-         lambda: ablation_addition.run(fast=args.fast)),
-        ("ablation_deletion_fig5",
-         lambda: ablation_deletion.run(fast=args.fast)),
+        ("ablation_addition_fig4", lambda: ablation_addition.run(fast=args.fast)),
+        ("ablation_deletion_fig5", lambda: ablation_deletion.run(fast=args.fast)),
         ("plane_ablation", lambda: plane_ablation.run(fast=args.fast)),
         ("gossip_ablation", lambda: gossip_ablation.run(fast=args.fast)),
         ("forgetting_ablation", lambda: forgetting.run(fast=args.fast)),

@@ -1,4 +1,5 @@
 """Paired t-test without scipy (regularized incomplete beta, NR betacf)."""
+
 from __future__ import annotations
 
 import math
@@ -44,8 +45,13 @@ def _betainc(a, b, x):
         return 0.0
     if x >= 1.0:
         return 1.0
-    ln_beta = (math.lgamma(a + b) - math.lgamma(a) - math.lgamma(b)
-               + a * math.log(x) + b * math.log(1.0 - x))
+    ln_beta = (
+        math.lgamma(a + b)
+        - math.lgamma(a)
+        - math.lgamma(b)
+        + a * math.log(x)
+        + b * math.log(1.0 - x)
+    )
     front = math.exp(ln_beta)
     if x < (a + 1.0) / (a + b + 2.0):
         return front * _betacf(a, b, x) / a

@@ -1,29 +1,49 @@
 """End-to-end driver: the paper's deployment experiment (Fig. 2).
 
-Four DQN agents (two fast "V100", two slow "T4"), three hubs,
-asynchronous rounds over the 8 BraTS-like task-environments, compared
-against Agent X / Y / M — the full Table 1 pipeline at a CPU-tractable
-scale. Expect a few minutes of wall time.
+Everything runs through the declarative scenario API: ``paper_fig2`` is
+four DQN agents (two fast "V100", two slow "T4") on three hubs running
+asynchronous rounds over the 8 BraTS-like task-environments, and the
+``baseline_*`` scenarios are Agent X / Y / M — the full Table 1 pipeline
+at a CPU-tractable scale. Expect a few minutes of wall time.
 
     PYTHONPATH=src python examples/adfll_deployment.py [--fast]
+    PYTHONPATH=src python examples/adfll_deployment.py --scenario gossip_hetero
+    PYTHONPATH=src python -m repro.experiments --list
 """
+
 import argparse
 
-from benchmarks import deployment
+from repro import experiments
+
+BASELINES = ("baseline_all_knowing", "baseline_partial", "baseline_sequential")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument(
+        "--scenario",
+        default="paper_fig2",
+        help="any scenario from `python -m repro.experiments --list`",
+    )
     args = ap.parse_args()
-    means, best = deployment.run(seed=0, fast=args.fast)
-    print("\nsummary:")
+
+    report = experiments.run(args.scenario, fast=args.fast)
+    scenario_means = report.agent_means()
+    means = dict(scenario_means)
+    if args.scenario == "paper_fig2":  # add the Table-1 comparison rows
+        for name in BASELINES:
+            means.update(experiments.run(name, fast=args.fast).agent_means())
+
+    print(f"\nscenario {args.scenario}: sim makespan {report.makespan:.2f}")
+    print("summary:")
+    best = None
+    if report.system == "adfll":
+        best = min(scenario_means, key=scenario_means.get)
     for name, m in sorted(means.items(), key=lambda kv: kv[1]):
         marker = " <- best ADFLL agent" if name == best else ""
         print(f"  {name:8s} mean distance error {m:6.2f}{marker}")
 
 
 if __name__ == "__main__":
-    import sys
-    sys.path.insert(0, ".")
     main()

@@ -48,6 +48,10 @@ class ADFLLConfig:
     # fractions: (current task, personal past, incoming foreign)
     train_steps_per_round: int = 150
     seed: int = 0
+    # task curriculum: "roundrobin" (the paper's rotation), "blocked"
+    # (one task per cohort of n_agents draws before advancing), or
+    # "shuffled" (seeded permutation of each full pass over the tasks)
+    task_curriculum: str = "roundrobin"
     # -- topology (beyond-paper: hub-less gossip, BrainTorrent-style) ------
     # "hub": agents <-> hubs (the paper); "gossip": peer-to-peer anti-entropy,
     # no hub in the loop; "hybrid": both transports at once.

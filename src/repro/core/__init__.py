@@ -1,4 +1,13 @@
 from repro.core.erb import ERB, ERBMeta, TaskTag, erb_init  # noqa: F401
+from repro.core.experiment import (  # noqa: F401
+    ChurnEvent,
+    CommLog,
+    EvalPoint,
+    ExperimentHooks,
+    HistoryRecorder,
+    Report,
+    RoundRecord,
+)
 from repro.core.federated import (  # noqa: F401
     ADFLLSystem,
     CentralAggregationSystem,
@@ -14,12 +23,13 @@ from repro.core.gossip import (  # noqa: F401
     PeerSampler,
     RandomKSampler,
     RingSampler,
+    SiteLinks,
     TimeVaryingSampler,
     make_sampler,
 )
 from repro.core.hub import Hub, sync_hubs  # noqa: F401
 from repro.core.lifelong import LifelongTrainer  # noqa: F401
-from repro.core.network import Network  # noqa: F401
+from repro.core.network import Network, PullResult, PushResult  # noqa: F401
 from repro.core.plane import (  # noqa: F401
     CompressedWeightPlane,
     CompressedWeightSnapshot,

@@ -10,18 +10,33 @@
   sequential lifelong learner) — Table 1 baselines.
 * :class:`CentralAggregationSystem` — conventional synchronous federated
   averaging of DQN weights (the framework the paper positions against).
+
+All of them implement the :class:`repro.experiments.protocol.System`
+protocol (``run() -> Report`` + ``evaluate()``); the baselines are
+wrapped as single-agent systems in ``repro.experiments.systems``.
+``ADFLLSystem`` additionally supports declarative churn
+(:meth:`ADFLLSystem.schedule_churn`) and emits
+:class:`~repro.core.experiment.ExperimentHooks` lifecycle callbacks
+(``on_round_start`` / ``on_mix`` / ``on_push`` / ``on_round_end`` /
+``on_churn``) instead of hard-wiring its metrics collection.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
 from repro.core.erb import TaskTag, erb_init
+from repro.core.experiment import (
+    ChurnEvent,
+    ExperimentHooks,
+    HistoryRecorder,
+    Report,
+    RoundRecord,
+)
 from repro.core.gossip import LinkModel, make_sampler
 from repro.core.hub import Hub
 from repro.core.network import Network
@@ -42,26 +57,23 @@ def evaluate_on_tasks(
     tasks: Sequence[TaskTag],
     patients: Sequence[int],
     cfg: DQNConfig,
+    *,
+    max_patients: Optional[int] = 4,
+    n_episodes: int = 4,
 ) -> Dict[str, float]:
-    """Mean terminal distance per task over the held-out patients."""
+    """Mean terminal distance per task over the held-out patients.
+
+    ``max_patients`` caps how many of ``patients`` are evaluated (None =
+    all of them) and ``n_episodes`` is the greedy rollouts per patient —
+    both explicit so a :class:`~repro.core.experiment.Report` can record
+    exactly what its errors were measured over.
+    """
+    pats = list(patients) if max_patients is None else list(patients)[:max_patients]
     out = {}
     for t in tasks:
-        errs = [agent.evaluate(env_for(t, p, cfg), n_episodes=4) for p in patients[:4]]
+        errs = [agent.evaluate(env_for(t, p, cfg), n_episodes=n_episodes) for p in pats]
         out[t.name] = float(np.mean(errs))
     return out
-
-
-@dataclass
-class RoundRecord:
-    agent_id: int
-    round_idx: int
-    task: str
-    start: float
-    end: float
-    n_incoming: int
-    loss: float
-    n_mixed: int = 0  # peer weight snapshots folded in (weight plane)
-    comm_time: float = 0.0  # link time charged to this round (pull side)
 
 
 def _make_weight_plane(cfg: ADFLLConfig) -> WeightPlane:
@@ -75,7 +87,13 @@ def _make_weight_plane(cfg: ADFLLConfig) -> WeightPlane:
 
 
 class ADFLLSystem:
-    """The paper's deployment system (Fig. 2 topology by default)."""
+    """The paper's deployment system (Fig. 2 topology by default).
+
+    ``seed`` is the single source of truth for every random stream
+    (defaulting to ``sys_cfg.seed``): the round rng, the network rng,
+    the gossip sampler/rng, the task-curriculum rng, and each agent's
+    init seed (``seed + agent_id``) all derive from it.
+    """
 
     def __init__(
         self,
@@ -84,18 +102,23 @@ class ADFLLSystem:
         tasks: Sequence[TaskTag],
         train_patients: Sequence[int],
         *,
-        seed: int = 0,
+        seed: Optional[int] = None,
+        hooks: Sequence[ExperimentHooks] = (),
     ):
         self.sys_cfg = sys_cfg
         self.dqn_cfg = dqn_cfg
         self.tasks = list(tasks)
         self.train_patients = list(train_patients)
-        self.rng = np.random.default_rng(seed)
+        self.seed = int(sys_cfg.seed if seed is None else seed)
+        self._recorder = HistoryRecorder()
+        self.hooks: Tuple[ExperimentHooks, ...] = (self._recorder, *hooks)
+        self.history: List[RoundRecord] = self._recorder.records
+        self.rng = np.random.default_rng(self.seed)
         n_hubs = 0 if sys_cfg.topology == "gossip" else sys_cfg.n_hubs
         self.network = Network(
             hubs=[Hub(h) for h in range(n_hubs)],
             dropout=sys_cfg.dropout,
-            rng=np.random.default_rng(seed + 1),
+            rng=np.random.default_rng(self.seed + 1),
             topology=sys_cfg.topology,
             link=LinkModel(
                 latency=sys_cfg.link_latency,
@@ -108,20 +131,24 @@ class ADFLLSystem:
                 make_sampler(
                     sys_cfg.gossip_sampler,
                     fanout=sys_cfg.gossip_fanout,
-                    seed=seed + 2,
+                    seed=self.seed + 2,
                 ),
-                rng=np.random.default_rng(seed + 3),
+                rng=np.random.default_rng(self.seed + 3),
             )
         self.use_erb = "erb" in sys_cfg.share_planes
         self.use_weights = "weights" in sys_cfg.share_planes
         if self.use_weights:
             self.network.register_plane(_make_weight_plane(sys_cfg))
+        if sys_cfg.task_curriculum not in ("roundrobin", "blocked", "shuffled"):
+            raise ValueError(f"unknown curriculum: {sys_cfg.task_curriculum!r}")
+        self._task_rng = np.random.default_rng(self.seed + 4)
+        self._task_queue: List[int] = []
         self.agents: Dict[int, DQNAgent] = {}
         self.sched = Scheduler()
-        self.history: List[RoundRecord] = []
         self._task_cursor = 0
         self._next_agent_id = 0
         self._outstanding = 0  # finish events not yet processed
+        self._pending_churn = 0  # scheduled churn events not yet applied
         for i in range(sys_cfg.n_agents):
             hub = sys_cfg.agent_hub[i] if i < len(sys_cfg.agent_hub) else None
             self.add_agent(
@@ -144,6 +171,11 @@ class ADFLLSystem:
                 tag="gossip",
             )
 
+    # -- hooks ----------------------------------------------------------------
+    def _emit(self, name: str, *args) -> None:
+        for h in self.hooks:
+            getattr(h, name)(self, *args)
+
     # -- membership -----------------------------------------------------------
     def add_agent(
         self,
@@ -154,7 +186,7 @@ class ADFLLSystem:
     ) -> int:
         aid = self._next_agent_id
         self._next_agent_id += 1
-        agent = DQNAgent(aid, self.dqn_cfg, seed=self.sys_cfg.seed + aid, speed=speed)
+        agent = DQNAgent(aid, self.dqn_cfg, seed=self.seed + aid, speed=speed)
         self.agents[aid] = agent
         self.network.attach_agent(aid, hub_id)
         t = self.sched.now if at is None else at
@@ -165,11 +197,61 @@ class ADFLLSystem:
         self.agents[agent_id].active = False
         self.network.detach_agent(agent_id)
 
+    def live_agents(self) -> Dict[int, DQNAgent]:
+        return {
+            aid: a
+            for aid, a in self.agents.items()
+            if getattr(a, "active", True) is not False
+        }
+
+    def schedule_churn(self, events: Sequence[ChurnEvent]) -> None:
+        """Register a declarative churn schedule: each event fires on the
+        scheduler at its time and emits ``on_churn``.  The run does not
+        stop while churn events are still pending, so late joiners get
+        their rounds even if the incumbents finished first."""
+        for ev in sorted(events, key=lambda e: e.at):
+            self._pending_churn += 1
+            self.sched.at(
+                ev.at, lambda s, t, e=ev: self._apply_churn(e, t), tag="churn"
+            )
+
+    def _apply_churn(self, ev: ChurnEvent, t: float) -> None:
+        self._pending_churn -= 1
+        ids: List[int] = []
+        if ev.action == "add":
+            for _ in range(ev.count):
+                ids.append(self.add_agent(speed=ev.speed, hub_id=ev.hub))
+        else:
+            for _ in range(ev.count):
+                aid = ev.agent_id
+                live = self.live_agents()
+                if aid is None:
+                    if not live:
+                        break
+                    aid = max(live)  # newest joiner leaves first
+                elif aid not in live:
+                    break  # unknown/already-departed id: nothing to remove
+                self.remove_agent(aid)
+                ids.append(aid)
+        self._emit("on_churn", ev, ids, t)
+
     # -- round machinery --------------------------------------------------------
     def _next_task(self) -> TaskTag:
-        task = self.tasks[self._task_cursor % len(self.tasks)]
+        """The scenario's task curriculum: round-robin (the paper),
+        blocked (one task per cohort of agents before moving on), or a
+        seeded shuffle of each full pass."""
+        cur = self.sys_cfg.task_curriculum
+        if cur == "roundrobin":
+            idx = self._task_cursor % len(self.tasks)
+        elif cur == "blocked":
+            block = max(1, self.sys_cfg.n_agents)
+            idx = (self._task_cursor // block) % len(self.tasks)
+        else:  # shuffled
+            if not self._task_queue:
+                self._task_queue = list(self._task_rng.permutation(len(self.tasks)))
+            idx = int(self._task_queue.pop())
         self._task_cursor += 1
-        return task
+        return self.tasks[idx]
 
     def _round_duration(self, agent: DQNAgent, n_incoming: int) -> float:
         """Simulated wall time of one round: base cost grows with replay
@@ -185,17 +267,21 @@ class ADFLLSystem:
         if agent.rounds_done >= self.sys_cfg.rounds:
             return
         task = self._next_task()
+        self._emit("on_round_start", agent_id, task, self.sched.now)
         patient = int(self.rng.choice(self.train_patients))
         env = env_for(task, patient, self.dqn_cfg)
         comm = 0.0
         if self.use_erb:
-            incoming = self.network.agent_pull(agent_id, agent.seen_erb_ids)
-            comm += self.network.last_comm_time
+            pulled = self.network.agent_pull(agent_id, agent.seen_erb_ids)
+            incoming = list(pulled.records)
+            comm += pulled.comm_time
         else:
             incoming = []
         if self.use_weights:
-            n_mixed = self._mix_peer_weights(agent_id)
-            comm += self.network.last_comm_time
+            n_mixed, mix_comm = self._mix_peer_weights(agent_id)
+            comm += mix_comm
+            if n_mixed:
+                self._emit("on_mix", agent_id, n_mixed, mix_comm, self.sched.now)
         else:
             n_mixed = 0
         start = self.sched.now
@@ -209,7 +295,8 @@ class ADFLLSystem:
         )
         dur = self._round_duration(agent, len(incoming)) + comm
         end = start + dur
-        self.history.append(
+        self._emit(
+            "on_round_end",
             RoundRecord(
                 agent_id,
                 agent.rounds_done - 1,
@@ -220,7 +307,7 @@ class ADFLLSystem:
                 loss,
                 n_mixed,
                 comm,
-            )
+            ),
         )
 
         def finish(s: Scheduler, t: float, aid=agent_id, erb=shared):
@@ -233,11 +320,15 @@ class ADFLLSystem:
                 return
             comm_out = 0.0
             if self.use_erb:
-                self.network.agent_push(aid, erb)
-                comm_out += self.network.last_comm_time
+                res = self.network.agent_push(aid, erb)
+                comm_out += res.comm_time
+                self._emit("on_push", aid, "erb", res, t)
             if self.use_weights:
-                self.network.agent_push(aid, a.snapshot_params(t), plane="weights")
-                comm_out += self.network.last_comm_time
+                res = self.network.agent_push(
+                    aid, a.snapshot_params(t), plane="weights"
+                )
+                comm_out += res.comm_time
+                self._emit("on_push", aid, "weights", res, t)
             if comm_out > 0.0:
                 # the upload occupies the agent's link before its next round
                 s.at(
@@ -251,14 +342,16 @@ class ADFLLSystem:
         self._outstanding += 1
         self.sched.at(end, finish, tag=f"A{agent_id}_round_done")
 
-    def _mix_peer_weights(self, agent_id: int) -> int:
+    def _mix_peer_weights(self, agent_id: int) -> Tuple[int, float]:
         """Pull unseen peer snapshots and fold them into the agent's
         params, staleness-discounted (FedAsync alpha*s(dtau)); compressed
-        snapshots are dequantized inside the mix."""
+        snapshots are dequantized inside the mix.  Returns the number of
+        snapshots consumed and the pull's link time."""
         agent = self.agents[agent_id]
-        snaps = self.network.agent_pull(agent_id, agent.seen_snap_ids, plane="weights")
+        res = self.network.agent_pull(agent_id, agent.seen_snap_ids, plane="weights")
+        snaps = list(res.records)
         if not snaps:
-            return 0
+            return 0, res.comm_time
         cfg = self.sys_cfg
         now = self.sched.now if cfg.staleness_clock == "time" else agent.rounds_done
         alphas = staleness_alphas(
@@ -271,7 +364,7 @@ class ADFLLSystem:
             poly_a=cfg.staleness_poly_a,
             clock=cfg.staleness_clock,
         )
-        return agent.mix_params(snaps, alphas)
+        return agent.mix_params(snaps, alphas), res.comm_time
 
     def _maybe_continue(self, agent_id: int):
         """Paper policy: start a new round whenever unseen ERBs exist (or a
@@ -284,17 +377,77 @@ class ADFLLSystem:
         self._start_round(agent_id)
 
     # -- run ------------------------------------------------------------------
-    def run(self, until: float = 1e6) -> float:
+    def run(self, until: float = 1e6) -> Report:
         def done() -> bool:
-            return self._outstanding == 0 and all(
-                a.rounds_done >= self.sys_cfg.rounds
-                for a in self.agents.values()
-                if getattr(a, "active", True)
+            return (
+                self._outstanding == 0
+                and self._pending_churn == 0
+                and all(
+                    a.rounds_done >= self.sys_cfg.rounds
+                    for a in self.agents.values()
+                    if getattr(a, "active", True)
+                )
             )
 
         t = self.sched.run(until=until, stop=done)
         self.network.sync()
-        return t
+        return self.report(makespan=t)
+
+    def report(self, *, makespan: float) -> Report:
+        """Assemble the run-side :class:`Report` (evaluation fields are
+        filled by the runner via :meth:`evaluate`)."""
+        hist = list(self.history)
+        meter = self.network.meter
+        extra = {}
+        if self.network.gossip is not None:
+            st = self.network.gossip.stats
+            extra["gossip"] = {
+                "rounds": st.n_rounds,
+                "exchanges": st.n_exchanges,
+                "sent": st.n_sent,
+                "delivered": st.n_delivered,
+                "dropped": st.n_dropped,
+            }
+        return Report(
+            system="adfll",
+            seed=self.seed,
+            makespan=float(makespan),
+            n_rounds=len(hist),
+            comm_time=float(sum(r.comm_time for r in hist)),
+            history=hist,
+            n_mixed=sum(r.n_mixed for r in hist),
+            n_foreign_erbs=sum(r.n_incoming for r in hist),
+            bytes_by_plane=dict(meter.bytes_by_plane),
+            msgs_by_plane=dict(meter.msgs_by_plane),
+            plane_pushed=dict(self.network.plane_pushed),
+            records_known={
+                p: len(self.network.all_known(p)) for p in sorted(self.network.planes)
+            },
+            extra=extra,
+        )
+
+    # -- evaluation -----------------------------------------------------------
+    def evaluate(
+        self,
+        tasks: Sequence[TaskTag],
+        patients: Sequence[int],
+        *,
+        max_patients: Optional[int] = 4,
+        n_episodes: int = 4,
+    ) -> Dict[str, Dict[str, float]]:
+        """Per-live-agent mean terminal distance per task (labels follow
+        the paper's 1-based numbering: agent 0 is ``"Agent1"``)."""
+        return {
+            f"Agent{aid + 1}": evaluate_on_tasks(
+                agent,
+                tasks,
+                patients,
+                self.dqn_cfg,
+                max_patients=max_patients,
+                n_episodes=n_episodes,
+            )
+            for aid, agent in sorted(self.live_agents().items())
+        }
 
 
 # ---------------------------------------------------------------------------
@@ -373,7 +526,13 @@ class CentralAggregationSystem:
     """Conventional synchronous FedAvg over DQN weights: all agents train
     locally for a round, a central server averages, repeat. The contrast
     system for DESIGN.md §1 (requires homogeneous architectures and a
-    central node — both restrictions ADFLL removes)."""
+    central node — both restrictions ADFLL removes).
+
+    Implements the ``System`` protocol: ``run()`` executes ``rounds``
+    synchronous rounds and returns a :class:`Report`; ``evaluate()``
+    reports the shared post-aggregation model under the ``"FedAvg"``
+    label (after a sync round every agent holds identical parameters).
+    """
 
     def __init__(
         self,
@@ -382,15 +541,30 @@ class CentralAggregationSystem:
         tasks: Sequence[TaskTag],
         patients: Sequence[int],
         *,
+        rounds: int = 3,
+        steps: int = 150,
+        erb_capacity: int = 2048,
         seed: int = 400,
     ):
         self.dqn_cfg = dqn_cfg
         self.tasks = list(tasks)
         self.patients = list(patients)
+        self.rounds = rounds
+        self.steps = steps
+        self.erb_capacity = erb_capacity
+        self.seed = seed
         self.agents = [DQNAgent(i, dqn_cfg, seed=seed + i) for i in range(n_agents)]
         self.rng = np.random.default_rng(seed)
 
-    def round(self, round_idx: int, *, steps: int = 150, erb_capacity: int = 2048):
+    def round(
+        self,
+        round_idx: int,
+        *,
+        steps: Optional[int] = None,
+        erb_capacity: Optional[int] = None,
+    ):
+        steps = self.steps if steps is None else steps
+        erb_capacity = self.erb_capacity if erb_capacity is None else erb_capacity
         for i, agent in enumerate(self.agents):
             task = self.tasks[(round_idx * len(self.agents) + i) % len(self.tasks)]
             env = env_for(task, int(self.rng.choice(self.patients)), self.dqn_cfg)
@@ -412,10 +586,33 @@ class CentralAggregationSystem:
             a.params = mean_params
             a.target_params = mean_params
 
-    def run(self, rounds: int, **kw):
-        for r in range(rounds):
-            self.round(r, **kw)
-        return self.agents[0]
+    def run(self) -> Report:
+        for r in range(self.rounds):
+            self.round(r)
+        return Report(
+            system="fedavg",
+            seed=self.seed,
+            n_rounds=self.rounds * len(self.agents),
+        )
+
+    def evaluate(
+        self,
+        tasks: Sequence[TaskTag],
+        patients: Sequence[int],
+        *,
+        max_patients: Optional[int] = 4,
+        n_episodes: int = 4,
+    ) -> Dict[str, Dict[str, float]]:
+        return {
+            "FedAvg": evaluate_on_tasks(
+                self.agents[0],
+                tasks,
+                patients,
+                self.dqn_cfg,
+                max_patients=max_patients,
+                n_episodes=n_episodes,
+            )
+        }
 
 
 __all__ = [

@@ -58,6 +58,46 @@ class LinkModel:
 
 
 @dataclass
+class SiteLinks:
+    """Per-link heterogeneous rates: fast intra-site, slow cross-site.
+
+    Agents (and hubs) are assigned to sites; a message between two
+    endpoints on the same site is priced by ``intra``, one crossing
+    sites by ``inter``, and any endpoint without a site assignment falls
+    back to ``default``.  One instance is shared between
+    :class:`~repro.core.network.Network` (agent-hub legs) and
+    :class:`GossipTopology` (agent-agent legs) so the whole topology
+    sees one consistent link map.
+    """
+
+    default: LinkModel
+    agent_site: Dict[int, int] = field(default_factory=dict)
+    hub_site: Dict[int, int] = field(default_factory=dict)
+    intra: Optional[LinkModel] = None
+    inter: Optional[LinkModel] = None
+
+    def _pick(self, same_site: Optional[bool]) -> LinkModel:
+        if same_site is None:
+            return self.default
+        if same_site:
+            return self.intra if self.intra is not None else self.default
+        return self.inter if self.inter is not None else self.default
+
+    def agent_hub(self, agent_id: int, hub_id: Optional[int]) -> LinkModel:
+        sa = self.agent_site.get(agent_id)
+        sh = self.hub_site.get(hub_id) if hub_id is not None else None
+        if sa is None or sh is None:
+            return self._pick(None)
+        return self._pick(sa == sh)
+
+    def pair(self, a: int, b: int) -> LinkModel:
+        sa, sb = self.agent_site.get(a), self.agent_site.get(b)
+        if sa is None or sb is None:
+            return self._pick(None)
+        return self._pick(sa == sb)
+
+
+@dataclass
 class BandwidthMeter:
     """Bytes/messages that crossed a link, keyed by plane name."""
 
@@ -213,11 +253,13 @@ class GossipTopology:
         link: Optional[LinkModel] = None,
         meter: Optional[BandwidthMeter] = None,
         rng: Optional[np.random.Generator] = None,
+        site_links: Optional[SiteLinks] = None,
     ):
         self.planes = planes  # shared registry (same dict as Network.planes)
         self.sampler = sampler
         self.link = link if link is not None else LinkModel()
         self.meter = meter if meter is not None else BandwidthMeter()
+        self.site_links = site_links  # shared with Network.configure_sites
         self.rng = rng if rng is not None else np.random.default_rng(0)
         self.stores: Dict[int, Dict[str, Dict[str, Any]]] = {}
         self.stats = GossipStats()
@@ -278,9 +320,17 @@ class GossipTopology:
                 sent += self._exchange(sched, t, aid, peer)
         return sent
 
+    def pair_link(self, a: int, b: int) -> LinkModel:
+        """The link pricing one a<->b exchange (site-aware when sites
+        are configured, the shared default link otherwise)."""
+        if self.site_links is not None:
+            return self.site_links.pair(a, b)
+        return self.link
+
     def _exchange(self, sched, t: float, a: int, b: int) -> int:
         """Push-pull reconciliation of one pair, every plane."""
         sent = 0
+        link = self.pair_link(a, b)
         for name in sorted(self.planes):
             plane = self.planes[name]
             for src, dst in ((a, b), (b, a)):
@@ -290,7 +340,7 @@ class GossipTopology:
                         continue
                     self.stats.n_sent += 1
                     sent += 1
-                    if self.link.drop > 0.0 and self.rng.random() < self.link.drop:
+                    if link.drop > 0.0 and self.rng.random() < link.drop:
                         self.stats.n_dropped += 1
                         continue
                     nbytes = plane.payload_nbytes(rec)
@@ -299,7 +349,7 @@ class GossipTopology:
                         self._deliver(dst, rec, name)
                     else:
                         sched.at(
-                            t + self.link.transfer_time(nbytes),
+                            t + link.transfer_time(nbytes),
                             lambda s, tt, d=dst, r=rec, p=name: self._deliver(
                                 d, r, p
                             ),

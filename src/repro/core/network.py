@@ -17,22 +17,84 @@ The network is plane-agnostic: it carries a registry of
 default), and every push/pull names the plane it rides on.  Records are
 wire-encoded once at the ingress edge (``plane.encode``), and every
 hub-link message is priced by the :class:`~repro.core.gossip.LinkModel`
-and accounted on the shared :class:`~repro.core.gossip.BandwidthMeter`;
-``last_comm_time`` exposes the link time of the most recent push/pull so
-the scheduler-driven system can charge it to simulated time.  Dropout,
-hub liveness, and hub-hub sync apply to all planes uniformly.
+and accounted on the shared :class:`~repro.core.gossip.BandwidthMeter`.
+Each push/pull returns an explicit :class:`PushResult` /
+:class:`PullResult` carrying the records plus the link time and bytes it
+cost, so the scheduler-driven system charges communication to simulated
+time without any mutable side-channel.  With
+:meth:`Network.configure_sites`, agent-hub and agent-agent legs are
+priced per link (fast intra-site, slow cross-site).  Dropout, hub
+liveness, and hub-hub sync apply to all planes uniformly.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Set
+from typing import Any, Dict, Iterator, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.core.gossip import BandwidthMeter, GossipTopology, LinkModel, PeerSampler
+from repro.core.gossip import (
+    BandwidthMeter,
+    GossipTopology,
+    LinkModel,
+    PeerSampler,
+    SiteLinks,
+)
 from repro.core.hub import Hub, sync_hubs
 from repro.core.plane import ERBPlane, SharePlane
+
+
+@dataclass(frozen=True)
+class PushResult:
+    """Outcome of one ``agent_push``: delivery + what the link charged.
+
+    Truthy iff the record was newly kept anywhere (so existing
+    ``assert net.agent_push(...)`` call sites keep reading naturally).
+    """
+
+    delivered: bool
+    comm_time: float = 0.0
+    nbytes: int = 0
+
+    def __bool__(self) -> bool:
+        return self.delivered
+
+
+@dataclass(frozen=True, eq=False)
+class PullResult:
+    """Outcome of one ``agent_pull``: the records + what the link charged.
+
+    Behaves like the plain record list it used to be (iteration, len,
+    indexing, equality against sequences) while carrying the explicit
+    ``comm_time`` / ``nbytes`` accounting.
+    """
+
+    records: Tuple[Any, ...] = ()
+    comm_time: float = 0.0
+    nbytes: int = 0
+
+    def __iter__(self) -> Iterator[Any]:
+        return iter(self.records)
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def __getitem__(self, i):
+        return self.records[i]
+
+    def __bool__(self) -> bool:
+        return bool(self.records)
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, PullResult):
+            return self.records == other.records
+        if isinstance(other, (list, tuple)):
+            return list(self.records) == list(other)
+        return NotImplemented
+
+    def __hash__(self):
+        return hash(self.records)
 
 
 @dataclass
@@ -51,8 +113,8 @@ class Network:
     n_dropped: int = 0
     n_synced: int = 0
     plane_pushed: Dict[str, int] = field(default_factory=dict)
-    # link time of the most recent agent_push/agent_pull (0 for free links)
-    last_comm_time: float = 0.0
+    # per-link heterogeneous rates (None = every leg uses `link`)
+    site_links: Optional[SiteLinks] = None
 
     def __post_init__(self):
         if self.topology not in ("hub", "gossip", "hybrid"):
@@ -67,11 +129,44 @@ class Network:
     ) -> GossipTopology:
         """Attach a gossip overlay sharing this network's planes/meter/link."""
         self.gossip = GossipTopology(
-            self.planes, sampler, link=self.link, meter=self.meter, rng=rng
+            self.planes,
+            sampler,
+            link=self.link,
+            meter=self.meter,
+            rng=rng,
+            site_links=self.site_links,
         )
         for aid in self.agent_hub:
             self.gossip.add_agent(aid)
         return self.gossip
+
+    def configure_sites(
+        self,
+        agent_site: Dict[int, int],
+        *,
+        hub_site: Optional[Dict[int, int]] = None,
+        intra: Optional[LinkModel] = None,
+        inter: Optional[LinkModel] = None,
+    ) -> SiteLinks:
+        """Enable per-link heterogeneous rates (fast intra-site, slow
+        cross-site).  Endpoints without a site keep the default link;
+        the gossip overlay (if any) shares the same link map."""
+        self.site_links = SiteLinks(
+            default=self.link,
+            agent_site=dict(agent_site),
+            hub_site=dict(hub_site or {}),
+            intra=intra,
+            inter=inter,
+        )
+        if self.gossip is not None:
+            self.gossip.site_links = self.site_links
+        return self.site_links
+
+    def link_for(self, agent_id: int) -> LinkModel:
+        """The link pricing this agent's hub leg."""
+        if self.site_links is None:
+            return self.link
+        return self.site_links.agent_hub(agent_id, self.agent_hub.get(agent_id))
 
     def register_plane(self, plane: SharePlane) -> SharePlane:
         self.planes[plane.name] = plane
@@ -112,18 +207,17 @@ class Network:
         return self.hubs[self.agent_hub[agent_id]]
 
     # -- data planes ---------------------------------------------------------
-    def agent_push(self, agent_id: int, item: Any, plane: str = "erb") -> bool:
+    def agent_push(self, agent_id: int, item: Any, plane: str = "erb") -> PushResult:
         """Agent publishes one record on ``plane``.
 
         Hub topologies upload to the agent's hub (may drop); gossip
         topologies insert into the agent's own local store (free — the
-        wire cost is paid when anti-entropy replicates it).  Returns
-        True iff the record was newly kept anywhere.
-        """
+        wire cost is paid when anti-entropy replicates it).  The result
+        is truthy iff the record was newly kept anywhere and carries the
+        link time/bytes the upload cost."""
         if self.topology != "hub" and self.gossip is None:
             raise RuntimeError(f"topology={self.topology!r} needs enable_gossip()")
         pl = self.planes[plane]
-        self.last_comm_time = 0.0
         # decide the hub link's fate BEFORE encoding: a dropped upload must
         # not advance sender-side codec state (compressed delta chains stay
         # consistent with what some live store actually received)
@@ -136,50 +230,54 @@ class Network:
             else:
                 hub_up = True
         if self.gossip is None and not hub_up:
-            return False  # pure hub: the upload is lost, nothing to encode
+            # pure hub: the upload is lost, nothing to encode
+            return PushResult(False)
         item = pl.encode(item)
         delivered = False
+        comm, nbytes_out = 0.0, 0
         if self.gossip is not None and self.gossip.insert_local(agent_id, item, pl):
             delivered = True
         if hub_up and self.hub_of(agent_id).push(item, pl):
             nbytes = pl.payload_nbytes(item)
             self.meter.account(plane, nbytes)
-            self.last_comm_time = self.link.transfer_time(nbytes)
+            comm = self.link_for(agent_id).transfer_time(nbytes)
+            nbytes_out = nbytes
             delivered = True
         if delivered:
             self.n_pushed += 1
             self.plane_pushed[plane] = self.plane_pushed.get(plane, 0) + 1
-        return delivered
+        return PushResult(delivered, comm, nbytes_out)
 
     def agent_pull(
         self, agent_id: int, seen: Set[str], plane: str = "erb"
-    ) -> List[Any]:
+    ) -> PullResult:
         """Every unseen record reachable by the agent on ``plane``.
 
         Local gossip copies are free (their wire cost was paid at
         anti-entropy delivery), so under ``hybrid`` the hub leg only
         downloads — and only prices — records the agent does not already
-        hold locally."""
+        hold locally.  The result carries the records plus the priced
+        link time/bytes of the hub leg."""
         pl = self.planes[plane]
-        self.last_comm_time = 0.0
         local: List[Any] = []
         if self.gossip is not None:
             local = self.gossip.pull_local(agent_id, seen, plane)
         out: List[Any] = []
+        comm, nbytes_total = 0.0, 0
         if self.topology != "gossip":
             skip = set(seen) | {pl.key(e) for e in local}
             pulled = self.hub_of(agent_id).pull_unseen(skip, plane)
             if self.dropout > 0.0:
                 pulled = [e for e in pulled if self.rng.random() >= self.dropout]
-            comm = 0.0
+            link = self.link_for(agent_id)
             for e in pulled:
                 nbytes = pl.payload_nbytes(e)
                 self.meter.account(plane, nbytes)
-                comm += self.link.transfer_time(nbytes)
-            self.last_comm_time = comm
+                comm += link.transfer_time(nbytes)
+                nbytes_total += nbytes
             out.extend(pulled)
         out.extend(local)
-        return out
+        return PullResult(tuple(out), comm, nbytes_total)
 
     def sync(self) -> int:
         """Hub-hub backbone sync (no-op under pure gossip)."""

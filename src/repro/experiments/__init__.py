@@ -1,0 +1,35 @@
+"""Declarative scenario/experiment API.
+
+One ``System`` protocol, frozen ``ScenarioSpec`` descriptions, a named
+registry, and a runner — every benchmark is scenario selection plus
+reporting:
+
+    from repro import experiments
+    report = experiments.run("paper_fig2", fast=True)
+    print(report.mean_dist_err, report.makespan)
+
+or from the shell:
+
+    python -m repro.experiments --list
+    python -m repro.experiments --scenario gossip_hetero --fast
+"""
+
+from repro.core.experiment import (  # noqa: F401
+    ChurnEvent,
+    CommLog,
+    EvalPoint,
+    ExperimentHooks,
+    HistoryRecorder,
+    Report,
+    RoundRecord,
+)
+from repro.core.gossip import LinkModel, SiteLinks  # noqa: F401
+from repro.experiments.protocol import SupportsChurn, System  # noqa: F401
+from repro.experiments.registry import (  # noqa: F401
+    get_scenario,
+    list_scenarios,
+    register,
+)
+from repro.experiments.runner import build, resolve, run, write_json  # noqa: F401
+from repro.experiments.spec import ScenarioSpec  # noqa: F401
+from repro.experiments.systems import BaselineSystem  # noqa: F401

@@ -1,0 +1,77 @@
+"""CLI for the scenario registry.
+
+    PYTHONPATH=src python -m repro.experiments --list
+    PYTHONPATH=src python -m repro.experiments --scenario paper_fig2 [--fast]
+    PYTHONPATH=src python -m repro.experiments \
+        --scenario churn_addition_fig4 --scenario gossip_hetero \
+        --fast --json BENCH_experiments.json
+
+``--json`` writes the ``check_regression``-compatible shape (one
+``configs`` entry per scenario), so CI can gate scenario runs exactly
+like the classic benchmarks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.experiments.registry import list_scenarios
+from repro.experiments.runner import run, write_json
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.experiments")
+    ap.add_argument(
+        "--list", action="store_true", help="list registered scenarios and exit"
+    )
+    ap.add_argument(
+        "--scenario",
+        action="append",
+        default=[],
+        metavar="NAME",
+        help="scenario to run (repeatable)",
+    )
+    ap.add_argument(
+        "--fast", action="store_true", help="reduced step counts (CI sanity)"
+    )
+    ap.add_argument(
+        "--seed", type=int, default=None, help="override the scenario seed"
+    )
+    ap.add_argument(
+        "--json",
+        type=str,
+        default=None,
+        metavar="OUT",
+        help="write results as JSON (BENCH_*.json for CI gating)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.list or not args.scenario:
+        print(f"{'scenario':<24} {'system':<12} description")
+        for spec in list_scenarios():
+            print(f"{spec.name:<24} {spec.system:<12} {spec.description}")
+        return 0
+
+    reports = []
+    for name in args.scenario:
+        report = run(name, fast=args.fast, seed=args.seed)
+        reports.append(report)
+        curve = " -> ".join(
+            f"{p.mean_err:.2f}@{p.t:.1f}(n={p.n_agents})" for p in report.eval_curve
+        )
+        print(
+            f"{report.scenario},mean_dist_err={report.mean_dist_err:.3f},"
+            f"best_agent_err={report.best_agent_err:.3f},"
+            f"sim_makespan={report.makespan:.2f},n_rounds={report.n_rounds},"
+            f"total_bytes={report.total_bytes}"
+        )
+        print(f"derived,{report.scenario},eval_curve={curve}")
+    if args.json:
+        write_json(args.json, reports, fast=args.fast)
+        print(f"wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

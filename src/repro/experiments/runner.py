@@ -1,0 +1,213 @@
+"""Build and execute scenarios: ``run(spec) -> Report``.
+
+The runner is the only place a system is ever constructed from a
+scenario: it resolves the named spec, mirrors ``spec.seed`` into the
+system config (one seed, every stream derived), wires churn schedules,
+per-link heterogeneous rates, and evaluation probes through the
+lifecycle-hook machinery, runs the system, and folds the final
+evaluation into the :class:`~repro.core.experiment.Report`.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, replace
+from typing import List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.core.experiment import EvalPoint, ExperimentHooks, Report
+from repro.core.federated import ADFLLSystem, CentralAggregationSystem
+from repro.experiments.protocol import SupportsChurn, System
+from repro.experiments.registry import get_scenario
+from repro.experiments.spec import ScenarioSpec
+from repro.experiments.systems import BaselineSystem
+from repro.rl.synth import all_tasks, paper_eight_tasks, patient_split
+
+SpecLike = Union[str, ScenarioSpec]
+
+
+def resolve(
+    spec: SpecLike, *, fast: bool = False, seed: Optional[int] = None
+) -> ScenarioSpec:
+    """Name -> registered spec, plus the seed/fast variants."""
+    if isinstance(spec, str):
+        spec = get_scenario(spec)
+    if seed is not None:
+        spec = spec.with_seed(seed)
+    if fast:
+        spec = spec.fast()
+    return spec
+
+
+@dataclass
+class _Built:
+    spec: ScenarioSpec
+    system: System
+    tasks: list
+    eval_tasks: list
+    train_patients: list
+    test_patients: list
+    curve: List[EvalPoint]
+
+
+def _tasks_for(spec: ScenarioSpec) -> list:
+    tasks = list(paper_eight_tasks() if spec.task_set == "paper8" else all_tasks())
+    if spec.n_tasks is not None:
+        tasks = tasks[: spec.n_tasks]
+    return tasks
+
+
+def _build(spec: ScenarioSpec, hooks: Sequence[ExperimentHooks]) -> _Built:
+    tasks = _tasks_for(spec)
+    eval_tasks = tasks if spec.eval_tasks is None else tasks[: spec.eval_tasks]
+    train_p, test_p = patient_split(spec.n_patients)
+    sys_cfg = replace(spec.sys, seed=spec.seed)  # one seed, every stream
+    curve: List[EvalPoint] = []
+
+    if spec.system == "adfll":
+        system: System = ADFLLSystem(
+            sys_cfg, spec.dqn, tasks, train_p, hooks=tuple(hooks)
+        )
+        if spec.agent_sites:
+            system.network.configure_sites(
+                dict(enumerate(spec.agent_sites)),
+                hub_site=dict(enumerate(spec.hub_sites)),
+                intra=spec.intra_link,
+                inter=spec.inter_link,
+            )
+        if spec.churn:
+            assert isinstance(system, SupportsChurn)
+            _schedule_probes(system, spec, eval_tasks, test_p, curve)
+            system.schedule_churn(spec.churn)
+    elif spec.system == "fedavg":
+        if spec.churn or spec.agent_sites:
+            raise ValueError(f"{spec.name}: {spec.system} supports no churn/sites")
+        system = CentralAggregationSystem(
+            sys_cfg.n_agents,
+            spec.dqn,
+            tasks,
+            train_p,
+            rounds=sys_cfg.rounds,
+            steps=sys_cfg.train_steps_per_round,
+            erb_capacity=sys_cfg.erb_capacity,
+            seed=spec.seed,
+        )
+    else:  # single-agent baselines
+        if spec.churn or spec.agent_sites:
+            raise ValueError(f"{spec.name}: {spec.system} supports no churn/sites")
+        system = BaselineSystem(
+            spec.system,
+            spec.dqn,
+            tasks,
+            train_p,
+            steps=sys_cfg.train_steps_per_round,
+            erb_capacity=sys_cfg.erb_capacity,
+            seed=spec.seed,
+        )
+    return _Built(spec, system, tasks, eval_tasks, train_p, test_p, curve)
+
+
+def _schedule_probes(
+    system: ADFLLSystem,
+    spec: ScenarioSpec,
+    eval_tasks: list,
+    test_patients: list,
+    curve: List[EvalPoint],
+) -> None:
+    """Evaluation probes at each churn time (before the churn applies:
+    scheduler ties break by insertion order, and these are registered
+    first), feeding the report's forgetting/recovery curve."""
+    if not spec.eval_at_churn:
+        return
+
+    def probe(sched, t: float) -> None:
+        point = _eval_point(system, spec, eval_tasks, test_patients, t)
+        curve.append(point)
+        system._emit("on_eval", point)
+
+    for at in sorted({ev.at for ev in spec.churn}):
+        system.sched.at(at, probe, tag="eval_probe")
+
+
+def _eval_point(
+    system: System,
+    spec: ScenarioSpec,
+    eval_tasks: list,
+    test_patients: list,
+    t: float,
+) -> EvalPoint:
+    errors = system.evaluate(
+        eval_tasks,
+        test_patients,
+        max_patients=spec.eval_patients,
+        n_episodes=spec.eval_episodes,
+    )
+    per_agent = {
+        label: float(np.mean(list(errs.values()))) for label, errs in errors.items()
+    }
+    mean = float(np.mean(list(per_agent.values()))) if per_agent else float("nan")
+    return EvalPoint(t=t, n_agents=len(per_agent), mean_err=mean, per_agent=per_agent)
+
+
+def build(
+    spec: SpecLike,
+    *,
+    fast: bool = False,
+    seed: Optional[int] = None,
+    hooks: Sequence[ExperimentHooks] = (),
+) -> System:
+    """Construct (but do not run) the system a scenario describes."""
+    return _build(resolve(spec, fast=fast, seed=seed), hooks).system
+
+
+def run(
+    spec: SpecLike,
+    *,
+    fast: bool = False,
+    seed: Optional[int] = None,
+    hooks: Sequence[ExperimentHooks] = (),
+    json_path: Optional[str] = None,
+) -> Report:
+    """Execute one scenario end to end and return its :class:`Report`."""
+    rspec = resolve(spec, fast=fast, seed=seed)
+    b = _build(rspec, hooks)
+    report = b.system.run()
+    report.scenario = rspec.name
+    report.seed = rspec.seed
+    report.task_errors = b.system.evaluate(
+        b.eval_tasks,
+        b.test_patients,
+        max_patients=rspec.eval_patients,
+        n_episodes=rspec.eval_episodes,
+    )
+    means = report.agent_means()
+    vals = list(means.values())  # empty if churn removed every agent
+    report.mean_dist_err = float(np.mean(vals)) if vals else float("nan")
+    report.best_agent_err = float(np.min(vals)) if vals else float("nan")
+    report.eval_patients = rspec.eval_patients
+    report.eval_episodes = rspec.eval_episodes
+    final = EvalPoint(
+        t=report.makespan,
+        n_agents=len(means),
+        mean_err=report.mean_dist_err,
+        per_agent=means,
+    )
+    report.eval_curve = [*b.curve, final]
+    if json_path:
+        write_json(json_path, [report], fast=fast)
+    return report
+
+
+def write_json(path: str, reports: Sequence[Report], *, fast: bool = False) -> None:
+    """One ``BENCH_*.json`` in the shape ``check_regression`` gates on."""
+    payload = {
+        "benchmark": "experiments",
+        "fast": bool(fast),
+        "configs": {r.scenario: r.summary() for r in reports},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+
+
+__all__ = ["build", "resolve", "run", "write_json"]

@@ -1,0 +1,88 @@
+"""Frozen, declarative scenario descriptions.
+
+A :class:`ScenarioSpec` captures *everything* an experiment needs —
+system kind, task set, patient pool, the full
+:class:`~repro.configs.adfll_dqn.ADFLLConfig` (topology, share planes,
+compression, speeds, hub layout), a churn schedule, per-link
+heterogeneous rates (site assignments + intra/inter links), and the
+evaluation protocol — so a benchmark is a registry lookup plus
+reporting, never bespoke wiring.
+
+``spec.seed`` is the single source of truth for randomness: the runner
+mirrors it into ``sys.seed`` before construction, and every stream in
+the system derives from it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
+from repro.core.experiment import ChurnEvent
+from repro.core.gossip import LinkModel
+
+SYSTEMS = ("adfll", "fedavg", "all_knowing", "partial", "sequential")
+TASK_SETS = ("paper8", "all")
+
+
+@dataclass(frozen=True)
+class ScenarioSpec:
+    """One named, fully declarative experiment."""
+
+    name: str
+    system: str = "adfll"  # one of SYSTEMS
+    description: str = ""
+    # -- problem -----------------------------------------------------------
+    task_set: str = "paper8"  # "paper8" (deployment suite) | "all" (24 envs)
+    n_tasks: Optional[int] = None  # truncate the training task list
+    n_patients: int = 40  # patient pool size (80:20 split)
+    dqn: DQNConfig = field(default_factory=DQNConfig)
+    sys: ADFLLConfig = field(default_factory=ADFLLConfig)
+    seed: int = 0
+    # -- scenario dynamics -------------------------------------------------
+    churn: Tuple[ChurnEvent, ...] = ()  # timed add/remove events
+    agent_sites: Tuple[int, ...] = ()  # per-agent site ids (hetero links)
+    hub_sites: Tuple[int, ...] = ()  # per-hub site ids
+    intra_link: Optional[LinkModel] = None  # fast same-site link
+    inter_link: Optional[LinkModel] = None  # slow cross-site link
+    # -- evaluation --------------------------------------------------------
+    eval_tasks: Optional[int] = None  # eval on first N tasks (None = all)
+    eval_patients: Optional[int] = 4  # held-out patients per task
+    eval_episodes: int = 4  # greedy rollouts per patient
+    eval_at_churn: bool = True  # probe the error at each churn event
+    # -- fast (CI) variant -------------------------------------------------
+    fast_train_steps: int = 10
+    fast_eval_tasks: Optional[int] = None
+
+    def __post_init__(self):
+        if self.system not in SYSTEMS:
+            raise ValueError(f"unknown system: {self.system!r}")
+        if self.task_set not in TASK_SETS:
+            raise ValueError(f"unknown task_set: {self.task_set!r}")
+        if self.agent_sites and (self.intra_link is None and self.inter_link is None):
+            raise ValueError("agent_sites given without intra/inter links")
+
+    # -- derived variants --------------------------------------------------
+    def with_seed(self, seed: int) -> "ScenarioSpec":
+        """Re-seed the whole scenario (spec and system config stay in
+        lockstep — there is exactly one seed)."""
+        return replace(self, seed=seed, sys=replace(self.sys, seed=seed))
+
+    def fast(self) -> "ScenarioSpec":
+        """The CI-sized variant: fewer train steps, optionally fewer
+        evaluation tasks; everything else identical."""
+        steps = min(self.sys.train_steps_per_round, self.fast_train_steps)
+        eval_tasks = (
+            self.fast_eval_tasks
+            if self.fast_eval_tasks is not None
+            else self.eval_tasks
+        )
+        return replace(
+            self,
+            sys=replace(self.sys, train_steps_per_round=steps),
+            eval_tasks=eval_tasks,
+        )
+
+
+__all__ = ["SYSTEMS", "TASK_SETS", "ScenarioSpec"]

@@ -15,6 +15,7 @@ We therefore derive:
 
 ``cost_analysis()`` numbers are still recorded for reference.
 """
+
 from __future__ import annotations
 
 import math
@@ -29,17 +30,60 @@ import numpy as np
 # jaxpr FLOP counter
 # ---------------------------------------------------------------------------
 _ELEMENTWISE_1 = {
-    "add", "sub", "mul", "div", "max", "min", "neg", "abs", "floor",
-    "ceil", "round", "sign", "and", "or", "xor", "not", "select_n",
-    "clamp", "rem", "pow", "integer_pow",
+    "add",
+    "sub",
+    "mul",
+    "div",
+    "max",
+    "min",
+    "neg",
+    "abs",
+    "floor",
+    "ceil",
+    "round",
+    "sign",
+    "and",
+    "or",
+    "xor",
+    "not",
+    "select_n",
+    "clamp",
+    "rem",
+    "pow",
+    "integer_pow",
 }
 _ELEMENTWISE_T = {  # transcendental: count a few flops each
-    "exp", "log", "tanh", "logistic", "sin", "cos", "sqrt", "rsqrt",
-    "erf", "exp2", "log1p", "expm1", "cbrt", "tan", "atan2",
+    "exp",
+    "log",
+    "tanh",
+    "logistic",
+    "sin",
+    "cos",
+    "sqrt",
+    "rsqrt",
+    "erf",
+    "exp2",
+    "log1p",
+    "expm1",
+    "cbrt",
+    "tan",
+    "atan2",
 }
-_REDUCE = {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
-           "reduce_and", "reduce_or", "argmax", "argmin",
-           "cumsum", "cumprod", "cummax", "cummin", "reduce_precision"}
+_REDUCE = {
+    "reduce_sum",
+    "reduce_max",
+    "reduce_min",
+    "reduce_prod",
+    "reduce_and",
+    "reduce_or",
+    "argmax",
+    "argmin",
+    "cumsum",
+    "cumprod",
+    "cummax",
+    "cummin",
+    "reduce_precision",
+}
 
 
 def _size(aval) -> int:
@@ -89,8 +133,9 @@ def _jaxpr_flops(jaxpr, n_shards: int = 1) -> float:
             body = _jaxpr_flops(eqn.params["jaxpr"].jaxpr, n_shards)
             total += body * eqn.params["length"]
         elif prim == "cond":
-            total += max(_jaxpr_flops(b.jaxpr, n_shards)
-                         for b in eqn.params["branches"])
+            total += max(
+                _jaxpr_flops(b.jaxpr, n_shards) for b in eqn.params["branches"]
+            )
         elif prim == "shard_map":
             for sub in _sub_jaxprs(eqn.params):
                 total += _jaxpr_flops(sub, 1) * n_shards
@@ -116,13 +161,32 @@ def count_flops(fn, *args, n_shards: int = 1, **kw) -> float:
 # ---------------------------------------------------------------------------
 # HLO collective parser
 # ---------------------------------------------------------------------------
-_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
-                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
-                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_DTYPE_BYTES = {
+    "f64": 8,
+    "f32": 4,
+    "bf16": 2,
+    "f16": 2,
+    "s64": 8,
+    "u64": 8,
+    "s32": 4,
+    "u32": 4,
+    "s16": 2,
+    "u16": 2,
+    "s8": 1,
+    "u8": 1,
+    "pred": 1,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+}
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
-_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-                "collective-permute")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
 
 
 def _shape_bytes(sig: str) -> int:
@@ -180,19 +244,22 @@ def parse_collectives(hlo_text: str) -> Dict[str, float]:
                 bm = re.search(r"body=%?([\w\.\-]+)", s)
                 cm = re.search(r"condition=%?([\w\.\-]+)", s)
                 if bm:
-                    calls[cname].append((bm.group(1),
-                                         cm.group(1) if cm else None))
+                    calls[cname].append((bm.group(1), cm.group(1) if cm else None))
             elif base in ("call", "fusion", "conditional"):
                 for sub in re.findall(r"(?:calls|to_apply)=%?([\w\.\-]+)", s):
                     calls[cname].append((sub, None))
-                for sub in re.findall(
-                        r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w\.\-, %]+)", s):
+                branch_re = (
+                    r"(?:true_computation|false_computation"
+                    r"|branch_computations)=\{?%?([\w\.\-, %]+)"
+                )
+                for sub in re.findall(branch_re, s):
                     for c2 in re.split(r"[,\s%]+", sub):
                         if c2:
                             calls[cname].append((c2, None))
         # trip count: biggest integer constant compared in a condition comp
-        consts = [int(v) for line in lines
-                  for v in re.findall(r"constant\((\d+)\)", line)]
+        consts = [
+            int(v) for line in lines for v in re.findall(r"constant\((\d+)\)", line)
+        ]
         if consts:
             trip_hint[cname] = max(consts)
 
@@ -246,9 +313,15 @@ def top_collectives(hlo_text: str, n: int = 20):
 # ---------------------------------------------------------------------------
 # analytic HBM-traffic model (per device, per step)
 # ---------------------------------------------------------------------------
-def analytic_hbm_bytes(*, mode: str, param_bytes_dev: float,
-                       opt_bytes_dev: float, act_bytes_dev: float,
-                       cache_bytes_dev: float, io_bytes_dev: float) -> Dict[str, float]:
+def analytic_hbm_bytes(
+    *,
+    mode: str,
+    param_bytes_dev: float,
+    opt_bytes_dev: float,
+    act_bytes_dev: float,
+    cache_bytes_dev: float,
+    io_bytes_dev: float,
+) -> Dict[str, float]:
     """Assumptions (documented in EXPERIMENTS.md §Roofline):
     train : params read fwd + read bwd + write; grads write+read;
             moments read+write; checkpointed activations write+read plus
@@ -257,11 +330,16 @@ def analytic_hbm_bytes(*, mode: str, param_bytes_dev: float,
     decode: params read once (the decode wall); cache read + small write.
     """
     if mode == "train":
-        total = (3 * param_bytes_dev + 2 * param_bytes_dev  # grads ~ params
-                 + 2 * opt_bytes_dev + 3 * act_bytes_dev + io_bytes_dev)
-    elif mode == "prefill":
-        total = param_bytes_dev + 2 * act_bytes_dev + cache_bytes_dev \
+        grads = 2 * param_bytes_dev  # grads ~ params
+        total = (
+            3 * param_bytes_dev
+            + grads
+            + 2 * opt_bytes_dev
+            + 3 * act_bytes_dev
             + io_bytes_dev
+        )
+    elif mode == "prefill":
+        total = param_bytes_dev + 2 * act_bytes_dev + cache_bytes_dev + io_bytes_dev
     else:  # decode
         total = param_bytes_dev + cache_bytes_dev + io_bytes_dev
     return {"total": float(total)}

@@ -1,17 +1,18 @@
 import os
+
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # ^ MUST precede any jax import: jax locks the device count on first init.
 # The forced 512 host devices exist ONLY for this dry-run process.
 
-import argparse          # noqa: E402
-import json              # noqa: E402
-import math              # noqa: E402
-import subprocess        # noqa: E402
-import sys               # noqa: E402
-import time              # noqa: E402
+import argparse  # noqa: E402
+import json  # noqa: E402
+import math  # noqa: E402
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
 from typing import Optional  # noqa: E402
 
-import jax               # noqa: E402
+import jax  # noqa: E402
 
 from repro.configs.base import (  # noqa: E402
     ASSIGNED,
@@ -60,8 +61,7 @@ OPTIMIZED = {
     ("musicgen-medium", "train"): {"dp_over_model": True},
     ("qwen2-vl-2b", "train"): {"dp_over_model": True},
     ("xlstm-125m", "train"): {"dp_over_model": True},
-    ("jamba-1.5-large-398b", "train"): {"microbatches": 4,
-                                        "seq_shard": False},
+    ("jamba-1.5-large-398b", "train"): {"microbatches": 4, "seq_shard": False},
 }
 
 SKIPS = {
@@ -84,33 +84,52 @@ def _bytes_per_device(sds_tree) -> float:
             shard = sh.shard_shape(leaf.shape)
         else:
             shard = leaf.shape
-        total += math.prod(shard) * leaf.dtype.itemsize if shard else \
-            leaf.dtype.itemsize
+        if shard:
+            total += math.prod(shard) * leaf.dtype.itemsize
+        else:
+            total += leaf.dtype.itemsize
     return total
 
 
-def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
-             policy_overrides: Optional[dict] = None,
-             print_analyses: bool = True, optimized: bool = False) -> dict:
+def run_pair(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    policy_overrides: Optional[dict] = None,
+    print_analyses: bool = True,
+    optimized: bool = False,
+) -> dict:
     cfg = get_config(arch)
     shape = INPUT_SHAPES[shape_name]
     if optimized:
-        policy_overrides = dict(OPTIMIZED.get((arch, shape.mode), {}),
-                                **(policy_overrides or {}))
+        base = OPTIMIZED.get((arch, shape.mode), {})
+        policy_overrides = dict(base, **(policy_overrides or {}))
     if (arch, shape_name) in SKIPS:
-        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
-                "status": "skipped", "reason": SKIPS[(arch, shape_name)]}
+        return {
+            "arch": arch,
+            "shape": shape_name,
+            "multi_pod": multi_pod,
+            "status": "skipped",
+            "reason": SKIPS[(arch, shape_name)],
+        }
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     batch_axes = ("pod", "data") if multi_pod else ("data",)
-    kw = dict(batch_axes=batch_axes, fsdp_axes=("data",),
-              microbatches=MICROBATCHES.get((arch, shape.mode), 1))
+    kw = dict(
+        batch_axes=batch_axes,
+        fsdp_axes=("data",),
+        microbatches=MICROBATCHES.get((arch, shape.mode), 1),
+    )
     overrides = dict(policy_overrides or {})
     if overrides.pop("dp_over_model", False):
         # pure data parallelism: the model axis carries batch, weights are
         # FSDP-sharded over data and replicated over model
-        kw.update(batch_axes=batch_axes + ("model",), tensor_parallel=False,
-                  seq_shard=False)
+        kw.update(
+            batch_axes=batch_axes + ("model",),
+            tensor_parallel=False,
+            seq_shard=False,
+        )
     if overrides.pop("no_fsdp", False):
         kw.update(fsdp_axes=())
     kw.update(overrides)
@@ -132,8 +151,7 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
         jitted = jax.jit(step)
     else:  # decode
         pspec, _ = params_specs(cfg, mesh, policy)
-        cspec, _ = cache_specs(cfg, shape.global_batch, shape.seq_len,
-                               mesh, policy)
+        cspec, _ = cache_specs(cfg, shape.global_batch, shape.seq_len, mesh, policy)
         bspec = input_specs(cfg, shape, mesh, policy)
         step = make_serve_step(cfg, mesh=mesh, policy=policy)
         args = (pspec, cspec, bspec)
@@ -149,13 +167,19 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
     if print_analyses:
-        print(f"memory_analysis: arg={ma.argument_size_in_bytes/1e9:.3f}GB "
-              f"out={ma.output_size_in_bytes/1e9:.3f}GB "
-              f"temp={ma.temp_size_in_bytes/1e9:.3f}GB "
-              f"(proof of per-device footprint)")
-        print(f"cost_analysis: flops={ca.get('flops', 0):.3e} "
-              f"bytes={ca.get('bytes accessed', 0):.3e} "
-              f"(while-bodies counted once — see corrected terms)")
+        arg_gb = ma.argument_size_in_bytes / 1e9
+        out_gb = ma.output_size_in_bytes / 1e9
+        tmp_gb = ma.temp_size_in_bytes / 1e9
+        print(
+            f"memory_analysis: arg={arg_gb:.3f}GB out={out_gb:.3f}GB "
+            f"temp={tmp_gb:.3f}GB (proof of per-device footprint)"
+        )
+        flops = ca.get("flops", 0)
+        bytes_acc = ca.get("bytes accessed", 0)
+        print(
+            f"cost_analysis: flops={flops:.3e} bytes={bytes_acc:.3e} "
+            f"(while-bodies counted once — see corrected terms)"
+        )
 
     # corrected global FLOPs from the jaxpr (scan-exact)
     n_dev = mesh.size
@@ -181,50 +205,69 @@ def run_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     else:
         param_dev = _bytes_per_device(args[0])
         opt_dev = 0.0
-        cache_dev = _bytes_per_device(args[1]) if shape.mode == "decode" \
-            else 0.0
+        cache_dev = _bytes_per_device(args[1]) if shape.mode == "decode" else 0.0
     mp = mesh.shape["model"]
     dp = chips // mp
     seq_div = mp if (policy.seq_shard and shape.seq_len % mp == 0) else 1
-    act_dev = (cfg.n_layers * shape.global_batch * shape.seq_len
-               * cfg.d_model * dtype_b
-               / max(dp, 1) / seq_div / policy.microbatches) \
-        if shape.mode != "decode" else 0.0
+    if shape.mode != "decode":
+        act_dev = (
+            cfg.n_layers
+            * shape.global_batch
+            * shape.seq_len
+            * cfg.d_model
+            * dtype_b
+            / max(dp, 1)
+            / seq_div
+            / policy.microbatches
+        )
+    else:
+        act_dev = 0.0
     io_dev = _bytes_per_device(args[-1])
     hbm = analysis.analytic_hbm_bytes(
-        mode=shape.mode, param_bytes_dev=param_dev, opt_bytes_dev=opt_dev,
-        act_bytes_dev=act_dev, cache_bytes_dev=cache_dev, io_bytes_dev=io_dev)
+        mode=shape.mode,
+        param_bytes_dev=param_dev,
+        opt_bytes_dev=opt_dev,
+        act_bytes_dev=act_dev,
+        cache_bytes_dev=cache_dev,
+        io_bytes_dev=io_dev,
+    )
 
+    ca_keep = {k: ca.get(k) for k in ("flops", "bytes accessed") if k in ca}
     compute_t = flops_global / (chips * PEAK_FLOPS_BF16)
-    memory_t = hbm["total"] / HBM_BW            # per-device traffic
+    memory_t = hbm["total"] / HBM_BW  # per-device traffic
     collective_t = coll.get("total", 0.0) / ICI_BW
 
-    terms = {"compute_s": compute_t, "memory_s": memory_t,
-             "collective_s": collective_t}
+    terms = {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": collective_t,
+    }
     bottleneck = max(terms, key=terms.get)
 
     result = {
-        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
         "status": "ok",
         "mesh": dict(mesh.shape),
         "microbatches": policy.microbatches,
-        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
         "memory_analysis": {
             "arg_bytes": ma.argument_size_in_bytes,
             "output_bytes": ma.output_size_in_bytes,
             "temp_bytes": ma.temp_size_in_bytes,
             "peak_bytes": ma.argument_size_in_bytes + ma.temp_size_in_bytes,
         },
-        "cost_analysis": {k: ca.get(k) for k in
-                          ("flops", "bytes accessed") if k in ca},
+        "cost_analysis": ca_keep,
         "flops_global_jaxpr": flops_global,
         "collective_bytes_per_dev": coll,
         "hbm_bytes_per_dev": hbm["total"],
         "model_flops": model_flops,
-        "useful_flops_ratio": (model_flops / flops_global
-                               if flops_global else None),
+        "useful_flops_ratio": model_flops / flops_global if flops_global else None,
         "roofline": dict(terms, bottleneck=bottleneck),
-        "params_total": total_p, "params_active": active_p,
+        "params_total": total_p,
+        "params_active": active_p,
     }
     return result
 
@@ -234,14 +277,17 @@ def main(argv=None):
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--all", action="store_true",
-                    help="run every (arch x shape) in subprocesses")
+    ap.add_argument(
+        "--all", action="store_true", help="run every (arch x shape) in subprocesses"
+    )
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--force", action="store_true")
-    ap.add_argument("--set", default=None,
-                    help="policy overrides k=v,k=v (ints/bools)")
-    ap.add_argument("--optimized", action="store_true",
-                    help="apply the EXPERIMENTS.md §Perf launch settings")
+    ap.add_argument("--set", default=None, help="policy overrides k=v,k=v (ints/bools)")
+    ap.add_argument(
+        "--optimized",
+        action="store_true",
+        help="apply the EXPERIMENTS.md §Perf launch settings",
+    )
     args = ap.parse_args(argv)
 
     os.makedirs(args.out, exist_ok=True)
@@ -254,8 +300,17 @@ def main(argv=None):
             if os.path.exists(path) and not args.force:
                 print(f"[skip cached] {a} {s}")
                 continue
-            cmd = [sys.executable, "-m", "repro.launch.dryrun",
-                   "--arch", a, "--shape", s, "--out", args.out]
+            cmd = [
+                sys.executable,
+                "-m",
+                "repro.launch.dryrun",
+                "--arch",
+                a,
+                "--shape",
+                s,
+                "--out",
+                args.out,
+            ]
             if args.multi_pod:
                 cmd.append("--multi-pod")
             print(f"[run] {a} {s} {tag}", flush=True)
@@ -265,11 +320,15 @@ def main(argv=None):
             if r.returncode != 0:
                 err = "\n".join((r.stderr or "").splitlines()[-12:])
                 print(f"[FAIL] {a} {s}: {err}")
+                failure = {
+                    "arch": a,
+                    "shape": s,
+                    "multi_pod": args.multi_pod,
+                    "status": "error",
+                    "error": err[-2000:],
+                }
                 with open(path, "w") as f:
-                    json.dump({"arch": a, "shape": s,
-                               "multi_pod": args.multi_pod,
-                               "status": "error", "error": err[-2000:]},
-                              f, indent=1)
+                    json.dump(failure, f, indent=1)
         return
 
     overrides = {}
@@ -278,15 +337,19 @@ def main(argv=None):
             k, v = kv.split("=")
             overrides[k] = (v == "True") if v in ("True", "False") else int(v)
 
-    res = run_pair(args.arch, args.shape, multi_pod=args.multi_pod,
-                   policy_overrides=overrides or None,
-                   optimized=args.optimized)
+    res = run_pair(
+        args.arch,
+        args.shape,
+        multi_pod=args.multi_pod,
+        policy_overrides=overrides or None,
+        optimized=args.optimized,
+    )
     tag = "multi" if args.multi_pod else "single"
     path = os.path.join(args.out, f"{args.arch}__{args.shape}__{tag}.json")
     with open(path, "w") as f:
         json.dump(res, f, indent=1)
-    print(json.dumps({k: v for k, v in res.items()
-                      if k not in ("cost_analysis",)}, indent=1))
+    slim = {k: v for k, v in res.items() if k not in ("cost_analysis",)}
+    print(json.dumps(slim, indent=1))
 
 
 if __name__ == "__main__":

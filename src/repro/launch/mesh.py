@@ -3,6 +3,7 @@
 Functions, not module-level constants: importing this module never touches
 jax device state (smoke tests must keep seeing 1 CPU device).
 """
+
 from __future__ import annotations
 
 import jax
@@ -21,6 +22,6 @@ def make_local_mesh():
 
 
 # TPU v5e hardware constants (per chip) — roofline denominators.
-PEAK_FLOPS_BF16 = 197e12          # FLOP/s
-HBM_BW = 819e9                    # B/s
-ICI_BW = 50e9                     # B/s per link
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link

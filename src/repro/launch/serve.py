@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b-smoke \
         --batch 4 --prompt-len 64 --gen 32
 """
+
 from __future__ import annotations
 
 import argparse
@@ -41,15 +42,16 @@ def main(argv=None):
     b, s = args.batch, args.prompt_len
     total = s + args.gen
     if cfg.input_kind == "embeds":
-        batch = {"embeds": jnp.asarray(rng.standard_normal(
-            (b, s, cfg.d_model)).astype(np.float32))}
+        emb = rng.standard_normal((b, s, cfg.d_model)).astype(np.float32)
+        batch = {"embeds": jnp.asarray(emb)}
     else:
-        batch = {"tokens": jnp.asarray(
-            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32)}
+        tok0 = rng.integers(0, cfg.vocab_size, (b, s))
+        batch = {"tokens": jnp.asarray(tok0, jnp.int32)}
 
     t0 = time.time()
     last_logits, pre_caches = prefill(params, batch)
-    print(f"prefill [{b}x{s}] in {time.time()-t0:.2f}s")
+    dt = time.time() - t0
+    print(f"prefill [{b}x{s}] in {dt:.2f}s")
 
     # decode caches sized for the full conversation; copy prefill k/v in.
     caches = init_caches(cfg, b, total)
@@ -61,31 +63,20 @@ def main(argv=None):
     for i in range(args.gen):
         step_batch = {"pos": jnp.full((b,), s + i, jnp.int32)}
         if cfg.input_kind == "embeds":
-            step_batch["embeds"] = jnp.zeros((b, 1, cfg.d_model),
-                                             jnp.float32)
+            step_batch["embeds"] = jnp.zeros((b, 1, cfg.d_model), jnp.float32)
         else:
             step_batch["tokens"] = tok
         logits, caches = serve(params, caches, step_batch)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
         out_tokens.append(np.asarray(tok))
     dt = time.time() - t0
-    print(f"decoded {args.gen} tokens x {b} reqs in {dt:.2f}s "
-          f"({args.gen*b/dt:.1f} tok/s)")
+    tok_s = args.gen * b / dt
+    print(f"decoded {args.gen} tokens x {b} reqs in {dt:.2f}s ({tok_s:.1f} tok/s)")
     print("sample token ids:", np.concatenate(out_tokens, 1)[0][:16])
 
 
 def _load_prefill(cfg, caches, pre_caches, s):
     """Copy prefill k/v (and recurrent states) into the decode caches."""
-    def copy(dst, src):
-        if dst.ndim >= 2 and src.ndim == dst.ndim and \
-                dst.shape[0] == src.shape[0] and dst.shape[1] != src.shape[1]:
-            # [B, S_cache, ...] <- [B, s, ...] (or stacked group caches)
-            return dst.at[:, :src.shape[1]].set(src.astype(dst.dtype))
-        if dst.ndim >= 3 and src.ndim == dst.ndim and \
-                dst.shape[1] != src.shape[1]:
-            return dst.at[:, :, :src.shape[2]].set(src.astype(dst.dtype))
-        return src.astype(dst.dtype).reshape(dst.shape) \
-            if src.shape != dst.shape else src.astype(dst.dtype)
 
     def copy_leaf(dst, src):
         try:

@@ -2,8 +2,10 @@
 
 Everything here is shape-level only: no device allocation ever happens.
 """
+
 from __future__ import annotations
 
+import math
 from typing import Any, Dict, Optional
 
 import jax
@@ -21,6 +23,7 @@ def opt_cfg_for(cfg: ModelConfig) -> AdamWConfig:
     """bf16 moments for the >300B configs (f32 would not fit 16 GB/chip
     at 256-way sharding — see DESIGN.md §5)."""
     from repro.configs.base import param_count
+
     total, _ = param_count(cfg)
     dtype = "bfloat16" if total > 1e11 else "float32"
     return AdamWConfig(opt_dtype=dtype)
@@ -30,17 +33,19 @@ def _sds(tree, shardings=None):
     """eval-shaped pytree -> ShapeDtypeStructs with shardings attached."""
     if shardings is None:
         return jax.tree_util.tree_map(
-            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree
+        )
     return jax.tree_util.tree_map(
         lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
-        tree, shardings)
+        tree,
+        shardings,
+    )
 
 
 def _batch_pspec(mesh: Optional[Mesh], policy: ShardingPolicy, b: int):
     if mesh is None:
         return None
     batch = tuple(a for a in policy.batch_axes if a in mesh.axis_names)
-    import math
     if not batch or b % math.prod(mesh.shape[a] for a in batch) != 0:
         # fall back: try fewer axes, else replicate
         batch = tuple(a for a in batch if b % mesh.shape[a] == 0)[:1]
@@ -49,8 +54,12 @@ def _batch_pspec(mesh: Optional[Mesh], policy: ShardingPolicy, b: int):
     return batch if len(batch) > 1 else batch[0]
 
 
-def state_specs(cfg: ModelConfig, mesh: Optional[Mesh],
-                policy: ShardingPolicy, opt_cfg: AdamWConfig):
+def state_specs(
+    cfg: ModelConfig,
+    mesh: Optional[Mesh],
+    policy: ShardingPolicy,
+    opt_cfg: AdamWConfig,
+):
     """TrainState ShapeDtypeStructs + shardings."""
     key = jax.random.PRNGKey(0)
     pshape = jax.eval_shape(lambda: model_lib.init_params(cfg, key))
@@ -67,8 +76,7 @@ def state_specs(cfg: ModelConfig, mesh: Optional[Mesh],
     return _sds({"params": pshape, "opt": oshape}, shardings), shardings
 
 
-def params_specs(cfg: ModelConfig, mesh: Optional[Mesh],
-                 policy: ShardingPolicy):
+def params_specs(cfg: ModelConfig, mesh: Optional[Mesh], policy: ShardingPolicy):
     key = jax.random.PRNGKey(0)
     pshape = jax.eval_shape(lambda: model_lib.init_params(cfg, key))
     if mesh is None:
@@ -77,25 +85,34 @@ def params_specs(cfg: ModelConfig, mesh: Optional[Mesh],
     return _sds(pshape, pshard), pshard
 
 
-def cache_specs(cfg: ModelConfig, batch: int, seq_len: int,
-                mesh: Optional[Mesh], policy: ShardingPolicy):
-    cshape = jax.eval_shape(
-        lambda: model_lib.init_caches(cfg, batch, seq_len))
+def cache_specs(
+    cfg: ModelConfig,
+    batch: int,
+    seq_len: int,
+    mesh: Optional[Mesh],
+    policy: ShardingPolicy,
+):
+    cshape = jax.eval_shape(lambda: model_lib.init_caches(cfg, batch, seq_len))
     if mesh is None:
         return _sds(cshape), None
     cshard = cache_shardings(cshape, mesh, policy)
     return _sds(cshape, cshard), cshard
 
 
-def input_specs(cfg: ModelConfig, shape: InputShape, mesh: Optional[Mesh],
-                policy: ShardingPolicy) -> Dict[str, Any]:
+def input_specs(
+    cfg: ModelConfig,
+    shape: InputShape,
+    mesh: Optional[Mesh],
+    policy: ShardingPolicy,
+) -> Dict[str, Any]:
     """Model-input ShapeDtypeStructs for one (arch x input-shape) pair."""
     b = shape.global_batch
     s = shape.seq_len
     bspec = _batch_pspec(mesh, policy, b)
     dt = jnp.dtype(cfg.dtype)
-    sh = (lambda *dims: NamedSharding(mesh, P(*dims))) if mesh else \
-        (lambda *dims: None)
+
+    def sh(*dims):
+        return NamedSharding(mesh, P(*dims)) if mesh else None
 
     def sds(shape_, dtype, spec=None):
         if mesh is None:
@@ -105,15 +122,13 @@ def input_specs(cfg: ModelConfig, shape: InputShape, mesh: Optional[Mesh],
     if shape.mode in ("train", "prefill"):
         batch = {}
         if cfg.input_kind == "embeds":
-            batch["embeds"] = sds((b, s, cfg.d_model), dt,
-                                  sh(bspec, None, None))
+            batch["embeds"] = sds((b, s, cfg.d_model), dt, sh(bspec, None, None))
         else:
             batch["tokens"] = sds((b, s), jnp.int32, sh(bspec, None))
         if shape.mode == "train":
             batch["labels"] = sds((b, s), jnp.int32, sh(bspec, None))
         if cfg.rope == "mrope":
-            batch["positions"] = sds((3, b, s), jnp.int32,
-                                     sh(None, bspec, None))
+            batch["positions"] = sds((3, b, s), jnp.int32, sh(None, bspec, None))
         return batch
     # decode: one token + position, cache comes separately
     batch = {}

@@ -8,6 +8,7 @@ launcher would invoke on real hardware).
     PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m-smoke \
         --steps 20 --batch 8 --seq 128
 """
+
 from __future__ import annotations
 
 import argparse
@@ -27,15 +28,17 @@ from repro.models.sharding import ShardingPolicy
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True,
-                    help="config id; use <id>-smoke on CPU")
+    ap.add_argument("--arch", required=True, help="config id; use <id>-smoke on CPU")
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
-    ap.add_argument("--production-mesh", action="store_true",
-                    help="build the 16x16 mesh (TPU pods)")
+    ap.add_argument(
+        "--production-mesh",
+        action="store_true",
+        help="build the 16x16 mesh (TPU pods)",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -43,40 +46,52 @@ def main(argv=None):
     policy = ShardingPolicy()
     if args.production_mesh:
         from repro.launch.mesh import make_production_mesh
+
         mesh = make_production_mesh()
 
     opt_cfg = opt_cfg_for(cfg)
     state = init_train_state(cfg, jax.random.PRNGKey(args.seed), opt_cfg)
-    n_params = sum(x.size for x in jax.tree_util.tree_leaves(
-        state["params"]))
-    print(f"{cfg.name}: {n_params/1e6:.2f}M params, "
-          f"{cfg.n_layers}L d={cfg.d_model}")
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(state["params"]))
+    n_m = n_params / 1e6
+    print(f"{cfg.name}: {n_m:.2f}M params, {cfg.n_layers}L d={cfg.d_model}")
 
-    step = jax.jit(make_train_step(cfg, opt_cfg, mesh=mesh, policy=policy),
-                   donate_argnums=0)
-    stream = token_batches(TokenStreamConfig(
-        vocab_size=cfg.vocab_size, seq_len=args.seq, batch_size=args.batch,
-        seed=args.seed))
+    step = jax.jit(
+        make_train_step(cfg, opt_cfg, mesh=mesh, policy=policy),
+        donate_argnums=0,
+    )
+    sc = TokenStreamConfig(
+        vocab_size=cfg.vocab_size,
+        seq_len=args.seq,
+        batch_size=args.batch,
+        seed=args.seed,
+    )
+    stream = token_batches(sc)
     rng = np.random.default_rng(args.seed)
 
     t0 = time.time()
     for i in range(args.steps):
         raw = next(stream)
         if cfg.input_kind == "embeds":
-            emb = rng.standard_normal(
-                (args.batch, args.seq, cfg.d_model)).astype(np.float32)
-            batch = {"embeds": jnp.asarray(emb),
-                     "labels": jnp.asarray(raw["labels"] % cfg.vocab_size)}
+            emb = rng.standard_normal((args.batch, args.seq, cfg.d_model)).astype(
+                np.float32
+            )
+            batch = {
+                "embeds": jnp.asarray(emb),
+                "labels": jnp.asarray(raw["labels"] % cfg.vocab_size),
+            }
         else:
-            batch = {"tokens": jnp.asarray(raw["tokens"] % cfg.vocab_size),
-                     "labels": jnp.asarray(raw["labels"] % cfg.vocab_size)}
+            batch = {
+                "tokens": jnp.asarray(raw["tokens"] % cfg.vocab_size),
+                "labels": jnp.asarray(raw["labels"] % cfg.vocab_size),
+            }
         state, metrics = step(state, batch)
         if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
-            print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
-                  f"gnorm={float(metrics['grad_norm']):.3f}")
+            loss = float(metrics["loss"])
+            gnorm = float(metrics["grad_norm"])
+            print(f"step {i:4d} loss={loss:.4f} gnorm={gnorm:.3f}")
     dt = time.time() - t0
-    print(f"{args.steps} steps in {dt:.1f}s "
-          f"({args.steps * args.batch * args.seq / dt:.0f} tok/s)")
+    tok_s = args.steps * args.batch * args.seq / dt
+    print(f"{args.steps} steps in {dt:.1f}s ({tok_s:.0f} tok/s)")
     if args.ckpt:
         save_pytree(args.ckpt, state["params"])
         print(f"saved params -> {args.ckpt}")

@@ -13,6 +13,7 @@ remap intensities; pathology controls lesion size/contrast.
 """
 from __future__ import annotations
 
+import zlib
 from functools import lru_cache
 from typing import Tuple
 
@@ -109,7 +110,9 @@ def make_volume(task: TaskTag, patient: int, n: int = 24,
            * (1 - tissue["edema"])
            + wv * tissue["vent"] + wl * tissue["lesion"]
            + we * tissue["edema"])
-    rng = np.random.default_rng(hash((task.name, patient)) % (2 ** 31))
+    # process-stable seed (Python's str hash is salted per interpreter,
+    # which made every benchmark run draw different volume noise)
+    rng = np.random.default_rng(zlib.crc32(f"{task.name}:{patient}".encode()))
     vol = vol + noise * rng.standard_normal(vol.shape).astype(np.float32)
     vol = np.clip(vol, 0.0, 1.0).astype(np.float32)
     perm = _ORIENT_PERM[task.orientation]

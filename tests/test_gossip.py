@@ -248,13 +248,16 @@ def test_hub_push_charges_link_time_and_bytes():
     net.attach_agent(0, 0)
     rec = _erb_record()
     nbytes = net.planes["erb"].payload_nbytes(rec)
-    assert net.agent_push(0, rec)
-    assert net.last_comm_time == pytest.approx(0.1 + nbytes / 1000.0)
+    pushed = net.agent_push(0, rec)
+    assert pushed
+    assert pushed.comm_time == pytest.approx(0.1 + nbytes / 1000.0)
+    assert pushed.nbytes == nbytes
     assert net.meter.bytes_by_plane["erb"] == nbytes
     # pulling it back out charges the downlink too
     pulled = net.agent_pull(0, set())
     assert len(pulled) == 1
-    assert net.last_comm_time == pytest.approx(0.1 + nbytes / 1000.0)
+    assert pulled.comm_time == pytest.approx(0.1 + nbytes / 1000.0)
+    assert pulled.nbytes == nbytes
     assert net.meter.bytes_by_plane["erb"] == 2 * nbytes
 
 
@@ -287,7 +290,7 @@ def test_comm_time_extends_simulated_makespan():
             link_rate=rate,
         )
         sysm = ADFLLSystem(cfg, tiny, tasks, train_p, seed=0)
-        return sysm.run()
+        return sysm.run().makespan
 
     assert makespan(2**18) > makespan(float("inf"))
 

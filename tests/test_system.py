@@ -50,7 +50,7 @@ def test_adfll_heterogeneous_speed_speedup():
     """Fast agents complete more rounds per sim-time: the paper's speed-up
     over synchronized training (no global barrier)."""
     sysm = ADFLLSystem(SYS, DQN, TASKS, TRAIN_P, seed=1)
-    end = sysm.run()
+    end = sysm.run().makespan
     per_agent_end = {}
     for r in sysm.history:
         per_agent_end[r.agent_id] = max(per_agent_end.get(r.agent_id, 0.0), r.end)
