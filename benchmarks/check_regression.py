@@ -1,13 +1,25 @@
 """Benchmark regression gate for CI.
 
 Compares a freshly produced ``BENCH_*.json`` (written by a benchmark's
-``--json`` flag or ``python -m repro.experiments --json``) against the
-baseline checked in under ``benchmarks/baselines/``: the run fails when
-any config's mean distance error regresses by more than ``--tol``
-(relative) AND more than ``--abs-floor`` voxels (absolute — small
-baselines would otherwise turn float jitter into failures).  Configs
-present only in the current run (newly added benchmarks) pass; configs
-missing from the current run fail.
+``--json`` flag, ``python -m repro.experiments --json``, or
+``python -m repro.sweeps --json``) against the baseline checked in under
+``benchmarks/baselines/``.
+
+Two input shapes are understood:
+
+* **point runs** (classic benchmarks / experiments): ``configs`` maps a
+  name to flat metrics; the run fails when any config's mean distance
+  error regresses by more than ``--tol`` (relative) AND more than
+  ``--abs-floor`` voxels (absolute — small baselines would otherwise
+  turn float jitter into failures).
+* **sweep summaries** (``"variants"`` present): each variant carries a
+  multi-seed mean ± 95% CI, and the gate becomes *significance-aware* —
+  on top of the tol/floor thresholds, the current lower CI bound must
+  clear the baseline's upper CI bound (non-overlapping intervals).  A
+  wobble the seeds cannot distinguish from noise does not fail CI.
+
+Configs present only in the current run (newly added benchmarks) pass;
+configs missing from the current run fail.
 
     python -m benchmarks.check_regression BASELINE CURRENT \
         [--tol 0.2] [--abs-floor 0.75]
@@ -19,34 +31,63 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import sys
 
 METRIC = "mean_dist_err"
 
 
+def _as_configs(data: dict) -> dict:
+    """Normalize either input shape to name -> {mean, ci95}.
+
+    ``ci95`` is None for point runs and for single-seed sweeps (n < 2
+    has no interval); the gate then falls back to thresholds alone."""
+    if "variants" in data:
+        out = {}
+        for name, v in data["variants"].items():
+            st = (v.get("metrics") or {}).get(METRIC) or {}
+            out[name] = {"mean": st.get("mean"), "ci95": st.get("ci95")}
+        return out
+    return {
+        name: {"mean": cfg.get(METRIC), "ci95": None}
+        for name, cfg in data.get("configs", {}).items()
+    }
+
+
+def _ci(x) -> float:
+    """A usable CI half-width (0.0 when absent/NaN: point comparison)."""
+    if x is None or not isinstance(x, (int, float)) or not math.isfinite(x):
+        return 0.0
+    return float(x)
+
+
 def compare(baseline: dict, current: dict, *, tol: float, abs_floor: float) -> list:
     """Returns a list of human-readable failure strings (empty = pass)."""
     failures = []
-    base_cfgs = baseline.get("configs", {})
-    cur_cfgs = current.get("configs", {})
+    base_cfgs = _as_configs(baseline)
+    cur_cfgs = _as_configs(current)
     if not base_cfgs:
         return ["baseline has no configs — malformed file?"]
     for name, base in sorted(base_cfgs.items()):
         if name not in cur_cfgs:
             failures.append(f"{name}: missing from current run")
             continue
-        b = base.get(METRIC)
-        c = cur_cfgs[name].get(METRIC)
+        b, c = base["mean"], cur_cfgs[name]["mean"]
         if b is None or c is None:
             failures.append(f"{name}: {METRIC} missing")
             continue
-        if c > b * (1.0 + tol) and c > b + abs_floor:
+        worse = c > b * (1.0 + tol) and c > b + abs_floor
+        b_ci, c_ci = _ci(base["ci95"]), _ci(cur_cfgs[name]["ci95"])
+        separated = (c - c_ci) > (b + b_ci)
+        if worse and separated:
             failures.append(
-                f"{name}: {METRIC} {c:.3f} vs baseline {b:.3f} "
-                f"(>{tol:.0%} worse and >+{abs_floor} absolute)"
+                f"{name}: {METRIC} {c:.3f}±{c_ci:.3f} vs baseline "
+                f"{b:.3f}±{b_ci:.3f} (>{tol:.0%} worse, >+{abs_floor} "
+                f"absolute, CIs separated)"
             )
         else:
-            print(f"ok {name}: {METRIC} {c:.3f} (baseline {b:.3f})")
+            note = " (within CI overlap)" if worse else ""
+            print(f"ok {name}: {METRIC} {c:.3f} (baseline {b:.3f}){note}")
     return failures
 
 

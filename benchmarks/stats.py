@@ -1,77 +1,14 @@
-"""Paired t-test without scipy (regularized incomplete beta, NR betacf)."""
+"""Back-compat shim: the scipy-free stats were promoted into
+``repro.sweeps.stats`` (paired t-test, permutation test, t-based CIs)
+so the sweep aggregation layer and the classic benchmarks share one
+implementation.  Import from there in new code."""
 
-from __future__ import annotations
+from repro.sweeps.stats import (  # noqa: F401
+    mean_ci,
+    paired_permutation_test,
+    paired_ttest,
+    t_crit,
+    t_sf,
+)
 
-import math
-
-import numpy as np
-
-
-def _betacf(a, b, x, max_iter=200, eps=3e-12):
-    qab, qap, qam = a + b, a + 1.0, a - 1.0
-    c, d = 1.0, 1.0 - qab * x / qap
-    if abs(d) < 1e-30:
-        d = 1e-30
-    d = 1.0 / d
-    h = d
-    for m in range(1, max_iter + 1):
-        m2 = 2 * m
-        aa = m * (b - m) * x / ((qam + m2) * (a + m2))
-        d = 1.0 + aa * d
-        if abs(d) < 1e-30:
-            d = 1e-30
-        c = 1.0 + aa / c
-        if abs(c) < 1e-30:
-            c = 1e-30
-        d = 1.0 / d
-        h *= d * c
-        aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2))
-        d = 1.0 + aa * d
-        if abs(d) < 1e-30:
-            d = 1e-30
-        c = 1.0 + aa / c
-        if abs(c) < 1e-30:
-            c = 1e-30
-        d = 1.0 / d
-        delta = d * c
-        h *= delta
-        if abs(delta - 1.0) < eps:
-            break
-    return h
-
-
-def _betainc(a, b, x):
-    if x <= 0.0:
-        return 0.0
-    if x >= 1.0:
-        return 1.0
-    ln_beta = (
-        math.lgamma(a + b)
-        - math.lgamma(a)
-        - math.lgamma(b)
-        + a * math.log(x)
-        + b * math.log(1.0 - x)
-    )
-    front = math.exp(ln_beta)
-    if x < (a + 1.0) / (a + b + 2.0):
-        return front * _betacf(a, b, x) / a
-    return 1.0 - front * _betacf(b, a, 1.0 - x) / b
-
-
-def t_sf(t, df):
-    """Two-sided p-value for a t statistic."""
-    x = df / (df + t * t)
-    return _betainc(df / 2.0, 0.5, x)
-
-
-def paired_ttest(a, b):
-    """Returns (t, two-sided p). a, b: paired samples."""
-    a = np.asarray(a, np.float64)
-    b = np.asarray(b, np.float64)
-    d = a - b
-    n = len(d)
-    sd = d.std(ddof=1)
-    if sd == 0:
-        return 0.0, 1.0
-    t = d.mean() / (sd / math.sqrt(n))
-    return float(t), float(t_sf(abs(t), n - 1))
+__all__ = ["mean_ci", "paired_permutation_test", "paired_ttest", "t_crit", "t_sf"]

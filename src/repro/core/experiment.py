@@ -72,6 +72,24 @@ class ChurnEvent:
             raise ValueError("explicit agent_id implies count=1")
 
 
+@dataclass(frozen=True)
+class HubFailure:
+    """One timed hub failure in a scenario's failure schedule.
+
+    At simulated time ``at`` hub ``hub_id`` dies, losing every record no
+    other hub holds; its agents re-home to surviving hubs (if any) or
+    fall back to the gossip overlay under ``topology="hybrid"``.  This
+    is the paper's Table 2 robustness experiment as a declarative event.
+    """
+
+    at: float
+    hub_id: int
+
+    def __post_init__(self):
+        if self.hub_id < 0:
+            raise ValueError(f"negative hub_id: {self.hub_id}")
+
+
 @dataclass
 class Report:
     """What ``System.run()`` returns: one experiment's full outcome.
@@ -182,6 +200,12 @@ class ExperimentHooks:
     ) -> None:
         """A churn event was applied to ``agent_ids``."""
 
+    def on_hub_failure(
+        self, system, event: HubFailure, orphaned: Sequence[int], t: float
+    ) -> None:
+        """A hub died; ``orphaned`` are the agents it stranded (they are
+        re-homed to surviving hubs when any exist)."""
+
 
 class HistoryRecorder(ExperimentHooks):
     """The default metrics hook: collects :class:`RoundRecord` objects
@@ -220,6 +244,7 @@ __all__ = [
     "EvalPoint",
     "ExperimentHooks",
     "HistoryRecorder",
+    "HubFailure",
     "Report",
     "RoundRecord",
 ]

@@ -34,6 +34,7 @@ from repro.core.experiment import (
     ChurnEvent,
     ExperimentHooks,
     HistoryRecorder,
+    HubFailure,
     Report,
     RoundRecord,
 )
@@ -149,6 +150,7 @@ class ADFLLSystem:
         self._next_agent_id = 0
         self._outstanding = 0  # finish events not yet processed
         self._pending_churn = 0  # scheduled churn events not yet applied
+        self._pending_failures = 0  # scheduled hub failures not yet applied
         for i in range(sys_cfg.n_agents):
             hub = sys_cfg.agent_hub[i] if i < len(sys_cfg.agent_hub) else None
             self.add_agent(
@@ -234,6 +236,33 @@ class ADFLLSystem:
                 self.remove_agent(aid)
                 ids.append(aid)
         self._emit("on_churn", ev, ids, t)
+
+    # -- hub failures -----------------------------------------------------------
+    def schedule_hub_failures(self, events: Sequence[HubFailure]) -> None:
+        """Register a declarative hub-failure schedule (the paper's
+        Table 2 robustness experiment): each event kills its hub on the
+        scheduler at its time and emits ``on_hub_failure``.  The run does
+        not stop while failures are pending, so a failure landing after
+        the incumbents' last round still fires."""
+        if self.sys_cfg.topology == "gossip":
+            raise ValueError("topology='gossip' has no hubs to fail")
+        events = sorted(events, key=lambda e: e.at)
+        for ev in events:  # validate everything before touching the scheduler
+            if ev.hub_id >= len(self.network.hubs):
+                raise ValueError(
+                    f"hub_id {ev.hub_id} out of range "
+                    f"(n_hubs={len(self.network.hubs)})"
+                )
+        for ev in events:
+            self._pending_failures += 1
+            self.sched.at(
+                ev.at, lambda s, t, e=ev: self._apply_hub_failure(e, t), tag="hub_fail"
+            )
+
+    def _apply_hub_failure(self, ev: HubFailure, t: float) -> None:
+        self._pending_failures -= 1
+        orphaned = self.network.fail_hub(ev.hub_id)
+        self._emit("on_hub_failure", ev, orphaned, t)
 
     # -- round machinery --------------------------------------------------------
     def _next_task(self) -> TaskTag:
@@ -382,6 +411,7 @@ class ADFLLSystem:
             return (
                 self._outstanding == 0
                 and self._pending_churn == 0
+                and self._pending_failures == 0
                 and all(
                     a.rounds_done >= self.sys_cfg.rounds
                     for a in self.agents.values()

@@ -190,6 +190,11 @@ class Network:
             return
         if hub_id is None:
             loads = {h.hub_id: 0 for h in self.hubs if h.alive}
+            if not loads:
+                # every hub is dead: the joiner stays detached (hub
+                # uploads drop, pulls return nothing) — same orphan
+                # semantics as re-homing after a total failure
+                return
             for a, hid in self.agent_hub.items():
                 if hid in loads:
                     loads[hid] += 1
@@ -223,7 +228,11 @@ class Network:
         # consistent with what some live store actually received)
         hub_up = False
         if self.topology != "gossip":
-            if self.dropout > 0.0 and self.rng.random() < self.dropout:
+            if agent_id not in self.agent_hub:
+                # orphaned by hub failure with no survivor to re-home to:
+                # the upload is lost (hybrid still lands it on gossip)
+                self.n_dropped += 1
+            elif self.dropout > 0.0 and self.rng.random() < self.dropout:
                 self.n_dropped += 1
             elif not self.hub_of(agent_id).alive:
                 self.n_dropped += 1
@@ -264,7 +273,7 @@ class Network:
             local = self.gossip.pull_local(agent_id, seen, plane)
         out: List[Any] = []
         comm, nbytes_total = 0.0, 0
-        if self.topology != "gossip":
+        if self.topology != "gossip" and agent_id in self.agent_hub:
             skip = set(seen) | {pl.key(e) for e in local}
             pulled = self.hub_of(agent_id).pull_unseen(skip, plane)
             if self.dropout > 0.0:
@@ -294,14 +303,20 @@ class Network:
         return n
 
     # -- failures ------------------------------------------------------------
-    def fail_hub(self, hub_id: int):
+    def fail_hub(self, hub_id: int) -> List[int]:
+        """Kill a hub; returns the agents it stranded.
+
+        Orphans re-home to the least-loaded surviving hub when one
+        exists.  With every hub dead they stay detached: hub uploads are
+        lost and hub pulls return nothing — under ``hybrid`` the gossip
+        overlay keeps carrying their records (the Table 2 failover)."""
         self.hubs[hub_id].fail()
-        # re-home orphaned agents to surviving hubs
-        for a, hid in list(self.agent_hub.items()):
-            if hid == hub_id:
-                del self.agent_hub[a]
-                if any(h.alive for h in self.hubs):
-                    self.attach_agent(a)
+        orphaned = sorted(a for a, hid in self.agent_hub.items() if hid == hub_id)
+        for a in orphaned:
+            del self.agent_hub[a]
+            if any(h.alive for h in self.hubs):
+                self.attach_agent(a)
+        return orphaned
 
     def all_known(self, plane: str = "erb") -> Set[str]:
         ids: Set[str] = set()

@@ -20,6 +20,7 @@ from repro.core.experiment import (  # noqa: F401
     EvalPoint,
     ExperimentHooks,
     HistoryRecorder,
+    HubFailure,
     Report,
     RoundRecord,
 )

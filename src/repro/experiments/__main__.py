@@ -16,8 +16,9 @@ from __future__ import annotations
 import argparse
 import sys
 
-from repro.experiments.registry import list_scenarios
+from repro.experiments.registry import get_scenario, list_scenarios
 from repro.experiments.runner import run, write_json
+from repro.experiments.suggest import unknown_name_message
 
 
 def main(argv=None) -> int:
@@ -52,6 +53,14 @@ def main(argv=None) -> int:
         for spec in list_scenarios():
             print(f"{spec.name:<24} {spec.system:<12} {spec.description}")
         return 0
+
+    known = [s.name for s in list_scenarios()]
+    for name in args.scenario:
+        try:
+            get_scenario(name)
+        except KeyError:
+            print(unknown_name_message("scenario", name, known), file=sys.stderr)
+            return 2
 
     reports = []
     for name in args.scenario:

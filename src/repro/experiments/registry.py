@@ -11,10 +11,11 @@ experiment means registering a spec — not writing a new script.
 
 from __future__ import annotations
 
+from dataclasses import replace
 from typing import Dict, List
 
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
-from repro.core.experiment import ChurnEvent
+from repro.core.experiment import ChurnEvent, HubFailure
 from repro.core.gossip import LinkModel
 from repro.experiments.spec import ScenarioSpec
 
@@ -263,6 +264,69 @@ register(
         intra_link=LinkModel(latency=0.0005, rate=float(2**24)),
         inter_link=LinkModel(latency=0.01, rate=float(2**20)),
         fast_train_steps=10,
+    )
+)
+
+# -- Table 2: hub failure mid-training --------------------------------------
+# Round durations are simulated (independent of train_steps), so t=1.5
+# is mid-training in both the full and the --fast variants.
+register(
+    ScenarioSpec(
+        name="paper_table2_hub_failure",
+        system="adfll",
+        description="Table 2: hub 3 (serving two agents) dies mid-training; "
+        "orphans re-home to the surviving hubs, whose databases retain "
+        "the shared knowledge",
+        dqn=_DEPLOY_DQN,
+        sys=_DEPLOY_SYS,
+        n_patients=40,
+        seed=500,
+        hub_failures=(HubFailure(at=1.5, hub_id=2),),
+        fast_train_steps=20,
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="paper_table2_total_failure",
+        system="adfll",
+        description="Table 2 (worst case): every hub dies mid-training; "
+        "pure-hub agents lose all sharing and finish on local data alone",
+        dqn=_DEPLOY_DQN,
+        sys=_DEPLOY_SYS,
+        n_patients=40,
+        seed=510,
+        hub_failures=(
+            HubFailure(at=1.5, hub_id=0),
+            HubFailure(at=1.5, hub_id=1),
+            HubFailure(at=1.5, hub_id=2),
+        ),
+        fast_train_steps=20,
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="paper_table2_hybrid_failover",
+        system="adfll",
+        description="Table 2 failover: every hub dies mid-training but the "
+        "hybrid topology keeps replicating both planes peer-to-peer",
+        dqn=_DEPLOY_DQN,
+        sys=replace(
+            _DEPLOY_SYS,
+            topology="hybrid",
+            gossip_sampler="random",
+            gossip_fanout=2,
+            gossip_period=0.25,
+        ),
+        n_patients=40,
+        seed=520,
+        hub_failures=(
+            HubFailure(at=1.5, hub_id=0),
+            HubFailure(at=1.5, hub_id=1),
+            HubFailure(at=1.5, hub_id=2),
+        ),
+        fast_train_steps=20,
     )
 )
 

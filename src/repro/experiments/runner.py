@@ -76,13 +76,18 @@ def _build(spec: ScenarioSpec, hooks: Sequence[ExperimentHooks]) -> _Built:
                 intra=spec.intra_link,
                 inter=spec.inter_link,
             )
+        if spec.churn or spec.hub_failures:
+            _schedule_probes(system, spec, eval_tasks, test_p, curve)
         if spec.churn:
             assert isinstance(system, SupportsChurn)
-            _schedule_probes(system, spec, eval_tasks, test_p, curve)
             system.schedule_churn(spec.churn)
+        if spec.hub_failures:
+            system.schedule_hub_failures(spec.hub_failures)
     elif spec.system == "fedavg":
-        if spec.churn or spec.agent_sites:
-            raise ValueError(f"{spec.name}: {spec.system} supports no churn/sites")
+        if spec.churn or spec.agent_sites or spec.hub_failures:
+            raise ValueError(
+                f"{spec.name}: {spec.system} supports no churn/sites/hub failures"
+            )
         system = CentralAggregationSystem(
             sys_cfg.n_agents,
             spec.dqn,
@@ -94,8 +99,10 @@ def _build(spec: ScenarioSpec, hooks: Sequence[ExperimentHooks]) -> _Built:
             seed=spec.seed,
         )
     else:  # single-agent baselines
-        if spec.churn or spec.agent_sites:
-            raise ValueError(f"{spec.name}: {spec.system} supports no churn/sites")
+        if spec.churn or spec.agent_sites or spec.hub_failures:
+            raise ValueError(
+                f"{spec.name}: {spec.system} supports no churn/sites/hub failures"
+            )
         system = BaselineSystem(
             spec.system,
             spec.dqn,
@@ -115,9 +122,10 @@ def _schedule_probes(
     test_patients: list,
     curve: List[EvalPoint],
 ) -> None:
-    """Evaluation probes at each churn time (before the churn applies:
-    scheduler ties break by insertion order, and these are registered
-    first), feeding the report's forgetting/recovery curve."""
+    """Evaluation probes at each churn/hub-failure time (before the
+    event applies: scheduler ties break by insertion order, and these
+    are registered first), feeding the report's forgetting/recovery
+    curve."""
     if not spec.eval_at_churn:
         return
 
@@ -126,7 +134,8 @@ def _schedule_probes(
         curve.append(point)
         system._emit("on_eval", point)
 
-    for at in sorted({ev.at for ev in spec.churn}):
+    times = {ev.at for ev in spec.churn} | {ev.at for ev in spec.hub_failures}
+    for at in sorted(times):
         system.sched.at(at, probe, tag="eval_probe")
 
 

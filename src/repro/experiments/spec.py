@@ -19,7 +19,7 @@ from dataclasses import dataclass, field, replace
 from typing import Optional, Tuple
 
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
-from repro.core.experiment import ChurnEvent
+from repro.core.experiment import ChurnEvent, HubFailure
 from repro.core.gossip import LinkModel
 
 SYSTEMS = ("adfll", "fedavg", "all_knowing", "partial", "sequential")
@@ -42,6 +42,7 @@ class ScenarioSpec:
     seed: int = 0
     # -- scenario dynamics -------------------------------------------------
     churn: Tuple[ChurnEvent, ...] = ()  # timed add/remove events
+    hub_failures: Tuple[HubFailure, ...] = ()  # timed hub deaths (Table 2)
     agent_sites: Tuple[int, ...] = ()  # per-agent site ids (hetero links)
     hub_sites: Tuple[int, ...] = ()  # per-hub site ids
     intra_link: Optional[LinkModel] = None  # fast same-site link
@@ -62,6 +63,8 @@ class ScenarioSpec:
             raise ValueError(f"unknown task_set: {self.task_set!r}")
         if self.agent_sites and (self.intra_link is None and self.inter_link is None):
             raise ValueError("agent_sites given without intra/inter links")
+        if self.hub_failures and self.sys.topology == "gossip":
+            raise ValueError("hub_failures given but topology='gossip' has no hubs")
 
     # -- derived variants --------------------------------------------------
     def with_seed(self, seed: int) -> "ScenarioSpec":

@@ -9,6 +9,7 @@ Decode consumes a KV cache: ring-buffer of size ``sliding_window`` for SWA
 models, full-length otherwise. MLA caches the compressed latent (c_kv,
 k_rope) and uses the absorbed-matmul decode path from DeepSeek-V2.
 """
+
 from __future__ import annotations
 
 from typing import Optional
@@ -33,9 +34,19 @@ def _chunk(x, n):
     return jnp.moveaxis(x.reshape(b, n, s // n, *x.shape[2:]), 1, 0)
 
 
-def chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
-                      scale: float, q_chunk: int = 512, kv_chunk: int = 1024,
-                      softcap: float = 0.0, wsc=None):
+def chunked_attention(
+    q,
+    k,
+    v,
+    *,
+    causal: bool,
+    window: Optional[int],
+    scale: float,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+    softcap: float = 0.0,
+    wsc=None,
+):
     """q [B,S,Hq,D], k/v [B,S,Hkv,Dk]/[B,S,Hkv,Dv] -> [B,S,Hq,Dv].
 
     GQA kv heads are repeated to Hq *with a head-sharding constraint*
@@ -53,21 +64,21 @@ def chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
     if wsc is None:
         wsc = lambda x, kind: x
     import os
-    inner_wsc = (lambda x, kind: x) if os.environ.get(
-        "REPRO_NO_INNER_WSC") else wsc
+
+    inner_wsc = (lambda x, kind: x) if os.environ.get("REPRO_NO_INNER_WSC") else wsc
     qc = min(q_chunk, s)
     kc = min(kv_chunk, s)
     nq, nk = s // qc, s // kc
     assert nq * qc == s and nk * kc == s, (s, qc, kc)
 
     if g > 1:
-        k = wsc(jnp.repeat(k, g, axis=2), "bshd")         # [B,S,Hq,d]
+        k = wsc(jnp.repeat(k, g, axis=2), "bshd")  # [B,S,Hq,d]
         v = wsc(jnp.repeat(v, g, axis=2), "bshd")
     else:
         k = wsc(k, "bshd")
         v = wsc(v, "bshd")
     q = wsc(q, "bshd")
-    qs = _chunk(q, nq)                                    # [nq,B,qc,hq,d]
+    qs = _chunk(q, nq)  # [nq,B,qc,hq,d]
     ks = _chunk(k, nk)
     vs = _chunk(v, nk)
 
@@ -80,8 +91,10 @@ def chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
             m, l, acc = carry
             kj, kblk, vblk = kj_blk
             kpos = kj * kc + jnp.arange(kc)
-            s_blk = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk,
-                               preferred_element_type=F32) * scale
+            s_blk = (
+                jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk, preferred_element_type=F32)
+                * scale
+            )
             if softcap > 0.0:
                 s_blk = softcap * jnp.tanh(s_blk / softcap)
             mask = jnp.ones((qc, kc), bool)
@@ -89,33 +102,34 @@ def chunked_attention(q, k, v, *, causal: bool, window: Optional[int],
                 mask &= kpos[None, :] <= qpos[:, None]
             if window is not None:
                 mask &= (qpos[:, None] - kpos[None, :]) < window
-            s_blk = inner_wsc(jnp.where(mask[None, None], s_blk, NEG_INF),
-                              "bhqx")
+            s_blk = inner_wsc(jnp.where(mask[None, None], s_blk, NEG_INF), "bhqx")
             m_new = jnp.maximum(m, s_blk.max(-1))
             p = jnp.exp(s_blk - m_new[..., None])
             corr = jnp.exp(m - m_new)
             l_new = inner_wsc(l * corr + p.sum(-1), "bhqx")
             acc_new = acc * corr[..., None] + jnp.einsum(
-                "bhqk,bkhd->bhqd", p.astype(vblk.dtype), vblk,
-                preferred_element_type=F32)
+                "bhqk,bkhd->bhqd",
+                p.astype(vblk.dtype),
+                vblk,
+                preferred_element_type=F32,
+            )
             return (m_new, l_new, inner_wsc(acc_new, "bhqx")), None
 
         m0 = wsc(jnp.full((b, hq, qc), NEG_INF, F32), "bhqx")
         l0 = wsc(jnp.zeros((b, hq, qc), F32), "bhqx")
         a0 = wsc(jnp.zeros((b, hq, qc, dv), F32), "bhqx")
-        (m, l, acc), _ = jax.lax.scan(
-            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]      # [B,hq,qc,dv]
-        out = jnp.moveaxis(out, 1, 2)                     # [B,qc,hq,dv]
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,hq,qc,dv]
+        out = jnp.moveaxis(out, 1, 2)  # [B,qc,hq,dv]
         return None, out.astype(q.dtype)
 
-    _, outs = jax.lax.scan(jax.checkpoint(q_step), None,
-                           (jnp.arange(nq), qs))
+    _, outs = jax.lax.scan(jax.checkpoint(q_step), None, (jnp.arange(nq), qs))
     return jnp.moveaxis(outs, 0, 1).reshape(b, s, hq, dv)
 
 
-def decode_attention(q, k, v, *, scale: float, kpos, pos,
-                     window: Optional[int], softcap: float = 0.0):
+def decode_attention(
+    q, k, v, *, scale: float, kpos, pos, window: Optional[int], softcap: float = 0.0
+):
     """Single-token attention against a cache.
 
     q [B,1,Hq,D], k/v [B,S,Hkv,D*]; kpos [B,S] absolute positions of cache
@@ -125,22 +139,21 @@ def decode_attention(q, k, v, *, scale: float, kpos, pos,
     hkv = k.shape[2]
     g = hq // hkv
     qg = q.reshape(b, hkv, g, d)
-    s_ = jnp.einsum("bhgd,bkhd->bhgk", qg, k,
-                    preferred_element_type=F32) * scale
+    s_ = jnp.einsum("bhgd,bkhd->bhgk", qg, k, preferred_element_type=F32) * scale
     if softcap > 0.0:
         s_ = softcap * jnp.tanh(s_ / softcap)
-    valid = (kpos >= 0) & (kpos <= pos[:, None])   # -1 marks empty slots
+    valid = (kpos >= 0) & (kpos <= pos[:, None])  # -1 marks empty slots
     if window is not None:
         valid &= (pos[:, None] - kpos) < window
     s_ = jnp.where(valid[:, None, None, :], s_, NEG_INF)
     p = jax.nn.softmax(s_, axis=-1)
-    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v.dtype), v,
-                     preferred_element_type=F32)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd", p.astype(v.dtype), v, preferred_element_type=F32
+    )
     return out.reshape(b, 1, hq, v.shape[-1]).astype(q.dtype)
 
 
-def make_wsc(mesh, batch_axes, n_heads, model_axis="model", q_chunk=512,
-             tp=True):
+def make_wsc(mesh, batch_axes, n_heads, model_axis="model", q_chunk=512, tp=True):
     """Sharding-constraint hook for attention internals.
 
     Two strategies: when the head count divides the model axis, internals
@@ -151,24 +164,26 @@ def make_wsc(mesh, batch_axes, n_heads, model_axis="model", q_chunk=512,
     if mesh is None or model_axis not in mesh.axis_names or not tp:
         return lambda x, kind: x
     from jax.sharding import PartitionSpec as P
+
     from repro.models.sharding import constrain as cst
+
     msize = mesh.shape[model_axis]
     heads_ok = n_heads % msize == 0 and msize > 1
     batch = tuple(a for a in batch_axes if a in mesh.axis_names)
     b_ax = batch if len(batch) > 1 else (batch[0] if batch else None)
 
     def wsc(x, kind):
-        if kind == "bshd":                                # [B,S,H,D]
+        if kind == "bshd":  # [B,S,H,D]
             spec = P(b_ax, None, model_axis if heads_ok else None, None)
         else:  # "bhqx": [B, H, qc, ...] accumulators / score blocks
             if heads_ok:
                 spec = P(*((b_ax, model_axis) + (None,) * (x.ndim - 2)))
             elif x.shape[2] % msize == 0:
-                spec = P(*((b_ax, None, model_axis) + (None,) *
-                           (x.ndim - 3)))
+                spec = P(*((b_ax, None, model_axis) + (None,) * (x.ndim - 3)))
             else:
                 spec = P(*((b_ax,) + (None,) * (x.ndim - 1)))
         return cst(x, mesh, spec)
+
     return wsc
 
 
@@ -181,10 +196,8 @@ def gqa_init(key, cfg: ModelConfig):
     ks = jax.random.split(key, 4)
     return {
         "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
-        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype,
-                         bias=cfg.qkv_bias),
-        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype,
-                         bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
         "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
     }
 
@@ -201,16 +214,26 @@ def gqa_cache_init(cfg: ModelConfig, batch: int, cache_len: int, dtype):
     }
 
 
-def gqa_apply(cfg: ModelConfig, p, x, *, mode: str, positions=None,
-              cache=None, attn_impl: str = "xla", mesh=None,
-              batch_axes=("data",), tp: bool = True):
+def gqa_apply(
+    cfg: ModelConfig,
+    p,
+    x,
+    *,
+    mode: str,
+    positions=None,
+    cache=None,
+    attn_impl: str = "xla",
+    mesh=None,
+    batch_axes=("data",),
+    tp: bool = True,
+):
     """x [B,S,D] (train/prefill) or [B,1,D] (decode). Returns (y, cache)."""
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
     q = dense_apply(p["wq"], x).reshape(b, s, cfg.n_heads, hd)
     k = dense_apply(p["wk"], x).reshape(b, s, cfg.n_kv_heads, hd)
     v = dense_apply(p["wv"], x).reshape(b, s, cfg.n_kv_heads, hd)
-    scale = hd ** -0.5
+    scale = hd**-0.5
     wsc = make_wsc(mesh, batch_axes, cfg.n_heads, tp=tp)
 
     cs = rope_lib.cos_sin_for(cfg, positions) if cfg.rope != "none" else None
@@ -221,21 +244,34 @@ def gqa_apply(cfg: ModelConfig, p, x, *, mode: str, positions=None,
     if mode in ("train", "prefill"):
         if attn_impl == "pallas":
             from repro.kernels.flash_attention import ops as fa_ops
-            y = fa_ops.flash_attention(q, k, v, causal=True,
-                                       window=cfg.sliding_window, scale=scale,
-                                       softcap=cfg.attn_logit_softcap)
+
+            y = fa_ops.flash_attention(
+                q,
+                k,
+                v,
+                causal=True,
+                window=cfg.sliding_window,
+                scale=scale,
+                softcap=cfg.attn_logit_softcap,
+            )
         else:
-            y = chunked_attention(q, k, v, causal=True,
-                                  window=cfg.sliding_window, scale=scale,
-                                  softcap=cfg.attn_logit_softcap, wsc=wsc)
+            y = chunked_attention(
+                q,
+                k,
+                v,
+                causal=True,
+                window=cfg.sliding_window,
+                scale=scale,
+                softcap=cfg.attn_logit_softcap,
+                wsc=wsc,
+            )
         new_cache = None
         if mode == "prefill":
             # hand off the KV cache (ring-truncated to the window for SWA)
             w = cfg.sliding_window
             kp = positions if positions.ndim == 2 else positions[0]
             if w is not None and s > w:
-                new_cache = {"k": k[:, -w:], "v": v[:, -w:],
-                             "kpos": kp[:, -w:]}
+                new_cache = {"k": k[:, -w:], "v": v[:, -w:], "kpos": kp[:, -w:]}
             else:
                 new_cache = {"k": k, "v": v, "kpos": kp}
     else:  # decode
@@ -246,9 +282,16 @@ def gqa_apply(cfg: ModelConfig, p, x, *, mode: str, positions=None,
         knew = cache["k"].at[bidx, slot].set(k[:, 0])
         vnew = cache["v"].at[bidx, slot].set(v[:, 0])
         kposn = cache["kpos"].at[bidx, slot].set(pos)
-        y = decode_attention(q, knew, vnew, scale=scale, kpos=kposn, pos=pos,
-                             window=cfg.sliding_window,
-                             softcap=cfg.attn_logit_softcap)
+        y = decode_attention(
+            q,
+            knew,
+            vnew,
+            scale=scale,
+            kpos=kposn,
+            pos=pos,
+            window=cfg.sliding_window,
+            softcap=cfg.attn_logit_softcap,
+        )
         new_cache = {"k": knew, "v": vnew, "kpos": kposn}
     y = y.reshape(b, s, cfg.n_heads * hd)
     return dense_apply(p["wo"], y), new_cache
@@ -297,35 +340,52 @@ def _mla_q(cfg, p, x, positions):
     else:
         q = dense_apply(p["wq"], x)
     q = q.reshape(b, s, h, qd)
-    q_nope, q_rope = q[..., :a.nope_head_dim], q[..., a.nope_head_dim:]
+    nd = a.nope_head_dim
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
     cs = rope_lib.cos_sin_for(cfg, positions, head_dim=a.rope_head_dim)
     q_rope = rope_lib.apply_rope(q_rope, *cs)
     return q_nope, q_rope, cs
 
 
-def mla_apply(cfg: ModelConfig, p, x, *, mode: str, positions=None,
-              cache=None, attn_impl: str = "xla", mesh=None,
-              batch_axes=("data",), tp: bool = True):
+def mla_apply(
+    cfg: ModelConfig,
+    p,
+    x,
+    *,
+    mode: str,
+    positions=None,
+    cache=None,
+    attn_impl: str = "xla",
+    mesh=None,
+    batch_axes=("data",),
+    tp: bool = True,
+):
     a = cfg.mla
     b, s, _ = x.shape
     h = cfg.n_heads
     scale = (a.nope_head_dim + a.rope_head_dim) ** -0.5
     q_nope, q_rope, cs = _mla_q(cfg, p, x, positions)
 
-    ckv = dense_apply(p["w_dkv"], x)                      # [B,S,r]
-    krope = rope_lib.apply_rope(
-        dense_apply(p["w_krope"], x)[:, :, None, :], *cs)[:, :, 0]
+    ckv = dense_apply(p["w_dkv"], x)  # [B,S,r]
+    krope = dense_apply(p["w_krope"], x)[:, :, None, :]
+    krope = rope_lib.apply_rope(krope, *cs)[:, :, 0]
 
     if mode in ("train", "prefill"):
         # expanded path: materialize per-head k/v (cheap at train time)
         k_nope = dense_apply(p["w_uk"], ckv).reshape(b, s, h, a.nope_head_dim)
         v = dense_apply(p["w_uv"], ckv).reshape(b, s, h, a.v_head_dim)
-        k = jnp.concatenate(
-            [k_nope, jnp.broadcast_to(krope[:, :, None, :],
-                                      (b, s, h, a.rope_head_dim))], -1)
+        kr = jnp.broadcast_to(krope[:, :, None, :], (b, s, h, a.rope_head_dim))
+        k = jnp.concatenate([k_nope, kr], -1)
         q = jnp.concatenate([q_nope, q_rope], -1)
-        y = chunked_attention(q, k, v, causal=True, window=None, scale=scale,
-                              wsc=make_wsc(mesh, batch_axes, h, tp=tp))
+        y = chunked_attention(
+            q,
+            k,
+            v,
+            causal=True,
+            window=None,
+            scale=scale,
+            wsc=make_wsc(mesh, batch_axes, h, tp=tp),
+        )
         new_cache = None
         if mode == "prefill":
             kp = positions if positions.ndim == 2 else positions[0]
@@ -339,21 +399,24 @@ def mla_apply(cfg: ModelConfig, p, x, *, mode: str, positions=None,
         kpos = cache["kpos"].at[bidx, pos].set(pos)
         w_uk = p["w_uk"]["w"].reshape(a.kv_lora_rank, h, a.nope_head_dim)
         # absorb W_uk into q: q_lat [B,h,r]
-        q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0], w_uk,
-                           preferred_element_type=F32).astype(x.dtype)
-        s_lat = jnp.einsum("bhr,bkr->bhk", q_lat, ckv_c,
-                           preferred_element_type=F32)
-        s_rope = jnp.einsum("bhd,bkd->bhk", q_rope[:, 0], kr_c,
-                            preferred_element_type=F32)
+        q_lat = jnp.einsum(
+            "bhd,rhd->bhr", q_nope[:, 0], w_uk, preferred_element_type=F32
+        ).astype(x.dtype)
+        s_lat = jnp.einsum("bhr,bkr->bhk", q_lat, ckv_c, preferred_element_type=F32)
+        s_rope = jnp.einsum(
+            "bhd,bkd->bhk", q_rope[:, 0], kr_c, preferred_element_type=F32
+        )
         s_all = (s_lat + s_rope) * scale
         valid = (kpos >= 0) & (kpos <= pos[:, None])
         s_all = jnp.where(valid[:, None, :], s_all, NEG_INF)
         pr = jax.nn.softmax(s_all, axis=-1)
-        o_lat = jnp.einsum("bhk,bkr->bhr", pr.astype(x.dtype), ckv_c,
-                           preferred_element_type=F32).astype(x.dtype)
+        o_lat = jnp.einsum(
+            "bhk,bkr->bhr", pr.astype(x.dtype), ckv_c, preferred_element_type=F32
+        ).astype(x.dtype)
         w_uv = p["w_uv"]["w"].reshape(a.kv_lora_rank, h, a.v_head_dim)
-        y = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv,
-                       preferred_element_type=F32).astype(x.dtype)
+        y = jnp.einsum(
+            "bhr,rhd->bhd", o_lat, w_uv, preferred_element_type=F32
+        ).astype(x.dtype)
         y = y[:, None]
         new_cache = {"ckv": ckv_c, "krope": kr_c, "kpos": kpos}
     y = y.reshape(b, s, h * a.v_head_dim)

@@ -1,4 +1,5 @@
 """Composable decoder block: (mixer, ffn) pairs from the config pattern."""
+
 from __future__ import annotations
 
 from typing import Optional
@@ -29,8 +30,7 @@ _MIXER_INIT = {
 }
 
 
-def block_init(key, cfg: ModelConfig, mixer: str, ffn: str,
-               d_ff: Optional[int] = None):
+def block_init(key, cfg: ModelConfig, mixer: str, ffn: str, d_ff: Optional[int] = None):
     ks = jax.random.split(key, 4)
     p = {
         "norm1": norm_init(cfg, cfg.d_model),
@@ -45,8 +45,7 @@ def block_init(key, cfg: ModelConfig, mixer: str, ffn: str,
     return p
 
 
-def block_cache_init(cfg: ModelConfig, mixer: str, batch: int,
-                     cache_len: int, dtype):
+def block_cache_init(cfg: ModelConfig, mixer: str, batch: int, cache_len: int, dtype):
     if mixer == ATTN:
         return attention.gqa_cache_init(cfg, batch, cache_len, dtype)
     if mixer == MLA:
@@ -65,40 +64,90 @@ def _full_s(x, mesh, batch_axes):
     if mesh is None:
         return x
     from jax.sharding import PartitionSpec as P
+
     from repro.models.sharding import constrain
+
     batch = tuple(a for a in batch_axes if a in mesh.axis_names)
     b_ax = batch if len(batch) > 1 else (batch[0] if batch else None)
     return constrain(x, mesh, P(b_ax, None, None))
 
 
-def block_apply(cfg: ModelConfig, p, x, *, mixer: str, ffn: str, mode: str,
-                positions=None, cache=None, mesh=None,
-                batch_axes=("data",), attn_impl: str = "xla",
-                tp: bool = True):
+def block_apply(
+    cfg: ModelConfig,
+    p,
+    x,
+    *,
+    mixer: str,
+    ffn: str,
+    mode: str,
+    positions=None,
+    cache=None,
+    mesh=None,
+    batch_axes=("data",),
+    attn_impl: str = "xla",
+    tp: bool = True,
+):
     """Returns (x, new_cache, aux)."""
     h = _full_s(norm_apply(cfg, p["norm1"], x), mesh, batch_axes)
     if mixer == ATTN:
         y, new_cache = attention.gqa_apply(
-            cfg, p["mixer"], h, mode=mode, positions=positions, cache=cache,
-            attn_impl=attn_impl, mesh=mesh, batch_axes=batch_axes,
-            tp=tp)
+            cfg,
+            p["mixer"],
+            h,
+            mode=mode,
+            positions=positions,
+            cache=cache,
+            attn_impl=attn_impl,
+            mesh=mesh,
+            batch_axes=batch_axes,
+            tp=tp,
+        )
     elif mixer == MLA:
         y, new_cache = attention.mla_apply(
-            cfg, p["mixer"], h, mode=mode, positions=positions, cache=cache,
-            attn_impl=attn_impl, mesh=mesh, batch_axes=batch_axes,
-            tp=tp)
+            cfg,
+            p["mixer"],
+            h,
+            mode=mode,
+            positions=positions,
+            cache=cache,
+            attn_impl=attn_impl,
+            mesh=mesh,
+            batch_axes=batch_axes,
+            tp=tp,
+        )
     elif mixer == MAMBA:
-        y, new_cache = ssm.mamba_apply(cfg, p["mixer"], h, mode=mode,
-                                       state=cache, mesh=mesh,
-                                       batch_axes=batch_axes, tp=tp)
+        y, new_cache = ssm.mamba_apply(
+            cfg,
+            p["mixer"],
+            h,
+            mode=mode,
+            state=cache,
+            mesh=mesh,
+            batch_axes=batch_axes,
+            tp=tp,
+        )
     elif mixer == MLSTM:
-        y, new_cache = ssm.mlstm_apply(cfg, p["mixer"], h, mode=mode,
-                                       state=cache, mesh=mesh,
-                                       batch_axes=batch_axes, tp=tp)
+        y, new_cache = ssm.mlstm_apply(
+            cfg,
+            p["mixer"],
+            h,
+            mode=mode,
+            state=cache,
+            mesh=mesh,
+            batch_axes=batch_axes,
+            tp=tp,
+        )
     elif mixer == SLSTM:
-        y, new_cache = ssm.slstm_apply(cfg, p["mixer"], h, mode=mode,
-                                       state=cache, mesh=mesh,
-                                       batch_axes=batch_axes, tp=tp)
+        y, new_cache = ssm.slstm_apply(
+            cfg,
+            p["mixer"],
+            h,
+            mode=mode,
+            state=cache,
+            mesh=mesh,
+            batch_axes=batch_axes,
+            tp=tp,
+        )
     else:
         raise ValueError(mixer)
     x = x + y
@@ -109,8 +158,14 @@ def block_apply(cfg: ModelConfig, p, x, *, mixer: str, ffn: str, mode: str,
         x = x + mlp_apply(cfg, p["ffn"], h2)
     elif ffn == FFN_MOE:
         # MoE consumes the sequence-sharded stream directly (EP dispatch)
-        y, aux = moe_apply(cfg, p["ffn"], norm_apply(cfg, p["norm2"], x),
-                           mesh=mesh, batch_axes=batch_axes, mode=mode,
-                           tp=tp)
+        y, aux = moe_apply(
+            cfg,
+            p["ffn"],
+            norm_apply(cfg, p["norm2"], x),
+            mesh=mesh,
+            batch_axes=batch_axes,
+            mode=mode,
+            tp=tp,
+        )
         x = x + y
     return x, new_cache, aux

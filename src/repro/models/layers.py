@@ -1,4 +1,5 @@
 """Norms, MLPs, embeddings — shared building blocks for the zoo."""
+
 from __future__ import annotations
 
 import jax
@@ -8,12 +9,13 @@ from repro.configs.base import ModelConfig
 
 
 def truncated_normal(key, shape, scale, dtype):
-    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
-                                                jnp.float32)).astype(dtype)
+    return (
+        scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+    ).astype(dtype)
 
 
 def dense_init(key, d_in, d_out, dtype, *, bias=False, scale=None):
-    w = truncated_normal(key, (d_in, d_out), scale or d_in ** -0.5, dtype)
+    w = truncated_normal(key, (d_in, d_out), scale or d_in**-0.5, dtype)
     p = {"w": w}
     if bias:
         p["b"] = jnp.zeros((d_out,), dtype)
@@ -31,10 +33,10 @@ def dense_apply(p, x):
 # Norms (computed in f32, cast back)
 # ---------------------------------------------------------------------------
 def norm_init(cfg: ModelConfig, d: int):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
     if cfg.norm == "layernorm":
-        return {"scale": jnp.ones((d,), jnp.float32),
-                "bias": jnp.zeros((d,), jnp.float32)}
-    return {"scale": jnp.ones((d,), jnp.float32)}
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
 
 
 def norm_apply(cfg: ModelConfig, p, x):
@@ -83,11 +85,11 @@ def mlp_apply(cfg: ModelConfig, p, x):
 def embed_init(key, cfg: ModelConfig):
     dtype = jnp.dtype(cfg.dtype)
     k1, k2 = jax.random.split(key)
-    p = {"tok": truncated_normal(k1, (cfg.vocab_size, cfg.d_model), 0.02,
-                                 dtype)}
+    p = {"tok": truncated_normal(k1, (cfg.vocab_size, cfg.d_model), 0.02, dtype)}
     if not cfg.tie_embeddings:
-        p["head"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dtype,
-                               scale=cfg.d_model ** -0.5)
+        p["head"] = dense_init(
+            k2, cfg.d_model, cfg.vocab_size, dtype, scale=cfg.d_model**-0.5
+        )
     return p
 
 

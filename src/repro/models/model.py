@@ -4,6 +4,7 @@ All entry points are pure functions of (cfg, mesh, policy); the returned
 closures are jit-compatible and carry explicit sharding constraints so the
 512-device dry-run and the 1-device smoke test share one code path.
 """
+
 from __future__ import annotations
 
 from functools import partial
@@ -37,14 +38,16 @@ def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
         pks = jax.random.split(keys[1], cfg.first_k_dense)
         for i in range(cfg.first_k_dense):
             prefix[f"l{i}"] = block_init(
-                pks[i], cfg, ATTN, FFN_DENSE,
-                d_ff=cfg.first_k_dense_d_ff or cfg.d_ff)
+                pks[i], cfg, ATTN, FFN_DENSE, d_ff=cfg.first_k_dense_d_ff or cfg.d_ff
+            )
         params["prefix"] = prefix
 
     def group_init(gkey):
         bks = jax.random.split(gkey, len(cfg.pattern))
-        return {f"b{j}": block_init(bks[j], cfg, mixer, ffn)
-                for j, (mixer, ffn) in enumerate(cfg.pattern)}
+        return {
+            f"b{j}": block_init(bks[j], cfg, mixer, ffn)
+            for j, (mixer, ffn) in enumerate(cfg.pattern)
+        }
 
     gkeys = jax.random.split(keys[2], cfg.n_groups)
     params["groups"] = jax.vmap(group_init)(gkeys)
@@ -65,20 +68,33 @@ def init_caches(cfg: ModelConfig, batch: int, seq_len: int):
     if cfg.first_k_dense:
         caches["prefix"] = {
             f"l{i}": block_cache_init(cfg, ATTN, batch, clen, dtype)
-            for i in range(cfg.first_k_dense)}
-    one = {f"b{j}": block_cache_init(cfg, mixer, batch, clen, dtype)
-           for j, (mixer, _) in enumerate(cfg.pattern)}
+            for i in range(cfg.first_k_dense)
+        }
+    one = {
+        f"b{j}": block_cache_init(cfg, mixer, batch, clen, dtype)
+        for j, (mixer, _) in enumerate(cfg.pattern)
+    }
     caches["groups"] = jax.tree_util.tree_map(
-        lambda a: jnp.tile(a[None], (cfg.n_groups,) + (1,) * a.ndim), one)
+        lambda a: jnp.tile(a[None], (cfg.n_groups,) + (1,) * a.ndim), one
+    )
     return caches
 
 
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
-def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
-            caches=None, mesh=None, policy: ShardingPolicy = ShardingPolicy(),
-            attn_impl: str = "xla"):
+def forward(
+    cfg: ModelConfig,
+    params,
+    inputs,
+    positions,
+    *,
+    mode: str,
+    caches=None,
+    mesh=None,
+    policy: ShardingPolicy = ShardingPolicy(),
+    attn_impl: str = "xla",
+):
     """inputs: tokens [B,S] int32 or embeds [B,S,D]. Returns
     (hidden [B,S,D], aux scalar, new_caches-or-None)."""
     if inputs.dtype in (jnp.int32, jnp.int64):
@@ -92,16 +108,24 @@ def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
     aux = jnp.zeros((), F32)
     new_caches: Dict[str, Any] = {}
 
-    blk = partial(block_apply, cfg, mode=mode, positions=positions,
-                  mesh=mesh, batch_axes=batch_axes, attn_impl=attn_impl,
-                  tp=policy.tensor_parallel)
+    blk = partial(
+        block_apply,
+        cfg,
+        mode=mode,
+        positions=positions,
+        mesh=mesh,
+        batch_axes=batch_axes,
+        attn_impl=attn_impl,
+        tp=policy.tensor_parallel,
+    )
 
     if cfg.first_k_dense:
         new_caches["prefix"] = {}
         for i in range(cfg.first_k_dense):
             c = caches["prefix"][f"l{i}"] if caches is not None else None
-            x, nc, a = blk(params["prefix"][f"l{i}"], x, mixer=ATTN,
-                           ffn=FFN_DENSE, cache=c)
+            x, nc, a = blk(
+                params["prefix"][f"l{i}"], x, mixer=ATTN, ffn=FFN_DENSE, cache=c
+            )
             x = constrain(x, mesh, bspec)
             new_caches["prefix"][f"l{i}"] = nc
             aux = aux + a
@@ -119,7 +143,7 @@ def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
             c = gcache[f"b{j}"] if gcache is not None else None
             f = partial(blk, mixer=mixer, ffn=ffn, cache=c)
             if remat:
-                f = jax.checkpoint(f)                     # per-layer remat
+                f = jax.checkpoint(f)  # per-layer remat
             x, nc, a = f(gp[f"b{j}"], x)
             # keep the saved residual stream sequence-sharded
             x = constrain(x, mesh, bspec)
@@ -128,8 +152,7 @@ def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
         return (x, aux), new_gc
 
     body = jax.checkpoint(group_body) if remat else group_body
-    xs = (params["groups"], caches["groups"]) if have_cache \
-        else params["groups"]
+    xs = (params["groups"], caches["groups"]) if have_cache else params["groups"]
     (x, aux), group_caches = jax.lax.scan(body, (x, aux), xs)
     new_caches["groups"] = group_caches
 
@@ -139,23 +162,42 @@ def forward(cfg: ModelConfig, params, inputs, positions, *, mode: str,
     return x, aux, ret_caches
 
 
-def logits_fn(cfg: ModelConfig, params, hidden, *, mesh=None,
-              policy: ShardingPolicy = ShardingPolicy()):
+def logits_fn(
+    cfg: ModelConfig,
+    params,
+    hidden,
+    *,
+    mesh=None,
+    policy: ShardingPolicy = ShardingPolicy(),
+):
     from repro.models.layers import unembed_apply
+
     logits = unembed_apply(cfg, params["embed"], hidden)
     if mesh is not None:
         batch = tuple(a for a in policy.batch_axes if a in mesh.axis_names)
         b_ax = batch if len(batch) > 1 else (batch[0] if batch else None)
-        v_ax = policy.model_axis \
-            if (policy.tensor_parallel and policy.model_axis not in batch
-                and cfg.vocab_size % mesh.shape[policy.model_axis] == 0) \
+        v_ax = (
+            policy.model_axis
+            if (
+                policy.tensor_parallel
+                and policy.model_axis not in batch
+                and cfg.vocab_size % mesh.shape[policy.model_axis] == 0
+            )
             else None
+        )
         logits = constrain(logits, mesh, P(b_ax, None, v_ax))
     return logits
 
 
-def chunked_xent(cfg: ModelConfig, params, hidden, labels, *, mesh=None,
-                 policy: ShardingPolicy = ShardingPolicy()):
+def chunked_xent(
+    cfg: ModelConfig,
+    params,
+    hidden,
+    labels,
+    *,
+    mesh=None,
+    policy: ShardingPolicy = ShardingPolicy(),
+):
     """Cross entropy over S chunks — never materializes [B, S, V].
 
     labels < 0 are masked out. Returns (sum_nll, n_valid).
@@ -173,38 +215,52 @@ def chunked_xent(cfg: ModelConfig, params, hidden, labels, *, mesh=None,
         logits = logits_fn(cfg, params, h, mesh=mesh, policy=policy)
         logits = logits.astype(F32)
         lse = jax.nn.logsumexp(logits, axis=-1)
-        gold = jnp.take_along_axis(
-            logits, jnp.maximum(lab, 0)[..., None], axis=-1)[..., 0]
+        gold = jnp.take_along_axis(logits, jnp.maximum(lab, 0)[..., None], axis=-1)
+        gold = gold[..., 0]
         mask = (lab >= 0).astype(F32)
         nll = nll + jnp.sum((lse - gold) * mask)
         n = n + jnp.sum(mask)
         return (nll, n), None
 
-    (nll, n), _ = jax.lax.scan(chunk, (jnp.zeros((), F32),
-                                       jnp.zeros((), F32)), (h_c, l_c))
+    (nll, n), _ = jax.lax.scan(
+        chunk, (jnp.zeros((), F32), jnp.zeros((), F32)), (h_c, l_c)
+    )
     return nll, n
 
 
 # ---------------------------------------------------------------------------
 # steps
 # ---------------------------------------------------------------------------
-def make_loss_fn(cfg: ModelConfig, *, mesh=None,
-                 policy: ShardingPolicy = ShardingPolicy(),
-                 attn_impl: str = "xla"):
+def make_loss_fn(
+    cfg: ModelConfig,
+    *,
+    mesh=None,
+    policy: ShardingPolicy = ShardingPolicy(),
+    attn_impl: str = "xla",
+):
     def loss_fn(params, batch):
         inputs = batch.get("tokens", batch.get("embeds"))
         b, s = inputs.shape[:2]
         positions = batch.get("positions")
         if positions is None:
             positions = rope_lib.positions_for(cfg, b, s)
-        hidden, aux, _ = forward(cfg, params, inputs, positions,
-                                 mode="train", mesh=mesh, policy=policy,
-                                 attn_impl=attn_impl)
-        nll, n = chunked_xent(cfg, params, hidden, batch["labels"],
-                              mesh=mesh, policy=policy)
+        hidden, aux, _ = forward(
+            cfg,
+            params,
+            inputs,
+            positions,
+            mode="train",
+            mesh=mesh,
+            policy=policy,
+            attn_impl=attn_impl,
+        )
+        nll, n = chunked_xent(
+            cfg, params, hidden, batch["labels"], mesh=mesh, policy=policy
+        )
         loss = nll / jnp.maximum(n, 1.0)
         total = loss + cfg.moe.router_aux_weight * aux
         return total, {"loss": loss, "aux": aux, "n_tokens": n}
+
     return loss_fn
 
 
@@ -213,11 +269,15 @@ def init_train_state(cfg: ModelConfig, key, opt_cfg: AdamWConfig):
     return {"params": params, "opt": adamw_init(opt_cfg, params)}
 
 
-def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *, mesh=None,
-                    policy: ShardingPolicy = ShardingPolicy(),
-                    attn_impl: str = "xla"):
-    loss_fn = make_loss_fn(cfg, mesh=mesh, policy=policy,
-                           attn_impl=attn_impl)
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    *,
+    mesh=None,
+    policy: ShardingPolicy = ShardingPolicy(),
+    attn_impl: str = "xla",
+):
+    loss_fn = make_loss_fn(cfg, mesh=mesh, policy=policy, attn_impl=attn_impl)
     k = policy.microbatches
 
     def constrain_grads(g):
@@ -226,34 +286,40 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *, mesh=None,
         if mesh is None:
             return g
         from repro.models.sharding import tree_shardings
-        return jax.lax.with_sharding_constraint(
-            g, tree_shardings(g, mesh, policy, cfg))
+
+        shardings = tree_shardings(g, mesh, policy, cfg)
+        return jax.lax.with_sharding_constraint(g, shardings)
 
     def train_step(state, batch):
         params_use = state["params"]
         if policy.hoist_dense_gathers and mesh is not None:
             from repro.models.sharding import hoist_constrain
+
             params_use = hoist_constrain(params_use, mesh, policy, cfg)
         if k == 1:
-            (total, metrics), grads = jax.value_and_grad(
-                loss_fn, has_aux=True)(params_use, batch)
+            (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params_use, batch
+            )
             grads = constrain_grads(grads)
         else:
             # gradient accumulation over k microbatches (forward-only scan;
             # each microbatch's backward is local to its iteration)
-            mbs = jax.tree_util.tree_map(
-                lambda x: jnp.moveaxis(
-                    x.reshape((x.shape[0] // k, k) + x.shape[1:]), 1, 0)
-                if x.ndim >= 1 and x.shape[0] == next(iter(
-                    jax.tree_util.tree_leaves(batch))).shape[0]
-                else x, batch)
+            lead = next(iter(jax.tree_util.tree_leaves(batch))).shape[0]
+
+            def to_microbatches(x):
+                if x.ndim >= 1 and x.shape[0] == lead:
+                    x = x.reshape((x.shape[0] // k, k) + x.shape[1:])
+                    return jnp.moveaxis(x, 1, 0)
+                return x
+
+            mbs = jax.tree_util.tree_map(to_microbatches, batch)
             # note: all batch leaves share the leading global-batch dim
             # except mrope positions [3, B, S] — handle that axis.
             if "positions" in batch:
                 p = batch["positions"]
                 mbs["positions"] = jnp.moveaxis(
-                    p.reshape(p.shape[0], p.shape[1] // k, k, *p.shape[2:]),
-                    2, 0)
+                    p.reshape(p.shape[0], p.shape[1] // k, k, *p.shape[2:]), 2, 0
+                )
 
             hoisted = policy.hoist_dense_gathers and mesh is not None
 
@@ -262,77 +328,100 @@ def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig, *, mesh=None,
                 # layout inside the scan; one reduce-scatter at the end
                 if hoisted:
                     from repro.models.sharding import hoist_constrain
-                    return hoist_constrain(constrain_grads(g), mesh,
-                                           policy, cfg)
+
+                    return hoist_constrain(constrain_grads(g), mesh, policy, cfg)
                 return constrain_grads(g)
 
             def mb_body(carry, mb):
                 g_acc, t_acc, m_acc = carry
-                (total, metrics), grads = jax.value_and_grad(
-                    loss_fn, has_aux=True)(params_use, mb)
+                (total, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params_use, mb
+                )
                 g_acc = cg(jax.tree_util.tree_map(jnp.add, g_acc, grads))
                 m_acc = jax.tree_util.tree_map(jnp.add, m_acc, metrics)
                 return (g_acc, t_acc + total, m_acc), None
 
-            g0 = cg(jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, p.dtype), state["params"]))
-            m0 = {"loss": jnp.zeros((), jnp.float32),
-                  "aux": jnp.zeros((), jnp.float32),
-                  "n_tokens": jnp.zeros((), jnp.float32)}
+            zeros_like = lambda p: jnp.zeros(p.shape, p.dtype)
+            g0 = cg(jax.tree_util.tree_map(zeros_like, state["params"]))
+            m0 = {
+                "loss": jnp.zeros((), jnp.float32),
+                "aux": jnp.zeros((), jnp.float32),
+                "n_tokens": jnp.zeros((), jnp.float32),
+            }
             (grads, total, metrics), _ = jax.lax.scan(
-                mb_body, (g0, jnp.zeros((), jnp.float32), m0), mbs)
-            grads = constrain_grads(
-                jax.tree_util.tree_map(lambda g: g / k, grads))
+                mb_body, (g0, jnp.zeros((), jnp.float32), m0), mbs
+            )
+            grads = constrain_grads(jax.tree_util.tree_map(lambda g: g / k, grads))
             total = total / k
-            metrics = {"loss": metrics["loss"] / k, "aux": metrics["aux"] / k,
-                       "n_tokens": metrics["n_tokens"]}
+            metrics = {
+                "loss": metrics["loss"] / k,
+                "aux": metrics["aux"] / k,
+                "n_tokens": metrics["n_tokens"],
+            }
         new_params, new_opt, gnorm = adamw_update(
-            opt_cfg, state["params"], grads, state["opt"])
+            opt_cfg, state["params"], grads, state["opt"]
+        )
         metrics = dict(metrics, total=total, grad_norm=gnorm)
         return {"params": new_params, "opt": new_opt}, metrics
 
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig, *, mesh=None,
-                      policy: ShardingPolicy = ShardingPolicy(),
-                      attn_impl: str = "xla"):
+def make_prefill_step(
+    cfg: ModelConfig,
+    *,
+    mesh=None,
+    policy: ShardingPolicy = ShardingPolicy(),
+    attn_impl: str = "xla",
+):
     def prefill_step(params, batch):
         inputs = batch.get("tokens", batch.get("embeds"))
         b, s = inputs.shape[:2]
         positions = batch.get("positions")
         if positions is None:
             positions = rope_lib.positions_for(cfg, b, s)
-        hidden, _, caches = forward(cfg, params, inputs, positions,
-                                    mode="prefill", mesh=mesh, policy=policy,
-                                    attn_impl=attn_impl)
-        last = logits_fn(cfg, params, hidden[:, -1:], mesh=mesh,
-                         policy=policy)
+        hidden, _, caches = forward(
+            cfg,
+            params,
+            inputs,
+            positions,
+            mode="prefill",
+            mesh=mesh,
+            policy=policy,
+            attn_impl=attn_impl,
+        )
+        last = logits_fn(cfg, params, hidden[:, -1:], mesh=mesh, policy=policy)
         return last[:, 0], caches
+
     return prefill_step
 
 
 class Model:
     """Convenience bundle over the functional API."""
 
-    def __init__(self, cfg: ModelConfig, *, mesh=None,
-                 policy: ShardingPolicy = ShardingPolicy(),
-                 opt_cfg: AdamWConfig = AdamWConfig(),
-                 attn_impl: str = "xla"):
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        *,
+        mesh=None,
+        policy: ShardingPolicy = ShardingPolicy(),
+        opt_cfg: AdamWConfig = AdamWConfig(),
+        attn_impl: str = "xla",
+    ):
         self.cfg = cfg
         self.mesh = mesh
         self.policy = policy
         self.opt_cfg = opt_cfg
         self.init_params = partial(init_params, cfg)
         self.init_caches = partial(init_caches, cfg)
-        self.init_train_state = lambda key: init_train_state(cfg, key,
-                                                             opt_cfg)
-        self.loss_fn = make_loss_fn(cfg, mesh=mesh, policy=policy,
-                                    attn_impl=attn_impl)
-        self.train_step = make_train_step(cfg, opt_cfg, mesh=mesh,
-                                          policy=policy, attn_impl=attn_impl)
-        self.prefill_step = make_prefill_step(cfg, mesh=mesh, policy=policy,
-                                              attn_impl=attn_impl)
+        self.init_train_state = lambda key: init_train_state(cfg, key, opt_cfg)
+        self.loss_fn = make_loss_fn(cfg, mesh=mesh, policy=policy, attn_impl=attn_impl)
+        self.train_step = make_train_step(
+            cfg, opt_cfg, mesh=mesh, policy=policy, attn_impl=attn_impl
+        )
+        self.prefill_step = make_prefill_step(
+            cfg, mesh=mesh, policy=policy, attn_impl=attn_impl
+        )
         self.serve_step = make_serve_step(cfg, mesh=mesh, policy=policy)
 
 
@@ -340,20 +429,29 @@ def build_model(cfg: ModelConfig, **kw) -> Model:
     return Model(cfg, **kw)
 
 
-def make_serve_step(cfg: ModelConfig, *, mesh=None,
-                    policy: ShardingPolicy = ShardingPolicy()):
+def make_serve_step(
+    cfg: ModelConfig, *, mesh=None, policy: ShardingPolicy = ShardingPolicy()
+):
     """One decode step: (params, caches, batch{tokens|embeds, pos}) ->
     (logits [B, V], new_caches)."""
+
     def serve_step(params, caches, batch):
         inputs = batch.get("tokens", batch.get("embeds"))
-        pos = batch["pos"]                                # [B]
+        pos = batch["pos"]  # [B]
         positions = pos[:, None]
         if cfg.rope == "mrope":
-            positions = jnp.broadcast_to(positions[None], (3,) +
-                                         positions.shape)
-        hidden, _, new_caches = forward(cfg, params, inputs, positions,
-                                        mode="decode", caches=caches,
-                                        mesh=mesh, policy=policy)
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        hidden, _, new_caches = forward(
+            cfg,
+            params,
+            inputs,
+            positions,
+            mode="decode",
+            caches=caches,
+            mesh=mesh,
+            policy=policy,
+        )
         logits = logits_fn(cfg, params, hidden, mesh=mesh, policy=policy)
         return logits[:, 0], new_caches
+
     return serve_step

@@ -18,6 +18,7 @@ Design (TPU-native, DeepSeek/GShard lineage):
   ``C = ceil(top_k * T_loc / E * capacity_factor)``; overflow tokens are
   dropped (contribute only via shared experts), standard for TPU MoE.
 """
+
 from __future__ import annotations
 
 from typing import Optional, Tuple
@@ -38,10 +39,10 @@ def moe_init(key, cfg: ModelConfig):
     d, e, f = cfg.d_model, m.n_experts, m.d_ff_expert
     ks = jax.random.split(key, 5)
     p = {
-        "router": truncated_normal(ks[0], (d, e), d ** -0.5, F32),
-        "w1": truncated_normal(ks[1], (e, d, f), d ** -0.5, dtype),
-        "w3": truncated_normal(ks[2], (e, d, f), d ** -0.5, dtype),
-        "w2": truncated_normal(ks[3], (e, f, d), f ** -0.5, dtype),
+        "router": truncated_normal(ks[0], (d, e), d**-0.5, F32),
+        "w1": truncated_normal(ks[1], (e, d, f), d**-0.5, dtype),
+        "w3": truncated_normal(ks[2], (e, d, f), d**-0.5, dtype),
+        "w2": truncated_normal(ks[3], (e, f, d), f**-0.5, dtype),
     }
     if m.n_shared_experts:
         p["shared"] = mlp_init(ks[4], cfg, d, m.n_shared_experts * f)
@@ -54,14 +55,15 @@ def moe_init(key, cfg: ModelConfig):
 def _route(cfg: ModelConfig, router_w, x_flat):
     """x_flat [T, D] -> gates [T,k], eidx [T,k], aux (scalar)."""
     m = cfg.moe
-    logits = (x_flat.astype(F32) @ router_w)              # [T, E]
+    logits = x_flat.astype(F32) @ router_w  # [T, E]
     probs = jax.nn.softmax(logits, axis=-1)
     gates, eidx = jax.lax.top_k(probs, m.top_k)
     gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
     # Switch-style load-balance loss: E * sum_e f_e * P_e
-    pe = probs.mean(0)                                    # [E]
+    pe = probs.mean(0)  # [E]
     fe = jnp.zeros((m.n_experts,), F32).at[eidx.reshape(-1)].add(
-        1.0 / (x_flat.shape[0] * m.top_k))
+        1.0 / (x_flat.shape[0] * m.top_k)
+    )
     aux = m.n_experts * jnp.sum(fe * pe)
     return gates.astype(x_flat.dtype), eidx, aux
 
@@ -69,7 +71,7 @@ def _route(cfg: ModelConfig, router_w, x_flat):
 def _dispatch_indices(eidx, n_experts: int, capacity: int):
     """Flattened pair -> (expert, slot, keep). Slots unique per expert."""
     tk = eidx.size
-    e_flat = eidx.reshape(-1)                             # [TK]
+    e_flat = eidx.reshape(-1)  # [TK]
     order = jnp.argsort(e_flat, stable=True)
     sorted_e = e_flat[order]
     counts = jnp.zeros((n_experts,), jnp.int32).at[sorted_e].add(1)
@@ -77,8 +79,7 @@ def _dispatch_indices(eidx, n_experts: int, capacity: int):
     rank = jnp.arange(tk, dtype=jnp.int32) - starts[sorted_e]
     keep_sorted = rank < capacity
     # invert the permutation back to pair order
-    inv = jnp.zeros((tk,), jnp.int32).at[order].set(
-        jnp.arange(tk, dtype=jnp.int32))
+    inv = jnp.zeros((tk,), jnp.int32).at[order].set(jnp.arange(tk, dtype=jnp.int32))
     slot = rank[inv]
     keep = keep_sorted[inv]
     return e_flat, slot, keep
@@ -86,13 +87,24 @@ def _dispatch_indices(eidx, n_experts: int, capacity: int):
 
 def _expert_ffn(w1, w3, w2, buf):
     """buf [E_loc, C*, D] -> [E_loc, C*, D] (grouped swiglu)."""
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w1)) * \
-        jnp.einsum("ecd,edf->ecf", buf, w3)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, w1)) * jnp.einsum(
+        "ecd,edf->ecf", buf, w3
+    )
     return jnp.einsum("ecf,efd->ecd", h, w2)
 
 
-def _moe_local(cfg: ModelConfig, model_axis: Optional[str], n_shards: int,
-               x_flat, router_w, w1, w3, w2, *, seq_sharded: bool):
+def _moe_local(
+    cfg: ModelConfig,
+    model_axis: Optional[str],
+    n_shards: int,
+    x_flat,
+    router_w,
+    w1,
+    w3,
+    w2,
+    *,
+    seq_sharded: bool,
+):
     """Per-shard MoE body. x_flat [T_loc, D]; w* hold E_loc local experts.
 
     seq_sharded=True: tokens differ per shard -> all_to_all dispatch.
@@ -120,17 +132,18 @@ def _moe_local(cfg: ModelConfig, model_axis: Optional[str], n_shards: int,
         contrib = x_flat[tok] * keep[:, None].astype(x_flat.dtype)
         buf = buf.at[e_flat, slot].add(contrib)
         # all_to_all: split experts over shards, gather source shards
-        # [E, cap, D] -> [E_loc, n_shards * cap, D]
+        # [E, cap, D] -> [S, E_loc, cap, D] -> [E_loc, n_shards * cap, D]
         buf = jax.lax.all_to_all(
-            buf.reshape(n_shards, e_loc, cap, d), model_axis, 0, 0,
-            tiled=False)                                  # [S, E_loc, cap, D]
+            buf.reshape(n_shards, e_loc, cap, d), model_axis, 0, 0, tiled=False
+        )
         buf = jnp.moveaxis(buf, 0, 1).reshape(e_loc, n_shards * cap, d)
         out = _expert_ffn(w1, w3, w2, buf)
         out = jnp.moveaxis(out.reshape(e_loc, n_shards, cap, d), 1, 0)
         out = jax.lax.all_to_all(out, model_axis, 0, 0, tiled=False)
-        out = out.reshape(e, cap, d)                      # back on source
-        y_pairs = out[e_flat, slot] * (gates.reshape(-1, 1) *
-                                       keep[:, None].astype(gates.dtype))
+        out = out.reshape(e, cap, d)  # back on source
+        y_pairs = out[e_flat, slot] * (
+            gates.reshape(-1, 1) * keep[:, None].astype(gates.dtype)
+        )
         y = jnp.zeros_like(x_flat).at[tok].add(y_pairs)
         aux = jax.lax.pmean(aux, model_axis)
     else:
@@ -145,8 +158,9 @@ def _moe_local(cfg: ModelConfig, model_axis: Optional[str], n_shards: int,
         contrib = x_flat[tok] * local[:, None].astype(x_flat.dtype)
         buf = buf.at[e_rel_c, slot].add(contrib)
         out = _expert_ffn(w1, w3, w2, buf)
-        y_pairs = out[e_rel_c, slot] * (gates.reshape(-1, 1) *
-                                        local[:, None].astype(gates.dtype))
+        y_pairs = out[e_rel_c, slot] * (
+            gates.reshape(-1, 1) * local[:, None].astype(gates.dtype)
+        )
         y = jnp.zeros_like(x_flat).at[tok].add(y_pairs)
         if model_axis is not None and n_shards > 1:
             y = jax.lax.psum(y, model_axis)
@@ -156,15 +170,23 @@ def _moe_local(cfg: ModelConfig, model_axis: Optional[str], n_shards: int,
 # ---------------------------------------------------------------------------
 # public entry
 # ---------------------------------------------------------------------------
-def moe_apply(cfg: ModelConfig, p, x, *, mesh=None, batch_axes=("data",),
-              mode: str = "train", tp: bool = True
-              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+def moe_apply(
+    cfg: ModelConfig,
+    p,
+    x,
+    *,
+    mesh=None,
+    batch_axes=("data",),
+    mode: str = "train",
+    tp: bool = True,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """x [B, S, D] -> (y [B, S, D], aux loss scalar).
 
     With a mesh: expert-parallel over the "model" axis via shard_map.
     Without: single-shard local path (CPU smoke tests).
     """
     import math
+
     m = cfg.moe
     b, s, d = x.shape
     seq_sharded = mode in ("train", "prefill")
@@ -174,12 +196,18 @@ def moe_apply(cfg: ModelConfig, p, x, *, mesh=None, batch_axes=("data",),
         if not bt or b % math.prod(mesh.shape[a] for a in bt) != 0:
             bt = None  # degenerate batch (e.g. 1-token decode): local path
 
-    if mesh is None or not tp or bt is None \
-            or "model" not in mesh.axis_names \
-            or mesh.shape["model"] == 1 or m.n_experts % mesh.shape["model"]:
+    if (
+        mesh is None
+        or not tp
+        or bt is None
+        or "model" not in mesh.axis_names
+        or mesh.shape["model"] == 1
+        or m.n_experts % mesh.shape["model"]
+    ):
         xf = x.reshape(-1, d)
-        y, aux = _moe_local(cfg, None, 1, xf, p["router"], p["w1"], p["w3"],
-                            p["w2"], seq_sharded=False)
+        y, aux = _moe_local(
+            cfg, None, 1, xf, p["router"], p["w1"], p["w3"], p["w2"], seq_sharded=False
+        )
         y = y.reshape(b, s, d)
     else:
         n_shards = mesh.shape["model"]
@@ -190,18 +218,25 @@ def moe_apply(cfg: ModelConfig, p, x, *, mesh=None, batch_axes=("data",),
 
         def body(xs, rw, w1, w3, w2):
             xf = xs.reshape(-1, d)
-            y, aux = _moe_local(cfg, "model", n_shards, xf, rw, w1, w3, w2,
-                                seq_sharded=seq_sharded)
+            y, aux = _moe_local(
+                cfg, "model", n_shards, xf, rw, w1, w3, w2, seq_sharded=seq_sharded
+            )
             for ax in mesh.axis_names:  # out_specs P() => replicate proof
                 aux = jax.lax.pmean(aux, ax)
             return y.reshape(xs.shape), aux[None]
 
-        fsdp = "data" if (mesh.shape.get("data", 1) > 1
-                          and cfg.d_model % mesh.shape["data"] == 0) else None
+        nd = mesh.shape.get("data", 1)
+        fsdp = "data" if nd > 1 and cfg.d_model % nd == 0 else None
         y, aux = jax.shard_map(
-            body, mesh=mesh,
-            in_specs=(x_spec, P(), P("model", fsdp, None),
-                      P("model", fsdp, None), P("model", None, fsdp)),
+            body,
+            mesh=mesh,
+            in_specs=(
+                x_spec,
+                P(),
+                P("model", fsdp, None),
+                P("model", fsdp, None),
+                P("model", None, fsdp),
+            ),
             out_specs=(x_spec, P()),
         )(x, p["router"], p["w1"], p["w3"], p["w2"])
         aux = aux[0]

@@ -1,4 +1,5 @@
 """Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -26,17 +27,18 @@ def mrope_cos_sin(positions3, head_dim: int, theta: float, sections):
     head_dim/2 frequency bands among (t, h, w); each band rotates by its own
     coordinate. Returns cos/sin [..., head_dim/2].
     """
-    freqs = rope_freqs(head_dim, theta)                    # [half]
+    freqs = rope_freqs(head_dim, theta)  # [half]
     # angles per coordinate: [3, ..., half]
     ang = positions3.astype(jnp.float32)[..., None] * freqs
     half = head_dim // 2
     assert sum(sections) == half, (sections, half)
-    idx = jnp.repeat(jnp.arange(3), jnp.array(sections),
-                     total_repeat_length=half)             # [half] in {0,1,2}
+    # [half] in {0,1,2}
+    idx = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=half)
     sel = jnp.take_along_axis(
-        jnp.moveaxis(ang, 0, -1),                          # [..., half, 3]
+        jnp.moveaxis(ang, 0, -1),  # [..., half, 3]
         idx[(None,) * (ang.ndim - 2) + (slice(None), None)].astype(jnp.int32),
-        axis=-1)[..., 0]                                   # [..., half]
+        axis=-1,
+    )[..., 0]  # [..., half]
     return jnp.cos(sel), jnp.sin(sel)
 
 
@@ -56,7 +58,7 @@ def apply_rope(x, cos, sin):
 def positions_for(cfg: ModelConfig, batch: int, seq: int, offset=0):
     """Default position ids. For mrope, text-only default: all three
     coordinates equal (matches Qwen2-VL for pure-text segments)."""
-    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset   # [1, S]
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset  # [1, S]
     pos = jnp.broadcast_to(pos, (batch, seq))
     if cfg.rope == "mrope":
         return jnp.broadcast_to(pos[None], (3, batch, seq))
@@ -69,8 +71,7 @@ def cos_sin_for(cfg: ModelConfig, positions, head_dim=None):
     if cfg.rope == "none":
         return None
     if cfg.rope == "mrope":
-        cos, sin = mrope_cos_sin(positions, hd, cfg.rope_theta,
-                                 cfg.mrope_sections)
+        cos, sin = mrope_cos_sin(positions, hd, cfg.rope_theta, cfg.mrope_sections)
     else:
         cos, sin = rope_cos_sin(positions, hd, cfg.rope_theta)
     return cos[..., None, :], sin[..., None, :]

@@ -5,6 +5,7 @@
 axis size falls back to replication — this keeps small archs (xlstm-125m)
 lowering on a 256-chip mesh without bespoke configs.
 """
+
 from __future__ import annotations
 
 import fnmatch
@@ -16,10 +17,10 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-FSDP = "__fsdp__"     # placeholder resolved to policy.fsdp_axes
+FSDP = "__fsdp__"  # placeholder resolved to policy.fsdp_axes
 MODEL = "model"
-HEADQ = "__headq__"   # model axis iff cfg.n_heads divides it (else replicate)
-HEADKV = "__headkv__" # model axis iff cfg.n_kv_heads divides it
+HEADQ = "__headq__"  # model axis iff cfg.n_heads divides it (else replicate)
+HEADKV = "__headkv__"  # model axis iff cfg.n_kv_heads divides it
 
 
 @dataclass(frozen=True)
@@ -27,14 +28,14 @@ class ShardingPolicy:
     batch_axes: Tuple[str, ...] = ("data",)
     model_axis: str = "model"
     fsdp_axes: Tuple[str, ...] = ("data",)
-    seq_shard: bool = True        # sequence-parallel activations at boundaries
-    remat: bool = True            # per-layer-group activation checkpointing
+    seq_shard: bool = True  # sequence-parallel activations at boundaries
+    remat: bool = True  # per-layer-group activation checkpointing
     tensor_parallel: bool = True  # False: model axis carries batch (pure DP)
     # perf knobs (hillclimbing)
     q_chunk: int = 512
     kv_chunk: int = 1024
     loss_chunk: int = 2048
-    microbatches: int = 1         # gradient accumulation (memory knob)
+    microbatches: int = 1  # gradient accumulation (memory knob)
     # hoist dense-FFN FSDP weight gathers out of the microbatch scan:
     # those weights are kept TP-only-sharded for the whole step, so the
     # ZeRO-3 gather is paid once per step instead of once per microbatch.
@@ -46,28 +47,42 @@ class ShardingPolicy:
 _RULES = [
     ("embed/tok", (MODEL, FSDP)),
     ("embed/head/w", (FSDP, MODEL)),
-    ("*/wq/w", (FSDP, HEADQ)), ("*/wk/w", (FSDP, HEADKV)),
+    ("*/wq/w", (FSDP, HEADQ)),
+    ("*/wk/w", (FSDP, HEADKV)),
     ("*/wv/w", (FSDP, HEADKV)),
-    ("*/wq/b", (HEADQ,)), ("*/wk/b", (HEADKV,)), ("*/wv/b", (HEADKV,)),
-    ("*/wo/w", (HEADQ, FSDP)), ("*/wo/b", (None,)),
-    ("*/wi/w", (FSDP, MODEL)), ("*/wg/w", (FSDP, MODEL)),
+    ("*/wq/b", (HEADQ,)),
+    ("*/wk/b", (HEADKV,)),
+    ("*/wv/b", (HEADKV,)),
+    ("*/wo/w", (HEADQ, FSDP)),
+    ("*/wo/b", (None,)),
+    ("*/wi/w", (FSDP, MODEL)),
+    ("*/wg/w", (FSDP, MODEL)),
     ("*/wi/b", (MODEL,)),
     ("*/router", (None, None)),
-    ("*/w1", (MODEL, FSDP, None)), ("*/w3", (MODEL, FSDP, None)),
+    ("*/w1", (MODEL, FSDP, None)),
+    ("*/w3", (MODEL, FSDP, None)),
     ("*/w2", (MODEL, None, FSDP)),
     ("*/in_proj/w", (FSDP, MODEL)),
-    ("*/conv_w", (MODEL, None)), ("*/conv_b", (MODEL,)),
+    ("*/conv_w", (MODEL, None)),
+    ("*/conv_b", (MODEL,)),
     ("*/x_proj/w", (MODEL, None)),
-    ("*/dt_proj/w", (None, MODEL)), ("*/dt_proj/b", (MODEL,)),
-    ("*/a_log", (MODEL, None)), ("*/d_skip", (MODEL,)),
+    ("*/dt_proj/w", (None, MODEL)),
+    ("*/dt_proj/b", (MODEL,)),
+    ("*/a_log", (MODEL, None)),
+    ("*/d_skip", (MODEL,)),
     ("*/out_proj/w", (MODEL, FSDP)),
     ("*/w_if/w", (MODEL, None)),
-    ("*/w_x/w", (FSDP, MODEL)), ("*/w_x/b", (MODEL,)),
+    ("*/w_x/w", (FSDP, MODEL)),
+    ("*/w_x/b", (MODEL,)),
     ("*/r_h", (None, MODEL, None, None)),
-    ("*/ffn_up/w", (FSDP, MODEL)), ("*/ffn_down/w", (MODEL, FSDP)),
-    ("*/w_dkv/w", (FSDP, None)), ("*/w_krope/w", (FSDP, None)),
-    ("*/w_uk/w", (None, HEADQ)), ("*/w_uv/w", (None, HEADQ)),
-    ("*/w_dq/w", (FSDP, None)), ("*/w_uq/w", (None, HEADQ)),
+    ("*/ffn_up/w", (FSDP, MODEL)),
+    ("*/ffn_down/w", (MODEL, FSDP)),
+    ("*/w_dkv/w", (FSDP, None)),
+    ("*/w_krope/w", (FSDP, None)),
+    ("*/w_uk/w", (None, HEADQ)),
+    ("*/w_uv/w", (None, HEADQ)),
+    ("*/w_dq/w", (FSDP, None)),
+    ("*/w_uq/w", (None, HEADQ)),
 ]
 
 
@@ -79,8 +94,7 @@ def _axis_size(mesh: Mesh, axes) -> int:
     return math.prod(mesh.shape[a] for a in axes)
 
 
-def leaf_pspec(path: str, shape, mesh: Mesh, policy: ShardingPolicy,
-               cfg=None) -> P:
+def leaf_pspec(path: str, shape, mesh: Mesh, policy: ShardingPolicy, cfg=None) -> P:
     """path: 'groups/b0/mixer/wq/w'. Leading 'groups/*' gets a stacked dim."""
     stacked = path.startswith("groups/")
     core_shape = shape[1:] if stacked else shape
@@ -95,10 +109,13 @@ def leaf_pspec(path: str, shape, mesh: Mesh, policy: ShardingPolicy,
     for i, size in enumerate(core_shape):
         ax = template[i] if template and i < len(template) else None
         if not policy.tensor_parallel and ax in (MODEL, HEADQ, HEADKV):
-            ax = FSDP            # pure-DP: weights FSDP-shard, never TP
+            ax = FSDP  # pure-DP: weights FSDP-shard, never TP
         if ax == FSDP:
-            ax = policy.fsdp_axes if len(policy.fsdp_axes) > 1 else \
-                (policy.fsdp_axes[0] if policy.fsdp_axes else None)
+            ax = (
+                policy.fsdp_axes
+                if len(policy.fsdp_axes) > 1
+                else (policy.fsdp_axes[0] if policy.fsdp_axes else None)
+            )
         elif ax == HEADQ:
             ok = cfg is None or cfg.n_heads % msize == 0
             ax = policy.model_axis if ok else None
@@ -121,10 +138,12 @@ def leaf_pspec(path: str, shape, mesh: Mesh, policy: ShardingPolicy,
 
 def tree_pspecs(tree, mesh: Mesh, policy: ShardingPolicy, cfg=None):
     """Pytree of PartitionSpecs mirroring ``tree`` (of arrays/structs)."""
+
     def visit(path, leaf):
         names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
         pstr = "/".join(str(n) for n in names)
         return leaf_pspec(pstr, leaf.shape, mesh, policy, cfg)
+
     return jax.tree_util.tree_map_with_path(visit, tree)
 
 
@@ -132,7 +151,8 @@ def tree_shardings(tree, mesh: Mesh, policy: ShardingPolicy, cfg=None):
     return jax.tree_util.tree_map(
         lambda spec: NamedSharding(mesh, spec),
         tree_pspecs(tree, mesh, policy, cfg),
-        is_leaf=lambda x: isinstance(x, P))
+        is_leaf=lambda x: isinstance(x, P),
+    )
 
 
 _HOIST_PATTERNS = ("/ffn/wi/", "/ffn/wg/", "/ffn/wo/")
@@ -143,6 +163,7 @@ def hoist_constrain(params, mesh: Mesh, policy: ShardingPolicy, cfg=None):
     dropped) so the data-axis all-gather happens once, outside any
     microbatch scan. Other leaves pass through untouched."""
     import dataclasses
+
     nofsdp = dataclasses.replace(policy, fsdp_axes=())
 
     def visit(path, leaf):
@@ -150,23 +171,27 @@ def hoist_constrain(params, mesh: Mesh, policy: ShardingPolicy, cfg=None):
         pstr = "/".join(str(n) for n in names)
         if any(pat in "/" + pstr + "/" for pat in _HOIST_PATTERNS):
             spec = leaf_pspec(pstr, leaf.shape, mesh, nofsdp, cfg)
-            return jax.lax.with_sharding_constraint(
-                leaf, NamedSharding(mesh, spec))
+            return jax.lax.with_sharding_constraint(leaf, NamedSharding(mesh, spec))
         return leaf
+
     return jax.tree_util.tree_map_with_path(visit, params)
 
 
-def act_spec(policy: ShardingPolicy, mesh: Optional[Mesh], *, seq_len: int,
-             mode: str) -> P:
+def act_spec(
+    policy: ShardingPolicy, mesh: Optional[Mesh], *, seq_len: int, mode: str
+) -> P:
     """Boundary activation spec [B, S, D]."""
     if mesh is None:
         return P()
     batch = tuple(a for a in policy.batch_axes if a in mesh.axis_names)
     b_ax = batch if len(batch) > 1 else (batch[0] if batch else None)
     s_ax = None
-    if (policy.seq_shard and policy.tensor_parallel
-            and mode in ("train", "prefill")
-            and seq_len % mesh.shape[policy.model_axis] == 0):
+    if (
+        policy.seq_shard
+        and policy.tensor_parallel
+        and mode in ("train", "prefill")
+        and seq_len % mesh.shape[policy.model_axis] == 0
+    ):
         s_ax = policy.model_axis
     return P(b_ax, s_ax, None)
 
@@ -216,4 +241,5 @@ def cache_shardings(tree, mesh: Mesh, policy: ShardingPolicy):
         names = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
         pstr = "/".join(str(n) for n in names)
         return NamedSharding(mesh, cache_pspec(pstr, leaf.shape, mesh, policy))
+
     return jax.tree_util.tree_map_with_path(visit, tree)

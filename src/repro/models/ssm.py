@@ -15,6 +15,7 @@ TPU adaptation notes (vs the CUDA reference kernels):
   axis shards d_inner / heads with zero cross-device communication inside
   the scan.
 """
+
 from __future__ import annotations
 
 import jax
@@ -32,7 +33,9 @@ def _make_wsc_ch(mesh, batch_axes, n_ch, model_axis="model", tp=True):
     if mesh is None or model_axis not in mesh.axis_names or not tp:
         return lambda x, ch_dim=-1: x
     from jax.sharding import PartitionSpec as P
+
     from repro.models.sharding import constrain as cst
+
     msize = mesh.shape[model_axis]
     c_ax = model_axis if (n_ch % msize == 0 and msize > 1) else None
     batch = tuple(a for a in batch_axes if a in mesh.axis_names)
@@ -43,6 +46,7 @@ def _make_wsc_ch(mesh, batch_axes, n_ch, model_axis="model", tp=True):
         dims[0] = b_ax
         dims[ch_dim if ch_dim >= 0 else x.ndim + ch_dim] = c_ax
         return cst(x, mesh, P(*dims))
+
     return wsc
 
 
@@ -56,10 +60,10 @@ def causal_conv1d(x, w, b, conv_state=None):
         pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
     else:
         pad = conv_state.astype(x.dtype)
-    xp = jnp.concatenate([pad, x], axis=1)                # [B, S+K-1, C]
-    y = sum(xp[:, i:i + x.shape[1], :] * w[:, i] for i in range(k))
+    xp = jnp.concatenate([pad, x], axis=1)  # [B, S+K-1, C]
+    y = sum(xp[:, i : i + x.shape[1], :] * w[:, i] for i in range(k))
     y = y + b
-    new_state = xp[:, x.shape[1]:, :] if k > 1 else pad
+    new_state = xp[:, x.shape[1] :, :] if k > 1 else pad
     return y, new_state
 
 
@@ -81,17 +85,14 @@ def mamba_init(key, cfg: ModelConfig):
     di = s.expand * d
     dtr = s.dt_rank or -(-d // 16)
     ks = jax.random.split(key, 6)
-    a = jnp.broadcast_to(jnp.arange(1, s.d_state + 1, dtype=F32),
-                         (di, s.d_state))
+    a = jnp.broadcast_to(jnp.arange(1, s.d_state + 1, dtype=F32), (di, s.d_state))
     return {
         "in_proj": dense_init(ks[0], d, 2 * di, dtype),
-        "conv_w": truncated_normal(ks[1], (di, s.d_conv), s.d_conv ** -0.5,
-                                   dtype),
+        "conv_w": truncated_normal(ks[1], (di, s.d_conv), s.d_conv**-0.5, dtype),
         "conv_b": jnp.zeros((di,), dtype),
         "x_proj": dense_init(ks[2], di, dtr + 2 * s.d_state, dtype),
-        "dt_proj": dense_init(ks[3], dtr, di, dtype, bias=True,
-                              scale=dtr ** -0.5),
-        "a_log": jnp.log(a),                              # f32 [di, N]
+        "dt_proj": dense_init(ks[3], dtr, di, dtype, bias=True, scale=dtr**-0.5),
+        "a_log": jnp.log(a),  # f32 [di, N]
         "d_skip": jnp.ones((di,), F32),
         "out_proj": dense_init(ks[4], di, d, dtype),
     }
@@ -119,6 +120,7 @@ def _selective_scan_chunked(dt, b_seq, c_seq, xf, a, chunk: int, wsc=None):
     chunk = _best_chunk(s_len, chunk)
     nc = s_len // chunk
     import os
+
     if wsc is None or os.environ.get("REPRO_NO_SCAN_WSC"):
         wsc = lambda x, ch_dim=-1: x
 
@@ -127,26 +129,38 @@ def _selective_scan_chunked(dt, b_seq, c_seq, xf, a, chunk: int, wsc=None):
 
     @jax.checkpoint
     def chunk_body(h0, inp):
-        dt_k, b_k, c_k, x_k = inp                         # [B,chunk,...]
-        da_k = wsc(jnp.exp(dt_k[..., None] * a), 2)       # [B,chunk,di,N]
+        dt_k, b_k, c_k, x_k = inp  # [B,chunk,...]
+        da_k = wsc(jnp.exp(dt_k[..., None] * a), 2)  # [B,chunk,di,N]
         dbx_k = wsc((dt_k * x_k)[..., None] * b_k[:, :, None, :], 2)
+
         def op(l, r):
             al, bl = l
             ar, br = r
             return al * ar, bl * ar + br
+
         a_cum, b_cum = jax.lax.associative_scan(op, (da_k, dbx_k), axis=1)
-        h = wsc(a_cum * h0[:, None] + b_cum, 2)           # [B,chunk,di,N]
+        h = wsc(a_cum * h0[:, None] + b_cum, 2)  # [B,chunk,di,N]
         y = wsc(jnp.einsum("bsdn,bsn->bsd", h, c_k))
         return wsc(h[:, -1], 1), y
 
     h0 = jnp.zeros((b, di, n), F32)
     h_last, ys = jax.lax.scan(
-        chunk_body, h0, (to_c(dt), to_c(b_seq), to_c(c_seq), to_c(xf)))
+        chunk_body, h0, (to_c(dt), to_c(b_seq), to_c(c_seq), to_c(xf))
+    )
     return jnp.moveaxis(ys, 0, 1).reshape(b, s_len, di), h_last
 
 
-def mamba_apply(cfg: ModelConfig, p, u, *, mode: str, state=None, mesh=None,
-                batch_axes=("data",), tp: bool = True):
+def mamba_apply(
+    cfg: ModelConfig,
+    p,
+    u,
+    *,
+    mode: str,
+    state=None,
+    mesh=None,
+    batch_axes=("data",),
+    tp: bool = True,
+):
     """u [B,S,D] -> (y [B,S,D], new_state or None)."""
     s_cfg = cfg.ssm
     b, s_len, d = u.shape
@@ -161,21 +175,21 @@ def mamba_apply(cfg: ModelConfig, p, u, *, mode: str, state=None, mesh=None,
     x = wsc(jax.nn.silu(x))
 
     xdb = dense_apply(p["x_proj"], x)
-    dt = wsc(jax.nn.softplus(dense_apply(p["dt_proj"], xdb[..., :dtr])
-                             .astype(F32)))               # [B,S,di]
-    b_ssm = xdb[..., dtr:dtr + s_cfg.d_state].astype(F32)
-    c_ssm = xdb[..., dtr + s_cfg.d_state:].astype(F32)
-    a = -jnp.exp(p["a_log"])                              # [di, N]
+    # dt [B,S,di]
+    dt = wsc(jax.nn.softplus(dense_apply(p["dt_proj"], xdb[..., :dtr]).astype(F32)))
+    b_ssm = xdb[..., dtr : dtr + s_cfg.d_state].astype(F32)
+    c_ssm = xdb[..., dtr + s_cfg.d_state :].astype(F32)
+    a = -jnp.exp(p["a_log"])  # [di, N]
     xf = x.astype(F32)
 
     if mode in ("train", "prefill"):
-        y, h_last = _selective_scan_chunked(dt, b_ssm, c_ssm, xf, a,
-                                            s_cfg.chunk, wsc=wsc)
-        new_state = ({"conv": new_conv, "ssm": h_last}
-                     if mode == "prefill" else None)
+        y, h_last = _selective_scan_chunked(
+            dt, b_ssm, c_ssm, xf, a, s_cfg.chunk, wsc=wsc
+        )
+        new_state = {"conv": new_conv, "ssm": h_last} if mode == "prefill" else None
     else:
-        h = state["ssm"]                                  # [B,di,N]
-        da1 = jnp.exp(dt[:, 0, :, None] * a)              # [B,di,N]
+        h = state["ssm"]  # [B,di,N]
+        da1 = jnp.exp(dt[:, 0, :, None] * a)  # [B,di,N]
         dbx1 = (dt[:, 0] * xf[:, 0])[..., None] * b_ssm[:, 0, None, :]
         h = da1 * h + dbx1
         y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0])[:, None]
@@ -197,13 +211,14 @@ def mlstm_init(key, cfg: ModelConfig):
     ks = jax.random.split(key, 7)
     return {
         "in_proj": dense_init(ks[0], d, 2 * di, dtype),
-        "conv_w": truncated_normal(ks[1], (di, x_cfg.conv_width),
-                                   x_cfg.conv_width ** -0.5, dtype),
+        "conv_w": truncated_normal(
+            ks[1], (di, x_cfg.conv_width), x_cfg.conv_width**-0.5, dtype
+        ),
         "conv_b": jnp.zeros((di,), dtype),
         "wq": dense_init(ks[2], di, di, dtype),
         "wk": dense_init(ks[3], di, di, dtype),
         "wv": dense_init(ks[4], di, di, dtype),
-        "w_if": dense_init(ks[5], di, 2 * h, dtype),      # i and f pre-acts
+        "w_if": dense_init(ks[5], di, 2 * h, dtype),  # i and f pre-acts
         "out_proj": dense_init(ks[6], di, d, dtype),
     }
 
@@ -223,12 +238,14 @@ def mlstm_state_init(cfg: ModelConfig, batch: int, dtype):
 
 def _mlstm_step(carry, inp):
     c, n, m = carry
-    q, k, v, log_i, log_f = inp                           # q/k/v [B,H,dh]
+    q, k, v, log_i, log_f = inp  # q/k/v [B,H,dh]
     m_new = jnp.maximum(log_f + m, log_i)
     i_p = jnp.exp(log_i - m_new)
     f_p = jnp.exp(log_f + m - m_new)
+    # c [B,H,dk,dv]
     c = f_p[..., None, None] * c + i_p[..., None, None] * (
-        k[..., :, None] * v[..., None, :])                # [B,H,dk,dv]
+        k[..., :, None] * v[..., None, :]
+    )
     n = f_p[..., None] * n + i_p[..., None] * k
     num = jnp.einsum("bhkv,bhk->bhv", c, q)
     den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, q)), 1.0)
@@ -236,8 +253,17 @@ def _mlstm_step(carry, inp):
     return (c, n, m_new), hout
 
 
-def mlstm_apply(cfg: ModelConfig, p, u, *, mode: str, state=None, mesh=None,
-                batch_axes=("data",), tp: bool = True):
+def mlstm_apply(
+    cfg: ModelConfig,
+    p,
+    u,
+    *,
+    mode: str,
+    state=None,
+    mesh=None,
+    batch_axes=("data",),
+    tp: bool = True,
+):
     x_cfg = cfg.xlstm
     b, s_len, d = u.shape
     di = int(x_cfg.mlstm_proj_factor * d)
@@ -252,34 +278,37 @@ def mlstm_apply(cfg: ModelConfig, p, u, *, mode: str, state=None, mesh=None,
     xc = jax.nn.silu(xc)
 
     q = dense_apply(p["wq"], xc).reshape(b, s_len, h, dh).astype(F32)
-    k = (dense_apply(p["wk"], xc).reshape(b, s_len, h, dh).astype(F32)
-         * dh ** -0.5)
+    k = dense_apply(p["wk"], xc).reshape(b, s_len, h, dh).astype(F32) * dh**-0.5
     v = dense_apply(p["wv"], x).reshape(b, s_len, h, dh).astype(F32)
-    if_pre = dense_apply(p["w_if"], xc).astype(F32)       # [B,S,2H]
+    if_pre = dense_apply(p["w_if"], xc).astype(F32)  # [B,S,2H]
     log_i = if_pre[..., :h]
     log_f = jax.nn.log_sigmoid(if_pre[..., h:])
 
     if mode in ("train", "prefill"):
         chunk = _best_chunk(s_len, x_cfg.chunk)
         nc = s_len // chunk
-        def to_chunks(t):                                 # [B,S,...]->[nc,chunk,B,...]
-            t = jnp.moveaxis(t, 1, 0).reshape(nc, chunk, *t.shape[:1],
-                                              *t.shape[2:])
+
+        def to_chunks(t):  # [B,S,...] -> [nc,chunk,B,...]
+            t = jnp.moveaxis(t, 1, 0).reshape(nc, chunk, *t.shape[:1], *t.shape[2:])
             return t
-        seq = (to_chunks(q), to_chunks(k), to_chunks(v), to_chunks(log_i),
-               to_chunks(log_f))
+
+        seq = tuple(to_chunks(t) for t in (q, k, v, log_i, log_f))
 
         @jax.checkpoint
         def chunk_body(carry, inp):
             carry, ys = jax.lax.scan(_mlstm_step, carry, inp)
-            return carry, ys                              # ys [chunk,B,H,dh]
+            return carry, ys  # ys [chunk,B,H,dh]
 
-        c0 = (jnp.zeros((b, h, dh, dh), F32), jnp.zeros((b, h, dh), F32),
-              jnp.full((b, h), -1e30, F32))
+        c0 = (
+            jnp.zeros((b, h, dh, dh), F32),
+            jnp.zeros((b, h, dh), F32),
+            jnp.full((b, h), -1e30, F32),
+        )
         (cf, nf, mf), ys = jax.lax.scan(chunk_body, c0, seq)
         y = jnp.moveaxis(ys.reshape(s_len, b, h, dh), 0, 1)
-        new_state = ({"conv": new_conv, "c": cf, "n": nf, "m": mf}
-                     if mode == "prefill" else None)
+        new_state = None
+        if mode == "prefill":
+            new_state = {"conv": new_conv, "c": cf, "n": nf, "m": mf}
     else:
         carry = (state["c"], state["n"], state["m"])
         inp = (q[:, 0], k[:, 0], v[:, 0], log_i[:, 0], log_f[:, 0])
@@ -305,7 +334,7 @@ def slstm_init(key, cfg: ModelConfig):
         # input weights for (z, i, f, o) stacked: [D, 4D]
         "w_x": dense_init(ks[0], d, 4 * d, dtype, bias=True),
         # block-diagonal recurrent weights per head: [4, H, dh, dh]
-        "r_h": truncated_normal(ks[1], (4, h, dh, dh), dh ** -0.5, dtype),
+        "r_h": truncated_normal(ks[1], (4, h, dh, dh), dh**-0.5, dtype),
         "ffn_up": dense_init(ks[2], d, 2 * dff, dtype),
         "ffn_down": dense_init(ks[3], dff, d, dtype),
     }
@@ -327,7 +356,7 @@ def _slstm_step(p, carry, x_pre):
     """x_pre [B,4,H,dh] (input pre-activations); carry (h,c,n,m)."""
     hprev, c, n, m = carry
     rh = p["r_h"].astype(F32)
-    rec = jnp.einsum("bhd,ghde->bghe", hprev, rh)         # [B,4,H,dh]
+    rec = jnp.einsum("bhd,ghde->bghe", hprev, rh)  # [B,4,H,dh]
     pre = x_pre + rec
     z = jnp.tanh(pre[:, 0])
     log_i = pre[:, 1]
@@ -342,16 +371,29 @@ def _slstm_step(p, carry, x_pre):
     return (h_new, c_new, n_new, m_new), h_new
 
 
-def slstm_apply(cfg: ModelConfig, p, u, *, mode: str, state=None, mesh=None,
-                batch_axes=("data",), tp: bool = True):
+def slstm_apply(
+    cfg: ModelConfig,
+    p,
+    u,
+    *,
+    mode: str,
+    state=None,
+    mesh=None,
+    batch_axes=("data",),
+    tp: bool = True,
+):
     b, s_len, d = u.shape
     h = cfg.n_heads
     dh = d // h
     x_pre = dense_apply(p["w_x"], u).astype(F32).reshape(b, s_len, 4, h, dh)
 
     if state is None:
-        carry = (jnp.zeros((b, h, dh), F32), jnp.zeros((b, h, dh), F32),
-                 jnp.ones((b, h, dh), F32), jnp.zeros((b, h, dh), F32))
+        carry = (
+            jnp.zeros((b, h, dh), F32),
+            jnp.zeros((b, h, dh), F32),
+            jnp.ones((b, h, dh), F32),
+            jnp.zeros((b, h, dh), F32),
+        )
     else:
         carry = (state["h"], state["c"], state["n"], state["m"])
 
@@ -359,13 +401,13 @@ def slstm_apply(cfg: ModelConfig, p, u, *, mode: str, state=None, mesh=None,
         step = lambda c, xp: _slstm_step(p, c, xp)
         carry, ys = jax.lax.scan(step, carry, jnp.moveaxis(x_pre, 1, 0))
         y = jnp.moveaxis(ys, 0, 1).reshape(b, s_len, d)
-        new_state = ({"h": carry[0], "c": carry[1], "n": carry[2],
-                      "m": carry[3]} if mode == "prefill" else None)
+        new_state = None
+        if mode == "prefill":
+            new_state = {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
     else:
         carry, y = _slstm_step(p, carry, x_pre[:, 0])
         y = y.reshape(b, 1, d)
-        new_state = {"h": carry[0], "c": carry[1], "n": carry[2],
-                     "m": carry[3]}
+        new_state = {"h": carry[0], "c": carry[1], "n": carry[2], "m": carry[3]}
     y = y.astype(u.dtype)
     # post gated FFN (xLSTM block structure)
     up = dense_apply(p["ffn_up"], y)

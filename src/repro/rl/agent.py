@@ -1,6 +1,7 @@
 """DQN agent: epsilon-greedy exploration, target network, fused TD loss,
 and the ADFLL round API (collect -> train on mixed replay -> share ERB).
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -27,24 +28,28 @@ def make_dqn_steps(cfg: DQNConfig, *, use_pallas: bool = False):
     def q_values(params, obs, loc):
         return dqn_apply(cfg, params, obs, loc)
 
-    opt_cfg = AdamWConfig(lr=cfg.lr, weight_decay=0.0, clip_norm=10.0,
-                          warmup_steps=0, total_steps=10 ** 9)
+    opt_cfg = AdamWConfig(
+        lr=cfg.lr, weight_decay=0.0, clip_norm=10.0, warmup_steps=0, total_steps=10**9
+    )
 
     def loss_fn(params, target_params, batch):
         q = dqn_apply(cfg, params, batch["obs"], batch["loc"])
         q_sel = jnp.take_along_axis(q, batch["action"][:, None], 1)
-        q_next = dqn_apply(cfg, target_params, batch["next_obs"],
-                           batch["next_loc"])
+        q_next = dqn_apply(cfg, target_params, batch["next_obs"], batch["next_loc"])
         q_next = jax.lax.stop_gradient(q_next)
-        return td_loss(q_sel, q_next, batch["reward"][:, None],
-                       batch["done"][:, None], cfg.gamma, use_pallas)
+        return td_loss(
+            q_sel,
+            q_next,
+            batch["reward"][:, None],
+            batch["done"][:, None],
+            cfg.gamma,
+            use_pallas,
+        )
 
     @jax.jit
     def train_fn(params, target_params, opt_state, batch):
-        loss, grads = jax.value_and_grad(loss_fn)(params, target_params,
-                                                  batch)
-        params, opt_state, _ = adamw_update(opt_cfg, params, grads,
-                                            opt_state)
+        loss, grads = jax.value_and_grad(loss_fn)(params, target_params, batch)
+        params, opt_state, _ = adamw_update(opt_cfg, params, grads, opt_state)
         return params, opt_state, loss
 
     return q_values, train_fn, opt_cfg
@@ -53,10 +58,11 @@ def make_dqn_steps(cfg: DQNConfig, *, use_pallas: bool = False):
 @dataclass
 class DQNAgent:
     """One ADFLL participant (also used standalone for Agents X/Y/M)."""
+
     agent_id: int
     cfg: DQNConfig
     seed: int = 0
-    speed: float = 1.0            # relative hardware speed (sim time)
+    speed: float = 1.0  # relative hardware speed (sim time)
     use_pallas: bool = False
 
     def __post_init__(self):
@@ -64,10 +70,10 @@ class DQNAgent:
         self.params = dqn_init(key, self.cfg)
         self.target_params = self.params
         self.q_values, self.train_fn, opt_cfg = make_dqn_steps(
-            self.cfg, use_pallas=self.use_pallas)
+            self.cfg, use_pallas=self.use_pallas
+        )
         self.opt_state = adamw_init(opt_cfg, self.params)
-        self.rng = np.random.default_rng(
-            abs(self.seed + 1000 * self.agent_id))
+        self.rng = np.random.default_rng(abs(self.seed + 1000 * self.agent_id))
         self.step_count = 0
         self.personal_erbs: List[ERB] = []
         self.seen_erb_ids: set = set()
@@ -81,10 +87,10 @@ class DQNAgent:
         frac = min(1.0, self.step_count / max(1, c.eps_decay_steps))
         return c.eps_start + frac * (c.eps_end - c.eps_start)
 
-    def act(self, env: LandmarkEnv, locs: np.ndarray, eps: float
-            ) -> np.ndarray:
-        q = np.asarray(self.q_values(self.params, env.observe(locs),
-                                     env.norm_loc(locs)))
+    def act(self, env: LandmarkEnv, locs: np.ndarray, eps: float) -> np.ndarray:
+        q = np.asarray(
+            self.q_values(self.params, env.observe(locs), env.norm_loc(locs))
+        )
         greedy = q.argmax(-1)
         rand = self.rng.integers(0, self.cfg.n_actions, size=len(locs))
         coin = self.rng.random(len(locs)) < eps
@@ -117,16 +123,22 @@ class DQNAgent:
         return erb
 
     # -- learning ------------------------------------------------------------
-    def train_steps(self, n_steps: int, current: Optional[ERB],
-                    incoming: Sequence[ERB] = ()) -> float:
+    def train_steps(
+        self, n_steps: int, current: Optional[ERB], incoming: Sequence[ERB] = ()
+    ) -> float:
         last = 0.0
         for _ in range(n_steps):
             batch = self.sampler.sample(
-                self.rng, self.cfg.batch_size, current,
-                personal=self.personal_erbs, incoming=incoming)
+                self.rng,
+                self.cfg.batch_size,
+                current,
+                personal=self.personal_erbs,
+                incoming=incoming,
+            )
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             self.params, self.opt_state, loss = self.train_fn(
-                self.params, self.target_params, self.opt_state, batch)
+                self.params, self.target_params, self.opt_state, batch
+            )
             self.step_count += 1
             if self.step_count % self.cfg.target_update == 0:
                 self.target_params = self.params
@@ -137,13 +149,15 @@ class DQNAgent:
     def snapshot_params(self, sim_time: float = 0.0) -> WeightSnapshot:
         """Package current params for the weight plane (marked seen so the
         agent never pulls its own snapshot back)."""
-        snap = WeightSnapshot(new_snap_id(), self.agent_id,
-                              self.rounds_done, sim_time, self.params)
+        snap = WeightSnapshot(
+            new_snap_id(), self.agent_id, self.rounds_done, sim_time, self.params
+        )
         self.seen_snap_ids.add(snap.snap_id)
         return snap
 
-    def mix_params(self, incoming: Sequence[WeightSnapshot],
-                   alphas: Sequence[float]) -> int:
+    def mix_params(
+        self, incoming: Sequence[WeightSnapshot], alphas: Sequence[float]
+    ) -> int:
         """Fold peer snapshots into our params with staleness-discounted
         rates: ``p <- (1-a_k) p + a_k w_k`` (stalest first). Compressed
         snapshots (``CompressedWeightSnapshot``) are transparent here:
@@ -155,43 +169,58 @@ class DQNAgent:
             self.seen_snap_ids.add(s.snap_id)
         if not snaps:
             return 0
-        alphas = [a for s, a in zip(incoming, alphas, strict=True)
-                  if s.agent_id != self.agent_id]
+        alphas = [
+            a
+            for s, a in zip(incoming, alphas, strict=True)
+            if s.agent_id != self.agent_id
+        ]
         self.params = mix_params(self.params, snaps, alphas)
         return len(snaps)
 
     # -- ADFLL round (paper A.3) ----------------------------------------------
-    def train_round(self, env: LandmarkEnv, task: TaskTag,
-                    incoming: Sequence[ERB], *, erb_capacity: int,
-                    share_size: int, train_steps: int,
-                    collect_episodes: int = 24,
-                    share_strategy: str = "uniform") -> Tuple[ERB, float]:
+    def train_round(
+        self,
+        env: LandmarkEnv,
+        task: TaskTag,
+        incoming: Sequence[ERB],
+        *,
+        erb_capacity: int,
+        share_size: int,
+        train_steps: int,
+        collect_episodes: int = 24,
+        share_strategy: str = "uniform",
+    ) -> Tuple[ERB, float]:
         """Collect on the round's task, then train on
         current + personal + incoming replay. Returns (shared ERB, loss)."""
-        current = erb_init(erb_capacity, self.cfg.box_size, task=task,
-                           source_agent=self.agent_id,
-                           round_idx=self.rounds_done)
+        current = erb_init(
+            erb_capacity,
+            self.cfg.box_size,
+            task=task,
+            source_agent=self.agent_id,
+            round_idx=self.rounds_done,
+        )
         self.collect(env, current, collect_episodes)
         for e in incoming:
             self.seen_erb_ids.add(e.meta.erb_id)
         loss = self.train_steps(train_steps, current, incoming)
         self.personal_erbs.append(current)
         self.rounds_done += 1
-        shared = erb_share_slice(current, share_size, self.rng,
-                                 strategy=share_strategy)
+        shared = erb_share_slice(current, share_size, self.rng, strategy=share_strategy)
         shared.meta = shared.meta  # provenance kept
         self.seen_erb_ids.add(shared.meta.erb_id)
         return shared, loss
 
     # -- evaluation ------------------------------------------------------------
-    def evaluate(self, env: LandmarkEnv, n_episodes: int = 8,
-                 max_steps: Optional[int] = None) -> float:
+    def evaluate(
+        self, env: LandmarkEnv, n_episodes: int = 8, max_steps: Optional[int] = None
+    ) -> float:
         """Greedy rollout from deterministic starts; mean final distance."""
         rng = np.random.default_rng(1234)
         locs = env.start_locs(n_episodes, rng)
         for _ in range(max_steps or self.cfg.max_episode_steps):
-            q = np.asarray(self.q_values(self.params, env.observe(locs),
-                                         env.norm_loc(locs)))
+            q = np.asarray(
+                self.q_values(self.params, env.observe(locs), env.norm_loc(locs))
+            )
             locs, _, done = env.step(locs, q.argmax(-1).astype(np.int32))
             if done.all():
                 break

@@ -1,4 +1,5 @@
 """3D-CNN deep Q-network (DQN, Mnih et al. 2013 adapted to 3D volumes)."""
+
 from __future__ import annotations
 
 from typing import Dict
@@ -13,7 +14,7 @@ F32 = jnp.float32
 
 
 def _conv_init(key, cin, cout, k=3):
-    scale = (cin * k ** 3) ** -0.5
+    scale = (cin * k**3) ** -0.5
     return truncated_normal(key, (k, k, k, cin, cout), scale, F32)
 
 
@@ -22,33 +23,43 @@ def dqn_init(key, cfg: DQNConfig) -> Dict:
     p = {}
     cin = 1
     for i, cout in enumerate(cfg.conv_features):
-        p[f"conv{i}"] = {"w": _conv_init(ks[i], cin, cout),
-                         "b": jnp.zeros((cout,), F32)}
+        p[f"conv{i}"] = {
+            "w": _conv_init(ks[i], cin, cout),
+            "b": jnp.zeros((cout,), F32),
+        }
         cin = cout
     dims = list(cfg.box_size)
-    for _ in cfg.conv_features:                # stride-2 SAME convs
+    for _ in cfg.conv_features:  # stride-2 SAME convs
         dims = [-(-d // 2) for d in dims]
     flat = dims[0] * dims[1] * dims[2] * cin
     d = flat + 16
-    p["loc"] = {"w": truncated_normal(ks[5], (3, 16), 3 ** -0.5, F32),
-                "b": jnp.zeros((16,), F32)}
+    p["loc"] = {
+        "w": truncated_normal(ks[5], (3, 16), 3**-0.5, F32),
+        "b": jnp.zeros((16,), F32),
+    }
     hs = list(cfg.hidden) + [cfg.n_actions]
     for i, h in enumerate(hs):
         ki = jax.random.fold_in(ks[6], i)
-        p[f"fc{i}"] = {"w": truncated_normal(ki, (d, h), d ** -0.5, F32),
-                       "b": jnp.zeros((h,), F32)}
+        p[f"fc{i}"] = {
+            "w": truncated_normal(ki, (d, h), d**-0.5, F32),
+            "b": jnp.zeros((h,), F32),
+        }
         d = h
     return p
 
 
 def dqn_apply(cfg: DQNConfig, p: Dict, obs, loc):
     """obs [B, bx,by,bz], loc [B,3] normalized -> q [B, n_actions]."""
-    x = obs[..., None]                                    # NDHWC
+    x = obs[..., None]  # NDHWC
     for i in range(len(cfg.conv_features)):
         w, b = p[f"conv{i}"]["w"], p[f"conv{i}"]["b"]
         x = jax.lax.conv_general_dilated(
-            x, w, window_strides=(2, 2, 2), padding="SAME",
-            dimension_numbers=("NDHWC", "DHWIO", "NDHWC"))
+            x,
+            w,
+            window_strides=(2, 2, 2),
+            padding="SAME",
+            dimension_numbers=("NDHWC", "DHWIO", "NDHWC"),
+        )
         x = jax.nn.relu(x + b)
     x = x.reshape(x.shape[0], -1)
     l = jax.nn.relu(loc @ p["loc"]["w"] + p["loc"]["b"])

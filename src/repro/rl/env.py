@@ -5,6 +5,7 @@ Euclidean distance to the target landmark; episode terminates on
 proximity or step budget. Vectorized over parallel episodes (numpy host
 side; the Q-network forward is the jitted part).
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -15,14 +16,15 @@ import numpy as np
 from repro.configs.adfll_dqn import DQNConfig
 
 # actions: 0:+x 1:-x 2:+y 3:-y 4:+z 5:-z  (acting on [z,y,x] index order)
-_DELTA = np.array([[0, 0, 1], [0, 0, -1], [0, 1, 0],
-                   [0, -1, 0], [1, 0, 0], [-1, 0, 0]], np.int32)
+_DELTA = np.array(
+    [[0, 0, 1], [0, 0, -1], [0, 1, 0], [0, -1, 0], [1, 0, 0], [-1, 0, 0]], np.int32
+)
 
 
 @dataclass
 class LandmarkEnv:
-    volume: np.ndarray            # [n,n,n] f32
-    landmark: np.ndarray          # [3] float (zyx)
+    volume: np.ndarray  # [n,n,n] f32
+    landmark: np.ndarray  # [3] float (zyx)
     cfg: DQNConfig
 
     @property
@@ -40,22 +42,22 @@ class LandmarkEnv:
         out = np.empty((b, bx, by, bz), np.float32)
         for i in range(b):
             c = locs[i] + pad - half
-            out[i] = vol[c[0]:c[0] + bx, c[1]:c[1] + by, c[2]:c[2] + bz]
+            out[i] = vol[c[0] : c[0] + bx, c[1] : c[1] + by, c[2] : c[2] + bz]
         return out
 
     def norm_loc(self, locs: np.ndarray) -> np.ndarray:
         return locs.astype(np.float32) / (self.n - 1)
 
     def dist(self, locs: np.ndarray) -> np.ndarray:
-        return np.linalg.norm(locs.astype(np.float32) - self.landmark,
-                              axis=-1)
+        return np.linalg.norm(locs.astype(np.float32) - self.landmark, axis=-1)
 
     def start_locs(self, batch: int, rng: np.random.Generator) -> np.ndarray:
         lo, hi = self.n // 4, 3 * self.n // 4
         return rng.integers(lo, hi, size=(batch, 3)).astype(np.int32)
 
-    def step(self, locs: np.ndarray, actions: np.ndarray
-             ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def step(
+        self, locs: np.ndarray, actions: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """-> (new_locs, reward, done)."""
         step = self.cfg.step_size
         new = np.clip(locs + step * _DELTA[actions], 0, self.n - 1)

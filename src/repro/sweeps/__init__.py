@@ -1,0 +1,52 @@
+"""Multi-seed sweep grids over the scenario registry.
+
+One frozen :class:`SweepSpec` (scenario × seeds × overrides) expands
+into a deterministic grid of derived
+:class:`~repro.experiments.spec.ScenarioSpec` cells; a process-pool
+executor runs the missing cells (resuming from the on-disk JSONL
+:class:`ReportStore`), and the aggregation layer folds per-seed reports
+into mean ± 95% CI summaries with paired t-test / permutation-test
+significance between variants:
+
+    from repro import sweeps
+    summary = sweeps.run_sweep(sweeps.get_sweep("ci_smoke"), fast=True)
+
+or from the shell:
+
+    python -m repro.sweeps --list
+    python -m repro.sweeps --sweep paper_table1_sweep --fast --json out.json
+    python -m repro.sweeps --compare old.json new.json
+"""
+
+from repro.sweeps.aggregate import (  # noqa: F401
+    GATE_METRICS,
+    compare,
+    forgetting_of,
+    summarize,
+)
+from repro.sweeps.executor import (  # noqa: F401
+    default_workers,
+    failed_cells,
+    run_sweep,
+)
+from repro.sweeps.registry import (  # noqa: F401
+    get_sweep,
+    list_sweeps,
+    register_sweep,
+)
+from repro.sweeps.spec import (  # noqa: F401
+    DEFAULT_METRICS,
+    SweepCell,
+    SweepSpec,
+    SweepVariant,
+    apply_overrides,
+    spec_hash,
+)
+from repro.sweeps.stats import (  # noqa: F401
+    mean_ci,
+    paired_permutation_test,
+    paired_ttest,
+    t_crit,
+    t_sf,
+)
+from repro.sweeps.store import ReportStore  # noqa: F401

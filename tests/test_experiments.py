@@ -10,7 +10,7 @@ import pytest
 from repro import experiments
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
 from repro.core.erb import TaskTag, erb_init
-from repro.core.experiment import ChurnEvent, ExperimentHooks
+from repro.core.experiment import ChurnEvent, ExperimentHooks, HubFailure
 from repro.core.federated import ADFLLSystem, CentralAggregationSystem
 from repro.core.gossip import LinkModel, SiteLinks
 from repro.core.hub import Hub
@@ -388,6 +388,92 @@ def test_gossip_hetero_scenario_runs_and_prices_cross_site_traffic():
     assert np.isfinite(report.mean_dist_err)
     assert report.extra["gossip"]["delivered"] > 0
     assert report.total_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# hub failures (Table 2)
+# ---------------------------------------------------------------------------
+def test_registry_has_the_table2_hub_failure_scenarios():
+    for name in (
+        "paper_table2_hub_failure",
+        "paper_table2_total_failure",
+        "paper_table2_hybrid_failover",
+    ):
+        spec = experiments.get_scenario(name)
+        assert spec.hub_failures and all(e.at > 0 for e in spec.hub_failures)
+    hybrid = experiments.get_scenario("paper_table2_hybrid_failover")
+    assert hybrid.sys.topology == "hybrid"
+    # failover kills every hub
+    assert {e.hub_id for e in hybrid.hub_failures} == set(
+        range(hybrid.sys.n_hubs)
+    )
+
+
+def test_hub_failure_schedule_fires_probes_and_rehomes():
+    two_hubs = dataclasses.replace(TINY_SYS, n_hubs=2, agent_hub=(0, 1))
+    spec = _tiny_spec(
+        sys=two_hubs,
+        hub_failures=(HubFailure(at=0.7, hub_id=1),),
+    )
+
+    class Obs(ExperimentHooks):
+        def __init__(self):
+            self.events = []
+
+        def on_hub_failure(self, system, event, orphaned, t):
+            self.events.append((event.hub_id, tuple(orphaned), t))
+
+    obs = Obs()
+    report = experiments.run(spec, seed=3, hooks=(obs,))
+    assert obs.events == [(1, (1,), 0.7)]  # agent 1 orphaned at t=0.7
+    assert np.isfinite(report.mean_dist_err)
+    # a probe fired at the failure time, before the final evaluation
+    assert report.eval_curve[0].t == pytest.approx(0.7)
+    assert report.eval_curve[0].n_agents == 2
+
+
+def test_total_hub_failure_is_survivable_in_pure_hub_topology():
+    spec = _tiny_spec(
+        hub_failures=(HubFailure(at=0.7, hub_id=0),),  # TINY_SYS has one hub
+        eval_at_churn=False,
+    )
+    report = experiments.run(spec, seed=3)
+    # orphaned agents finish their rounds on local data alone
+    assert np.isfinite(report.mean_dist_err)
+    assert report.n_rounds >= 4
+
+
+def test_hub_failure_determinism_and_gossip_rejection():
+    spec = _tiny_spec(hub_failures=(HubFailure(at=0.7, hub_id=0),))
+    r1 = experiments.run(spec, seed=5)
+    r2 = experiments.run(spec, seed=5)
+    assert [
+        (r.agent_id, r.task, round(r.end, 9)) for r in r1.history
+    ] == [(r.agent_id, r.task, round(r.end, 9)) for r in r2.history]
+    with pytest.raises(ValueError, match="no hubs"):
+        _tiny_spec(
+            sys=dataclasses.replace(TINY_SYS, topology="gossip"),
+            hub_failures=(HubFailure(at=0.7, hub_id=0),),
+        )
+    with pytest.raises(ValueError):
+        HubFailure(at=0.5, hub_id=-1)
+
+
+def test_orphaned_agents_cannot_push_or_pull_via_dead_hubs():
+    net = Network(hubs=[Hub(0)], rng=np.random.default_rng(0))
+    net.attach_agent(0, 0)
+    assert net.agent_push(0, _erb(seed=0))
+    assert net.fail_hub(0) == [0]
+    assert 0 not in net.agent_hub  # no survivor to re-home to
+    res = net.agent_push(0, _erb(seed=1))
+    assert not res and res.nbytes == 0
+    assert net.agent_pull(0, set()) == []
+    assert net.n_dropped >= 1
+    # a joiner after total failure stays detached instead of crashing
+    # (churn "add" events can follow a total hub failure in a scenario)
+    net.attach_agent(1)
+    assert 1 not in net.agent_hub
+    assert not net.agent_push(1, _erb(seed=2))
 
 
 # ---------------------------------------------------------------------------
