@@ -21,8 +21,12 @@ Two input shapes are understood:
 Configs present only in the current run (newly added benchmarks) pass;
 configs missing from the current run fail.
 
+``--metric`` selects the gated metric (default ``mean_dist_err``) and
+``--higher-better`` flips the direction — throughput benchmarks gate a
+speedup ratio, where a *drop* is the regression:
+
     python -m benchmarks.check_regression BASELINE CURRENT \
-        [--tol 0.2] [--abs-floor 0.75]
+        [--tol 0.2] [--abs-floor 0.75] [--metric NAME] [--higher-better]
 
 Exit code 0 = within tolerance, 1 = regression (or malformed input).
 """
@@ -37,7 +41,7 @@ import sys
 METRIC = "mean_dist_err"
 
 
-def _as_configs(data: dict) -> dict:
+def _as_configs(data: dict, metric: str) -> dict:
     """Normalize either input shape to name -> {mean, ci95}.
 
     ``ci95`` is None for point runs and for single-seed sweeps (n < 2
@@ -45,11 +49,11 @@ def _as_configs(data: dict) -> dict:
     if "variants" in data:
         out = {}
         for name, v in data["variants"].items():
-            st = (v.get("metrics") or {}).get(METRIC) or {}
+            st = (v.get("metrics") or {}).get(metric) or {}
             out[name] = {"mean": st.get("mean"), "ci95": st.get("ci95")}
         return out
     return {
-        name: {"mean": cfg.get(METRIC), "ci95": None}
+        name: {"mean": cfg.get(metric), "ci95": None}
         for name, cfg in data.get("configs", {}).items()
     }
 
@@ -61,11 +65,19 @@ def _ci(x) -> float:
     return float(x)
 
 
-def compare(baseline: dict, current: dict, *, tol: float, abs_floor: float) -> list:
+def compare(
+    baseline: dict,
+    current: dict,
+    *,
+    tol: float,
+    abs_floor: float,
+    metric: str = METRIC,
+    higher_better: bool = False,
+) -> list:
     """Returns a list of human-readable failure strings (empty = pass)."""
     failures = []
-    base_cfgs = _as_configs(baseline)
-    cur_cfgs = _as_configs(current)
+    base_cfgs = _as_configs(baseline, metric)
+    cur_cfgs = _as_configs(current, metric)
     if not base_cfgs:
         return ["baseline has no configs — malformed file?"]
     for name, base in sorted(base_cfgs.items()):
@@ -74,20 +86,27 @@ def compare(baseline: dict, current: dict, *, tol: float, abs_floor: float) -> l
             continue
         b, c = base["mean"], cur_cfgs[name]["mean"]
         if b is None or c is None:
-            failures.append(f"{name}: {METRIC} missing")
+            failures.append(f"{name}: {metric} missing")
             continue
-        worse = c > b * (1.0 + tol) and c > b + abs_floor
+        if higher_better:
+            worse = c < b * (1.0 - tol) and c < b - abs_floor
+        else:
+            worse = c > b * (1.0 + tol) and c > b + abs_floor
         b_ci, c_ci = _ci(base["ci95"]), _ci(cur_cfgs[name]["ci95"])
-        separated = (c - c_ci) > (b + b_ci)
+        if higher_better:
+            separated = (c + c_ci) < (b - b_ci)
+        else:
+            separated = (c - c_ci) > (b + b_ci)
         if worse and separated:
+            direction = "below" if higher_better else "worse"
             failures.append(
-                f"{name}: {METRIC} {c:.3f}±{c_ci:.3f} vs baseline "
-                f"{b:.3f}±{b_ci:.3f} (>{tol:.0%} worse, >+{abs_floor} "
-                f"absolute, CIs separated)"
+                f"{name}: {metric} {c:.3f}±{c_ci:.3f} vs baseline "
+                f"{b:.3f}±{b_ci:.3f} (>{tol:.0%} {direction}, "
+                f">{abs_floor} absolute, CIs separated)"
             )
         else:
             note = " (within CI overlap)" if worse else ""
-            print(f"ok {name}: {METRIC} {c:.3f} (baseline {b:.3f}){note}")
+            print(f"ok {name}: {metric} {c:.3f} (baseline {b:.3f}){note}")
     return failures
 
 
@@ -107,12 +126,29 @@ def main(argv=None) -> int:
         default=0.75,
         help="regressions below this absolute delta never fail",
     )
+    ap.add_argument(
+        "--metric",
+        default=METRIC,
+        help="metric key to gate (default: mean_dist_err)",
+    )
+    ap.add_argument(
+        "--higher-better",
+        action="store_true",
+        help="gate a metric where a drop is the regression (e.g. speedup)",
+    )
     args = ap.parse_args(argv)
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.current) as f:
         current = json.load(f)
-    failures = compare(baseline, current, tol=args.tol, abs_floor=args.abs_floor)
+    failures = compare(
+        baseline,
+        current,
+        tol=args.tol,
+        abs_floor=args.abs_floor,
+        metric=args.metric,
+        higher_better=args.higher_better,
+    )
     for msg in failures:
         print(f"REGRESSION {msg}", file=sys.stderr)
     return 1 if failures else 0

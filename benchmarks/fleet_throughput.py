@@ -1,0 +1,159 @@
+"""Fleet-engine throughput: one scan-fused vmapped dispatch per flush vs
+the legacy per-agent path (one dispatch + one blocking host sync per
+training step).
+
+Each row sizes a fleet of N same-config agents, fills one replay buffer
+per agent, and trains every agent for K steps per round:
+
+* ``stepwise`` — the pre-fleet execution model: per-step host batch
+  materialization, one ``train_fn`` dispatch per step, ``float(loss)``
+  sync after every update (N x K dispatches per round).
+* ``fleet`` — all N rounds submitted as jobs and flushed as one
+  compiled program: host-side index *planning* only, device-resident
+  ERB pools, batch materialization through the ``replay_gather`` Pallas
+  kernel inside the scan (1 dispatch per round of N x K updates).
+
+Reported per N: steps/sec of both paths, wall time per round, and the
+speedup ratio (the CI-gated metric — machine-speed independent, unlike
+raw steps/sec):
+
+    PYTHONPATH=src python -m benchmarks.fleet_throughput [--fast] [--json OUT]
+
+Gated in CI via ``check_regression --metric speedup --higher-better``
+against ``benchmarks/baselines/BENCH_fleet.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+import repro.core  # noqa: F401  (resolve the core<->rl import cycle first)
+from repro.configs.adfll_dqn import DQNConfig
+from repro.core.erb import ERB, TaskTag, erb_add, erb_init
+from repro.rl.agent import DQNAgent
+from repro.rl.fleet import FleetEngine
+
+# Sized so the per-step *overhead* the engine eliminates (host batch
+# materialization, per-step dispatch, blocking loss sync) is not drowned
+# by conv compute that both paths share — the same reason the tier-1
+# tests use a reduced DQN. Batch 8 at box 6^3 keeps one train step ~1 ms
+# of pure compute on CPU.
+CFG = DQNConfig(
+    volume_shape=(16, 16, 16),
+    box_size=(6, 6, 6),
+    conv_features=(4,),
+    hidden=(32,),
+    batch_size=8,
+)
+TASK = TaskTag("t1", "axial", "HGG")
+
+
+def _filled_erb(rng: np.random.Generator, capacity: int) -> ERB:
+    erb = erb_init(capacity, CFG.box_size, task=TASK)
+    n = capacity
+    batch = {
+        "obs": rng.standard_normal((n, *CFG.box_size)).astype(np.float32),
+        "loc": rng.random((n, 3)).astype(np.float32),
+        "action": rng.integers(0, CFG.n_actions, n).astype(np.int32),
+        "reward": rng.standard_normal(n).astype(np.float32),
+        "next_obs": rng.standard_normal((n, *CFG.box_size)).astype(np.float32),
+        "next_loc": rng.random((n, 3)).astype(np.float32),
+        "done": (rng.random(n) < 0.1).astype(np.float32),
+    }
+    erb_add(erb, batch)
+    return erb
+
+
+def _bench_pair(
+    n_agents: int, steps: int, repeats: int, capacity: int
+) -> tuple[float, float]:
+    """(stepwise, fleet) seconds per round of N x K updates.
+
+    The two paths are timed in *interleaved* repeats and each reported as
+    its minimum — a load spike on a shared CI machine then has to cover
+    every window of one path to bias the ratio, instead of one
+    contiguous measurement block."""
+    rng = np.random.default_rng(0)
+    legacy = [DQNAgent(i, CFG, seed=i, backend="stepwise") for i in range(n_agents)]
+    engine = FleetEngine(CFG)
+    fleet = [DQNAgent(i, CFG, seed=i, engine=engine) for i in range(n_agents)]
+    erbs = [_filled_erb(rng, capacity) for _ in range(n_agents)]
+
+    def stepwise_round():
+        for a, e in zip(legacy, erbs, strict=True):
+            a.train_steps(steps, e)
+
+    def fleet_round():
+        for a, e in zip(fleet, erbs, strict=True):
+            plans = [a.sampler.plan(a.rng, CFG.batch_size, e) for _ in range(steps)]
+            engine.submit(a.slot, plans)
+        engine.flush()
+
+    for a, e in zip(legacy, erbs, strict=True):
+        a.train_steps(1, e)  # warm the per-step compile
+    fleet_round()  # warm the chunk compile for this (K, N, R) shape
+    t_step = t_fleet = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        stepwise_round()
+        t_step = min(t_step, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fleet_round()
+        t_fleet = min(t_fleet, time.perf_counter() - t0)
+    return t_step, t_fleet
+
+
+def run(fast: bool = False, json_path: str | None = None):
+    sizes = (2, 8) if fast else (2, 8, 32)
+    steps = 40 if fast else 150
+    repeats = 4 if fast else 4
+    capacity = 512
+    results = {}
+    print("config,n_agents,steps,stepwise_sps,fleet_sps,speedup")
+    for n in sizes:
+        t_step, t_fleet = _bench_pair(n, steps, repeats, capacity)
+        total = n * steps
+        row = {
+            "n_agents": n,
+            "train_steps": steps,
+            "stepwise_steps_per_sec": total / t_step,
+            "fleet_steps_per_sec": total / t_fleet,
+            "stepwise_round_sec": t_step,
+            "fleet_round_sec": t_fleet,
+            "speedup": t_step / t_fleet,
+        }
+        results[f"n{n}"] = row
+        print(
+            f"n{n},{n},{steps},{row['stepwise_steps_per_sec']:.1f},"
+            f"{row['fleet_steps_per_sec']:.1f},{row['speedup']:.2f}"
+        )
+    if json_path:
+        payload = {
+            "benchmark": "fleet_throughput",
+            "fast": bool(fast),
+            "configs": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    return results
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--fast", action="store_true", help="reduced sizes/steps (CI sanity)"
+    )
+    ap.add_argument(
+        "--json",
+        type=str,
+        default=None,
+        metavar="OUT",
+        help="write results as JSON (BENCH_*.json for CI gating)",
+    )
+    args = ap.parse_args()
+    run(fast=args.fast, json_path=args.json)

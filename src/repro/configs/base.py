@@ -6,6 +6,7 @@ registers it under its id.  ``reduced()`` derives the CPU-smoke variant
 (2 layers, d_model<=512, <=4 experts) from the same config so the smoke test
 exercises the identical code path as the full dry-run.
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
@@ -14,11 +15,11 @@ from typing import Optional, Tuple
 # ---------------------------------------------------------------------------
 # Block kinds
 # ---------------------------------------------------------------------------
-ATTN = "attn"          # (GQA / MHA) attention mixer
-MLA = "mla"            # DeepSeek multi-head latent attention mixer
-MAMBA = "mamba"        # Mamba-1 selective SSM mixer
-SLSTM = "slstm"        # xLSTM sLSTM block (scalar memory, strictly recurrent)
-MLSTM = "mlstm"        # xLSTM mLSTM block (matrix memory, parallelizable)
+ATTN = "attn"  # (GQA / MHA) attention mixer
+MLA = "mla"  # DeepSeek multi-head latent attention mixer
+MAMBA = "mamba"  # Mamba-1 selective SSM mixer
+SLSTM = "slstm"  # xLSTM sLSTM block (scalar memory, strictly recurrent)
+MLSTM = "mlstm"  # xLSTM mLSTM block (matrix memory, parallelizable)
 
 FFN_DENSE = "dense"
 FFN_MOE = "moe"
@@ -27,7 +28,7 @@ FFN_NONE = "none"
 
 @dataclass(frozen=True)
 class MoEConfig:
-    n_experts: int = 0            # routed experts
+    n_experts: int = 0  # routed experts
     top_k: int = 0
     n_shared_experts: int = 0
     d_ff_expert: int = 0
@@ -39,7 +40,7 @@ class MoEConfig:
 @dataclass(frozen=True)
 class MLAConfig:
     kv_lora_rank: int = 512
-    q_lora_rank: int = 0          # 0 => direct q projection (DeepSeek-V2-Lite)
+    q_lora_rank: int = 0  # 0 => direct q projection (DeepSeek-V2-Lite)
     rope_head_dim: int = 64
     nope_head_dim: int = 128
     v_head_dim: int = 128
@@ -50,8 +51,8 @@ class SSMConfig:
     d_state: int = 16
     d_conv: int = 4
     expand: int = 2
-    dt_rank: int = 0              # 0 => ceil(d_model / 16)
-    chunk: int = 64               # remat chunk for the selective scan
+    dt_rank: int = 0  # 0 => ceil(d_model / 16)
+    chunk: int = 64  # remat chunk for the selective scan
 
 
 @dataclass(frozen=True)
@@ -67,14 +68,14 @@ class XLSTMConfig:
 @dataclass(frozen=True)
 class ModelConfig:
     name: str
-    family: str                   # dense | moe | ssm | hybrid | audio | vlm
+    family: str  # dense | moe | ssm | hybrid | audio | vlm
     n_layers: int
     d_model: int
     n_heads: int
     n_kv_heads: int
     d_ff: int
     vocab_size: int
-    head_dim: int = 0             # 0 => d_model // n_heads
+    head_dim: int = 0  # 0 => d_model // n_heads
     # --- block layout -----------------------------------------------------
     # Repeating pattern of (mixer, ffn) kinds. The pattern tiles over
     # n_layers - first_k_dense; the first first_k_dense layers are unrolled
@@ -85,7 +86,7 @@ class ModelConfig:
     # --- attention ---------------------------------------------------------
     qkv_bias: bool = False
     sliding_window: Optional[int] = None
-    rope: str = "rope"            # rope | mrope | none
+    rope: str = "rope"  # rope | mrope | none
     rope_theta: float = 10_000.0
     attn_logit_softcap: float = 0.0
     # --- sub-configs --------------------------------------------------------
@@ -99,8 +100,8 @@ class ModelConfig:
     input_kind: str = "tokens"
     mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t,h,w splits of head_dim/2
     # --- misc ----------------------------------------------------------------
-    mlp_variant: str = "swiglu"   # swiglu | gelu
-    norm: str = "rmsnorm"         # rmsnorm | layernorm
+    mlp_variant: str = "swiglu"  # swiglu | gelu
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
     norm_eps: float = 1e-5
     tie_embeddings: bool = False
     dtype: str = "bfloat16"
@@ -136,34 +137,48 @@ class ModelConfig:
         n_kv = max(1, min(self.n_kv_heads, n_heads))
         moe = self.moe
         if moe.n_experts:
-            moe = replace(moe, n_experts=min(4, moe.n_experts),
-                          top_k=min(2, moe.top_k),
-                          n_shared_experts=min(1, moe.n_shared_experts),
-                          d_ff_expert=min(128, moe.d_ff_expert))
+            moe = replace(
+                moe,
+                n_experts=min(4, moe.n_experts),
+                top_k=min(2, moe.top_k),
+                n_shared_experts=min(1, moe.n_shared_experts),
+                d_ff_expert=min(128, moe.d_ff_expert),
+            )
         mla = self.mla
         if mla is not None:
-            mla = replace(mla, kv_lora_rank=64, rope_head_dim=16,
-                          nope_head_dim=32, v_head_dim=32,
-                          q_lora_rank=(32 if mla.q_lora_rank else 0))
+            mla = replace(
+                mla,
+                kv_lora_rank=64,
+                rope_head_dim=16,
+                nope_head_dim=32,
+                v_head_dim=32,
+                q_lora_rank=(32 if mla.q_lora_rank else 0),
+            )
         # compress long patterns (e.g. jamba's 8-layer period) to the unique
         # (mixer, ffn) combos so the smoke variant stays <=4 layers while
         # still exercising every block kind of the family
         pattern = tuple(dict.fromkeys(self.pattern))[:4]
-        n_layers = self.first_k_dense + len(pattern) * max(
-            1, 2 // len(pattern))
+        n_layers = self.first_k_dense + len(pattern) * max(1, 2 // len(pattern))
         return replace(
-            self, name=self.name + "-smoke", pattern=pattern,
-            n_layers=n_layers, d_model=d_model, n_heads=n_heads,
-            n_kv_heads=n_kv, d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            self,
+            name=self.name + "-smoke",
+            pattern=pattern,
+            n_layers=n_layers,
+            d_model=d_model,
+            n_heads=n_heads,
+            n_kv_heads=n_kv,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
             first_k_dense_d_ff=min(self.first_k_dense_d_ff, 512),
             vocab_size=min(self.vocab_size, 512),
             head_dim=(d_model // n_heads),
             sliding_window=(64 if self.sliding_window else None),
-            moe=moe, mla=mla,
+            moe=moe,
+            mla=mla,
             ssm=replace(self.ssm, d_state=8, chunk=16),
             mrope_sections=tuple(
                 s * (d_model // n_heads) // self.resolved_head_dim or 1
-                for s in self.mrope_sections),
+                for s in self.mrope_sections
+            ),
             dtype="float32",
         )
 
@@ -176,7 +191,7 @@ class InputShape:
     name: str
     seq_len: int
     global_batch: int
-    mode: str                     # train | prefill | decode
+    mode: str  # train | prefill | decode
 
 
 INPUT_SHAPES = {
@@ -212,9 +227,15 @@ def list_configs() -> list[str]:
 _LOADED = False
 
 ASSIGNED = (
-    "h2o-danube-3-4b", "jamba-1.5-large-398b", "xlstm-125m",
-    "musicgen-medium", "qwen2.5-14b", "moonshot-v1-16b-a3b",
-    "deepseek-v2-lite-16b", "qwen3-moe-235b-a22b", "starcoder2-15b",
+    "h2o-danube-3-4b",
+    "jamba-1.5-large-398b",
+    "xlstm-125m",
+    "musicgen-medium",
+    "qwen2.5-14b",
+    "moonshot-v1-16b-a3b",
+    "deepseek-v2-lite-16b",
+    "qwen3-moe-235b-a22b",
+    "starcoder2-15b",
     "qwen2-vl-2b",
 )
 
@@ -225,10 +246,20 @@ def _ensure_loaded() -> None:
         return
     _LOADED = True
     import importlib
-    for mod in ("h2o_danube3", "jamba15_large", "xlstm125m", "musicgen_medium",
-                "qwen25_14b", "moonshot_16b", "deepseek_v2_lite",
-                "qwen3_moe_235b", "starcoder2_15b", "qwen2_vl_2b",
-                "adfll_dqn"):
+
+    for mod in (
+        "h2o_danube3",
+        "jamba15_large",
+        "xlstm125m",
+        "musicgen_medium",
+        "qwen25_14b",
+        "moonshot_16b",
+        "deepseek_v2_lite",
+        "qwen3_moe_235b",
+        "starcoder2_15b",
+        "qwen2_vl_2b",
+        "adfll_dqn",
+    ):
         importlib.import_module(f"repro.configs.{mod}")
 
 
@@ -243,16 +274,25 @@ def param_count(cfg: ModelConfig) -> tuple[int, int]:
         elif mixer == MLA:
             a = cfg.mla
             q_dim = a.nope_head_dim + a.rope_head_dim
-            m = (d * (a.q_lora_rank or 0)
-                 + (a.q_lora_rank or d) * cfg.n_heads * q_dim
-                 + d * (a.kv_lora_rank + a.rope_head_dim)
-                 + a.kv_lora_rank * cfg.n_heads * (a.nope_head_dim + a.v_head_dim)
-                 + cfg.n_heads * a.v_head_dim * d)
+            m = (
+                d * (a.q_lora_rank or 0)
+                + (a.q_lora_rank or d) * cfg.n_heads * q_dim
+                + d * (a.kv_lora_rank + a.rope_head_dim)
+                + a.kv_lora_rank * cfg.n_heads * (a.nope_head_dim + a.v_head_dim)
+                + cfg.n_heads * a.v_head_dim * d
+            )
         elif mixer == MAMBA:
             di = cfg.ssm.expand * d
             dtr = cfg.ssm.dt_rank or -(-d // 16)
-            m = d * 2 * di + di * cfg.ssm.d_conv + di * (dtr + 2 * cfg.ssm.d_state) \
-                + dtr * di + di * cfg.ssm.d_state + di + di * d
+            m = (
+                d * 2 * di
+                + di * cfg.ssm.d_conv
+                + di * (dtr + 2 * cfg.ssm.d_state)
+                + dtr * di
+                + di * cfg.ssm.d_state
+                + di
+                + di * d
+            )
         elif mixer == MLSTM:
             di = int(cfg.xlstm.mlstm_proj_factor * d)
             m = d * 2 * di + di * cfg.xlstm.conv_width + 3 * di * di + 3 * di + di * d
@@ -269,8 +309,12 @@ def param_count(cfg: ModelConfig) -> tuple[int, int]:
             active += f
         elif ffn == FFN_MOE:
             fe = 3 * d * cfg.moe.d_ff_expert
-            total += fe * (cfg.moe.n_experts + cfg.moe.n_shared_experts) \
+            total += (
+                fe * (cfg.moe.n_experts + cfg.moe.n_shared_experts)
                 + d * cfg.moe.n_experts
-            active += fe * (cfg.moe.top_k + cfg.moe.n_shared_experts) \
+            )
+            active += (
+                fe * (cfg.moe.top_k + cfg.moe.n_shared_experts)
                 + d * cfg.moe.n_experts
+            )
     return total, active

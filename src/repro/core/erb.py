@@ -58,6 +58,7 @@ class ERB:
     capacity: int
     size: int = 0
     cursor: int = 0
+    version: int = 0  # bumped by erb_add; device-side caches key on it
 
     def __len__(self) -> int:
         return self.size
@@ -95,17 +96,27 @@ def erb_add(erb: ERB, batch: Dict[str, np.ndarray]) -> ERB:
     size = min(cap, erb.size + n)
     erb.size = size
     erb.cursor = (erb.cursor + n) % cap
+    erb.version += 1
     erb.meta = replace(erb.meta, size=size)
     return erb
 
 
-def erb_sample(
-    erb: ERB, rng: np.random.Generator, n: int, *, use_pallas: bool = False
-) -> Dict[str, np.ndarray]:
-    """Uniformly sample n experiences (with replacement if n > size)."""
+def erb_sample_indices(erb: ERB, rng: np.random.Generator, n: int) -> np.ndarray:
+    """The index-selection half of :func:`erb_sample`: uniformly choose n
+    row indices (with replacement iff n > size), consuming ``rng`` exactly
+    as ``erb_sample`` does.  The fleet engine uses this to plan batches on
+    the host while materializing rows on device."""
     assert erb.size > 0, "sampling an empty ERB"
     replace_ = n > erb.size
-    idx = rng.choice(erb.size, size=n, replace=replace_)
+    return rng.choice(erb.size, size=n, replace=replace_)
+
+
+def erb_take(
+    erb: ERB, idx: np.ndarray, *, use_pallas: bool = False
+) -> Dict[str, np.ndarray]:
+    """Materialize the rows selected by ``idx`` (host gather, or the
+    Pallas ``replay_gather`` kernel when ``use_pallas``)."""
+    n = len(idx)
     if use_pallas:
         from repro.kernels.replay_gather.ops import replay_gather
 
@@ -117,6 +128,44 @@ def erb_sample(
             flat[k] = np.asarray(out).reshape((n,) + v.shape[1:])
         return flat
     return {k: v[idx] for k, v in erb.data.items()}
+
+
+def erb_sample(
+    erb: ERB, rng: np.random.Generator, n: int, *, use_pallas: bool = False
+) -> Dict[str, np.ndarray]:
+    """Uniformly sample n experiences (with replacement if n > size)."""
+    return erb_take(erb, erb_sample_indices(erb, rng, n), use_pallas=use_pallas)
+
+
+# -- flat row layout (device-resident replay) --------------------------------
+# The fleet engine keeps each ERB on device as one [size, F] float32 matrix
+# so a minibatch is a single row gather. Column order is fixed:
+FLAT_FIELDS: Tuple[str, ...] = (
+    "obs",
+    "loc",
+    "action",
+    "reward",
+    "next_obs",
+    "next_loc",
+    "done",
+)
+
+
+def flat_width(obs_shape: Tuple[int, ...]) -> int:
+    """Row width of the flattened experience layout."""
+    obs_f = int(np.prod(obs_shape))
+    return 2 * obs_f + 3 + 3 + 3  # obs+next_obs, loc+next_loc, a/r/done
+
+
+def erb_flatten(erb: ERB) -> np.ndarray:
+    """[size, F] float32 view of the filled rows, columns in FLAT_FIELDS
+    order (action stored as float32 — exact for small ints)."""
+    s = erb.size
+    cols = []
+    for k in FLAT_FIELDS:
+        v = erb.data[k][:s]
+        cols.append(v.reshape(s, -1).astype(np.float32, copy=False))
+    return np.concatenate(cols, axis=1)
 
 
 def erb_share_slice(

@@ -45,6 +45,7 @@ from repro.core.plane import CompressedWeightPlane, WeightPlane, staleness_alpha
 from repro.core.scheduler import Scheduler
 from repro.rl.agent import DQNAgent
 from repro.rl.env import LandmarkEnv
+from repro.rl.fleet import FleetEngine
 from repro.rl.synth import make_volume
 
 
@@ -136,6 +137,11 @@ class ADFLLSystem:
                 ),
                 rng=np.random.default_rng(self.seed + 3),
             )
+        if sys_cfg.engine not in ("fleet", "fleet-eager", "stepwise"):
+            raise ValueError(f"unknown engine: {sys_cfg.engine!r}")
+        self.engine: Optional[FleetEngine] = (
+            FleetEngine(dqn_cfg) if sys_cfg.engine.startswith("fleet") else None
+        )
         self.use_erb = "erb" in sys_cfg.share_planes
         self.use_weights = "weights" in sys_cfg.share_planes
         if self.use_weights:
@@ -188,7 +194,14 @@ class ADFLLSystem:
     ) -> int:
         aid = self._next_agent_id
         self._next_agent_id += 1
-        agent = DQNAgent(aid, self.dqn_cfg, seed=self.seed + aid, speed=speed)
+        agent = DQNAgent(
+            aid,
+            self.dqn_cfg,
+            seed=self.seed + aid,
+            speed=speed,
+            backend="fleet" if self.engine is not None else "stepwise",
+            engine=self.engine,
+        )
         self.agents[aid] = agent
         self.network.attach_agent(aid, hub_id)
         t = self.sched.now if at is None else at
@@ -196,7 +209,12 @@ class ADFLLSystem:
         return aid
 
     def remove_agent(self, agent_id: int):
-        self.agents[agent_id].active = False
+        agent = self.agents[agent_id]
+        if self.engine is not None:
+            # retire the departing agent's in-flight round now so its
+            # record lands in the same history position as sequential
+            self.engine.ensure_flushed(agent.slot)
+        agent.active = False
         self.network.detach_agent(agent_id)
 
     def live_agents(self) -> Dict[int, DQNAgent]:
@@ -314,7 +332,7 @@ class ADFLLSystem:
         else:
             n_mixed = 0
         start = self.sched.now
-        shared, loss = agent.train_round(
+        shared, future = agent.begin_round(
             env,
             task,
             incoming,
@@ -322,22 +340,33 @@ class ADFLLSystem:
             share_size=self.sys_cfg.erb_share_size,
             train_steps=self.sys_cfg.train_steps_per_round,
         )
+        if self.sys_cfg.engine == "fleet-eager" and self.engine is not None:
+            self.engine.flush()
         dur = self._round_duration(agent, len(incoming)) + comm
         end = start + dur
-        self._emit(
-            "on_round_end",
-            RoundRecord(
-                agent_id,
-                agent.rounds_done - 1,
-                task.name,
-                start,
-                end,
-                len(incoming),
-                loss,
-                n_mixed,
-                comm,
-            ),
-        )
+        # the round record is complete except for the loss, which the
+        # fleet engine produces at flush time; futures resolve in
+        # submission order, so history order matches sequential driving
+        round_idx = agent.rounds_done - 1
+        n_incoming = len(incoming)
+
+        def emit_record(loss):
+            self._emit(
+                "on_round_end",
+                RoundRecord(
+                    agent_id,
+                    round_idx,
+                    task.name,
+                    start,
+                    end,
+                    n_incoming,
+                    loss,
+                    n_mixed,
+                    comm,
+                ),
+            )
+
+        future.on_done(emit_record)
 
         def finish(s: Scheduler, t: float, aid=agent_id, erb=shared):
             self._outstanding -= 1
@@ -420,6 +449,8 @@ class ADFLLSystem:
             )
 
         t = self.sched.run(until=until, stop=done)
+        if self.engine is not None:
+            self.engine.flush()  # retire in-flight rounds before reporting
         self.network.sync()
         return self.report(makespan=t)
 
@@ -583,7 +614,10 @@ class CentralAggregationSystem:
         self.steps = steps
         self.erb_capacity = erb_capacity
         self.seed = seed
-        self.agents = [DQNAgent(i, dqn_cfg, seed=seed + i) for i in range(n_agents)]
+        engine = FleetEngine(dqn_cfg)  # one stacked fleet for the cohort
+        self.agents = [
+            DQNAgent(i, dqn_cfg, seed=seed + i, engine=engine) for i in range(n_agents)
+        ]
         self.rng = np.random.default_rng(seed)
 
     def round(
@@ -606,7 +640,12 @@ class CentralAggregationSystem:
                 round_idx=round_idx,
             )
             agent.collect(env, erb, n_episodes=24)
-            agent.train_steps(steps, erb, ())
+            if agent.engine is not None:
+                # submit only: the whole cohort trains as one batched
+                # flush, forced by the params read during aggregation
+                agent._submit_steps(steps, erb, ())
+            else:
+                agent.train_steps(steps, erb, ())
             agent.personal_erbs.append(erb)
         # synchronous central aggregation (the bottleneck ADFLL removes)
         mean_params = jax.tree_util.tree_map(

@@ -6,16 +6,37 @@ During training an agent samples each minibatch from three pools:
   (3) *incoming* ERBs received from the network (other agents' experience).
 Mixing (2) and (3) into every update is what prevents catastrophic
 forgetting and what federates learning without sharing weights.
+
+The sampler is split into *selection* (:meth:`SelectiveReplaySampler.plan`
+— pure host-side index math) and *materialization* (gathering the rows).
+The classic host path does both; the fleet engine takes only the plan and
+gathers the rows on device from resident ERB buffers via the
+``replay_gather`` Pallas kernel. Both paths consume the ``rng`` stream in
+exactly the same order, so they select bit-identical batches.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.erb import ERB, erb_sample, stack_batches
+from repro.core.erb import ERB, erb_sample_indices, erb_take, stack_batches
+
+
+@dataclass(frozen=True)
+class ReplayPlan:
+    """One minibatch worth of selection: ordered per-ERB row picks plus
+    the final in-batch shuffle. ``picks`` concatenated in order (before
+    ``perm``) spell out the batch exactly as the host path stacks it."""
+
+    picks: Tuple[Tuple[ERB, np.ndarray], ...]  # (erb, local row indices)
+    perm: np.ndarray = field(repr=False)  # [batch_size] final shuffle
+
+    @property
+    def batch_size(self) -> int:
+        return len(self.perm)
 
 
 @dataclass
@@ -26,14 +47,16 @@ class SelectiveReplaySampler:
     mix: Sequence[float] = (0.5, 0.25, 0.25)
     use_pallas: bool = False
 
-    def sample(
+    def plan(
         self,
         rng: np.random.Generator,
         batch_size: int,
         current: Optional[ERB],
         personal: Sequence[ERB] = (),
         incoming: Sequence[ERB] = (),
-    ) -> Dict[str, np.ndarray]:
+    ) -> ReplayPlan:
+        """Select which rows make up the next minibatch without touching
+        the experience data itself."""
         pools: List[List[ERB]] = [
             [e for e in ([current] if current is not None else []) if len(e) > 0],
             [e for e in personal if len(e) > 0],
@@ -49,7 +72,7 @@ class SelectiveReplaySampler:
         counts = np.floor(weights * batch_size).astype(int)
         counts[int(np.argmax(weights))] += batch_size - counts.sum()
 
-        batches = []
+        picks: List[Tuple[ERB, np.ndarray]] = []
         for pool, n in zip(pools, counts, strict=True):
             if n == 0 or not pool:
                 continue
@@ -57,9 +80,25 @@ class SelectiveReplaySampler:
             per = np.bincount(rng.integers(0, len(pool), size=n), minlength=len(pool))
             for erb, m in zip(pool, per, strict=True):
                 if m > 0:
-                    batches.append(
-                        erb_sample(erb, rng, int(m), use_pallas=self.use_pallas)
-                    )
-        batch = stack_batches(batches)
+                    picks.append((erb, erb_sample_indices(erb, rng, int(m))))
         perm = rng.permutation(batch_size)
-        return {k: v[perm] for k, v in batch.items()}
+        return ReplayPlan(picks=tuple(picks), perm=perm)
+
+    def sample(
+        self,
+        rng: np.random.Generator,
+        batch_size: int,
+        current: Optional[ERB],
+        personal: Sequence[ERB] = (),
+        incoming: Sequence[ERB] = (),
+    ) -> Dict[str, np.ndarray]:
+        plan = self.plan(rng, batch_size, current, personal=personal, incoming=incoming)
+        return self.materialize(plan)
+
+    def materialize(self, plan: ReplayPlan) -> Dict[str, np.ndarray]:
+        """Host-side row gather of a plan (the classic path)."""
+        batches = [
+            erb_take(erb, idx, use_pallas=self.use_pallas) for erb, idx in plan.picks
+        ]
+        batch = stack_batches(batches)
+        return {k: v[plan.perm] for k, v in batch.items()}

@@ -15,9 +15,10 @@ from __future__ import annotations
 
 import argparse
 import sys
+from dataclasses import replace
 
 from repro.experiments.registry import get_scenario, list_scenarios
-from repro.experiments.runner import run, write_json
+from repro.experiments.runner import resolve, run, write_json
 from repro.experiments.suggest import unknown_name_message
 
 
@@ -38,6 +39,12 @@ def main(argv=None) -> int:
     )
     ap.add_argument(
         "--seed", type=int, default=None, help="override the scenario seed"
+    )
+    ap.add_argument(
+        "--engine",
+        choices=("fleet", "fleet-eager", "stepwise"),
+        default=None,
+        help="override the ADFLL execution engine (default: the scenario's)",
     )
     ap.add_argument(
         "--json",
@@ -64,7 +71,10 @@ def main(argv=None) -> int:
 
     reports = []
     for name in args.scenario:
-        report = run(name, fast=args.fast, seed=args.seed)
+        spec = resolve(name, fast=args.fast, seed=args.seed)
+        if args.engine is not None:
+            spec = replace(spec, sys=replace(spec.sys, engine=args.engine))
+        report = run(spec)
         reports.append(report)
         curve = " -> ".join(
             f"{p.mean_err:.2f}@{p.t:.1f}(n={p.n_agents})" for p in report.eval_curve

@@ -13,6 +13,7 @@ VMEM budget per step: q/k/v blocks (block_q + 2 block_k) x head_dim plus
 (block_q x head_dim) f32 accumulator — callers pick block sizes so this
 stays within ~16 MB (ops.py defaults: 256/512 x 128).
 """
+
 from __future__ import annotations
 
 import functools
@@ -27,10 +28,23 @@ F32 = jnp.float32
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref,                    # refs
-            m_scr, l_scr, acc_scr,                         # scratch
-            *, scale: float, causal: bool, window, softcap: float,
-            block_q: int, block_k: int, n_kv: int):
+def _kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,  # refs
+    m_scr,
+    l_scr,
+    acc_scr,  # scratch
+    *,
+    scale: float,
+    causal: bool,
+    window,
+    softcap: float,
+    block_q: int,
+    block_k: int,
+    n_kv: int,
+):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -48,22 +62,23 @@ def _kernel(q_ref, k_ref, v_ref, o_ref,                    # refs
     if causal:
         run = k_start <= q_start + block_q - 1
     if window is not None:
-        run = jnp.logical_and(
-            run, q_start - (k_start + block_k - 1) < window)
+        run = jnp.logical_and(run, q_start - (k_start + block_k - 1) < window)
 
     @pl.when(run)
     def _compute():
-        q = q_ref[0].astype(F32)                          # [bq, d]
-        k = k_ref[0].astype(F32)                          # [bk, d]
-        v = v_ref[0].astype(F32)                          # [bk, dv]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=F32) * scale
+        q = q_ref[0].astype(F32)  # [bq, d]
+        k = k_ref[0].astype(F32)  # [bk, d]
+        v = v_ref[0].astype(F32)  # [bk, dv]
+        s = (
+            jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32
+            )
+            * scale
+        )
         if softcap > 0.0:
             s = softcap * jnp.tanh(s / softcap)
-        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32,
-                                                  (block_q, block_k), 0)
-        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32,
-                                                  (block_q, block_k), 1)
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
         mask = jnp.ones((block_q, block_k), jnp.bool_)
         if causal:
             mask &= kpos <= qpos
@@ -79,7 +94,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref,                    # refs
         l_scr[...] = l_prev * corr + p.sum(-1, keepdims=True)
         m_scr[...] = m_new
         acc_scr[...] = acc_scr[...] * corr + jax.lax.dot(
-            p.astype(v.dtype), v, preferred_element_type=F32)
+            p.astype(v.dtype), v, preferred_element_type=F32
+        )
 
     @pl.when(ki == n_kv - 1)
     def _finalize():
@@ -87,10 +103,19 @@ def _kernel(q_ref, k_ref, v_ref, o_ref,                    # refs
         o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
-def flash_attention_bhsd(q, k, v, *, causal: bool = True, window=None,
-                         scale=None, softcap: float = 0.0,
-                         block_q: int = 256, block_k: int = 512,
-                         interpret: bool = True):
+def flash_attention_bhsd(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window=None,
+    scale=None,
+    softcap: float = 0.0,
+    block_q: int = 256,
+    block_k: int = 512,
+    interpret: bool = True,
+):
     """q [BH, S, D], k/v [BH_kv, S, D*] (BH = BH_kv * group). -> [BH, S, Dv]."""
     bh, s, d = q.shape
     bh_kv = k.shape[0]
@@ -101,11 +126,18 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window=None,
     nq = math.ceil(s / block_q)
     nk = math.ceil(s / block_k)
     if scale is None:
-        scale = d ** -0.5
+        scale = d**-0.5
 
     kern = functools.partial(
-        _kernel, scale=scale, causal=causal, window=window, softcap=softcap,
-        block_q=block_q, block_k=block_k, n_kv=nk)
+        _kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        block_q=block_q,
+        block_k=block_k,
+        n_kv=nk,
+    )
     return pl.pallas_call(
         kern,
         grid=(bh, nq, nk),

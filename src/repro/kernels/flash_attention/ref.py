@@ -1,4 +1,5 @@
 """Pure-jnp oracle for the flash attention kernel (naive full-matrix)."""
+
 from __future__ import annotations
 
 import jax
@@ -7,14 +8,15 @@ import jax.numpy as jnp
 F32 = jnp.float32
 
 
-def attention_ref(q, k, v, *, causal: bool = True, window=None, scale=None,
-                  softcap: float = 0.0):
+def attention_ref(
+    q, k, v, *, causal: bool = True, window=None, scale=None, softcap: float = 0.0
+):
     """q [B,S,Hq,D], k/v [B,S,Hkv,D*] -> [B,S,Hq,Dv]. Materializes SxS."""
     b, s, hq, d = q.shape
     hkv = k.shape[2]
     g = hq // hkv
     if scale is None:
-        scale = d ** -0.5
+        scale = d**-0.5
     kr = jnp.repeat(k, g, axis=2)
     vr = jnp.repeat(v, g, axis=2)
     scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(F32), kr.astype(F32))

@@ -11,6 +11,7 @@ The elementwise tail of the DQN update, fused into a single VMEM pass:
 Returns (loss, dq) per sample; the caller wires dq into the Q-network
 backward pass (custom_vjp in ops.py).
 """
+
 from __future__ import annotations
 
 import functools
@@ -22,10 +23,9 @@ from jax.experimental import pallas as pl
 F32 = jnp.float32
 
 
-def _kernel(qsel_ref, qnext_ref, r_ref, done_ref, loss_ref, dq_ref,
-            *, gamma: float):
-    qnext = qnext_ref[...]                                # [bb, A]
-    best = jnp.max(qnext, axis=-1, keepdims=True)         # [bb, 1]
+def _kernel(qsel_ref, qnext_ref, r_ref, done_ref, loss_ref, dq_ref, *, gamma: float):
+    qnext = qnext_ref[...]  # [bb, A]
+    best = jnp.max(qnext, axis=-1, keepdims=True)  # [bb, 1]
     r = r_ref[...]
     done = done_ref[...]
     target = r + gamma * (1.0 - done) * best
@@ -35,8 +35,16 @@ def _kernel(qsel_ref, qnext_ref, r_ref, done_ref, loss_ref, dq_ref,
     dq_ref[...] = jnp.clip(delta, -1.0, 1.0)
 
 
-def fused_td(q_sel, q_next, reward, done, *, gamma: float,
-             block_b: int = 128, interpret: bool = True):
+def fused_td(
+    q_sel,
+    q_next,
+    reward,
+    done,
+    *,
+    gamma: float,
+    block_b: int = 128,
+    interpret: bool = True,
+):
     """q_sel [B,1], q_next [B,A], reward [B,1], done [B,1] ->
     (loss [B,1], dq [B,1])."""
     b, a = q_next.shape
@@ -62,5 +70,4 @@ def fused_td(q_sel, q_next, reward, done, *, gamma: float,
             jax.ShapeDtypeStruct((b, 1), F32),
         ],
         interpret=interpret,
-    )(q_sel.astype(F32), q_next.astype(F32), reward.astype(F32),
-      done.astype(F32))
+    )(q_sel.astype(F32), q_next.astype(F32), reward.astype(F32), done.astype(F32))

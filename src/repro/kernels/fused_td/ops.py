@@ -1,4 +1,5 @@
 """jit'd wrapper with custom_vjp so the fused dq drives the DQN backward."""
+
 from __future__ import annotations
 
 from functools import partial
@@ -11,19 +12,22 @@ from repro.kernels.fused_td.ref import fused_td_ref
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(4, 5))
-def td_loss(q_sel, q_next, reward, done, gamma: float = 0.99,
-            use_pallas: bool = True):
+def td_loss(q_sel, q_next, reward, done, gamma: float = 0.99, use_pallas: bool = True):
     """Mean Huber TD loss. Differentiable in q_sel (target is stopped)."""
-    loss, _ = (_kernel(q_sel, q_next, reward, done, gamma=gamma)
-               if use_pallas else
-               fused_td_ref(q_sel, q_next, reward, done, gamma=gamma))
+    loss, _ = (
+        _kernel(q_sel, q_next, reward, done, gamma=gamma)
+        if use_pallas
+        else fused_td_ref(q_sel, q_next, reward, done, gamma=gamma)
+    )
     return jnp.mean(loss)
 
 
 def _fwd(q_sel, q_next, reward, done, gamma, use_pallas):
-    loss, dq = (_kernel(q_sel, q_next, reward, done, gamma=gamma)
-                if use_pallas else
-                fused_td_ref(q_sel, q_next, reward, done, gamma=gamma))
+    loss, dq = (
+        _kernel(q_sel, q_next, reward, done, gamma=gamma)
+        if use_pallas
+        else fused_td_ref(q_sel, q_next, reward, done, gamma=gamma)
+    )
     return jnp.mean(loss), (dq, q_sel.shape[0])
 
 

@@ -1,4 +1,5 @@
 """Pure-jnp oracle for fused_td."""
+
 from __future__ import annotations
 
 import jax.numpy as jnp

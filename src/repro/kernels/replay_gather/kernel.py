@@ -11,8 +11,8 @@ kernel body at all; the DMA engine does the work).
 Grid: one step per (row-block); each step copies ``block_rows`` buffer rows
 into VMEM, applies the weight, and writes the output block.
 """
-from __future__ import annotations
 
+from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
@@ -35,11 +35,10 @@ def replay_gather(buffer, indices, weights, *, interpret: bool = True):
     batch = indices.shape[0]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,               # indices, weights
+        num_scalar_prefetch=2,  # indices, weights
         grid=(batch,),
         in_specs=[
-            pl.BlockSpec((1, feat),
-                         lambda i, idx_ref, w_ref: (idx_ref[i], 0)),
+            pl.BlockSpec((1, feat), lambda i, idx_ref, w_ref: (idx_ref[i], 0)),
         ],
         out_specs=pl.BlockSpec((1, feat), lambda i, idx_ref, w_ref: (i, 0)),
     )

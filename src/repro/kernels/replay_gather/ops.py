@@ -1,4 +1,19 @@
-"""jit'd wrapper for the ERB gather kernel."""
+"""jit'd wrapper for the ERB gather kernel.
+
+``mode`` selects the lowering:
+
+* ``"interpret"`` — the Pallas kernel under the Pallas interpreter
+  (default; kernel-correctness tests and debugging. The interpreter is a
+  per-grid-step simulator — orders of magnitude slower than XLA's native
+  gather, never use it on a hot path).
+* ``"compiled"`` — the Pallas kernel compiled for the backend (TPU).
+* ``"ref"`` — the pure-XLA oracle (`replay_gather_ref`), bit-identical
+  output.
+* ``"auto"`` — what hot paths (the fleet engine's device-resident batch
+  materialization) should pass: the compiled kernel on TPU, the XLA
+  oracle everywhere else.
+"""
+
 from __future__ import annotations
 
 from functools import partial
@@ -6,10 +21,17 @@ from functools import partial
 import jax
 
 from repro.kernels.replay_gather.kernel import replay_gather as _kernel
+from repro.kernels.replay_gather.ref import replay_gather_ref
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def replay_gather(buffer, indices, weights, *, interpret: bool = True):
+@partial(jax.jit, static_argnames=("mode",))
+def replay_gather(buffer, indices, weights, *, mode: str = "interpret"):
     """Gather + weight replay rows: buffer [cap,F], indices [B], weights [B]
     -> [B, F]."""
-    return _kernel(buffer, indices, weights, interpret=interpret)
+    if mode == "auto":
+        mode = "compiled" if jax.default_backend() == "tpu" else "ref"
+    if mode == "ref":
+        return replay_gather_ref(buffer, indices, weights)
+    if mode not in ("interpret", "compiled"):
+        raise ValueError(f"unknown replay_gather mode: {mode!r}")
+    return _kernel(buffer, indices, weights, interpret=mode == "interpret")

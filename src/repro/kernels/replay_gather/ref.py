@@ -1,6 +1,6 @@
 """Pure-jnp oracle for replay_gather."""
-from __future__ import annotations
 
+from __future__ import annotations
 
 
 def replay_gather_ref(buffer, indices, weights):

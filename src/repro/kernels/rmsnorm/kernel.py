@@ -5,6 +5,7 @@ reduction, rsqrt and scale into one VMEM pass removes two HBM round trips
 of the [*, d_model] activation. Grid over row blocks; the full feature dim
 stays resident in VMEM (d_model <= 8192 -> <=4 MB f32 per block row set).
 """
+
 from __future__ import annotations
 
 import functools
@@ -17,14 +18,15 @@ F32 = jnp.float32
 
 
 def _kernel(x_ref, scale_ref, o_ref, *, eps: float):
-    x = x_ref[...].astype(F32)                            # [bb, d]
+    x = x_ref[...].astype(F32)  # [bb, d]
     ms = jnp.mean(x * x, axis=-1, keepdims=True)
     y = x * jax.lax.rsqrt(ms + eps) * scale_ref[...].astype(F32)
     o_ref[...] = y.astype(o_ref.dtype)
 
 
-def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 128,
-            interpret: bool = True):
+def rmsnorm(
+    x, scale, *, eps: float = 1e-5, block_rows: int = 128, interpret: bool = True
+):
     """x [N, d], scale [d] -> [N, d]."""
     n, d = x.shape
     block_rows = min(block_rows, n)

@@ -1,4 +1,5 @@
 """Pure-jnp oracle for the fused RMSNorm kernel."""
+
 from __future__ import annotations
 
 import jax
@@ -8,5 +9,4 @@ import jax.numpy as jnp
 def rmsnorm_ref(x, scale, *, eps: float = 1e-5):
     xf = x.astype(jnp.float32)
     ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
-    return (xf * jax.lax.rsqrt(ms + eps)
-            * scale.astype(jnp.float32)).astype(x.dtype)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)

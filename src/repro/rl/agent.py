@@ -1,11 +1,23 @@
 """DQN agent: epsilon-greedy exploration, target network, fused TD loss,
 and the ADFLL round API (collect -> train on mixed replay -> share ERB).
+
+Since the fleet-engine refactor the agent is a thin *view* over a
+:class:`~repro.rl.fleet.FleetEngine` slot: its params / target params /
+optimizer state live in the engine's stacked :class:`~repro.rl.fleet.FleetState`,
+and training rounds are scan-fused jobs (one dispatch per flush instead
+of one per step). The public API — ``act`` / ``collect`` /
+``train_steps`` / ``train_round`` / ``mix_params`` / ``evaluate`` — is
+unchanged, so Agents X/Y/M and existing tests keep working. The legacy
+per-step dispatch path survives as ``backend="stepwise"`` (the
+``fleet_throughput`` benchmark baseline; numerically within float-fusion
+ULPs of the fused program).
 """
 
 from __future__ import annotations
 
+from collections import Counter
 from dataclasses import dataclass
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -15,71 +27,138 @@ from repro.configs.adfll_dqn import DQNConfig
 from repro.core.erb import ERB, TaskTag, erb_add, erb_init, erb_share_slice
 from repro.core.plane import WeightSnapshot, mix_params, new_snap_id
 from repro.core.replay import SelectiveReplaySampler
-from repro.kernels.fused_td.ops import td_loss
-from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.adamw import adamw_init, adamw_update
 from repro.rl.dqn import dqn_apply, dqn_init
 from repro.rl.env import LandmarkEnv
+from repro.rl.fleet import (
+    FleetEngine,
+    TrainFuture,
+    make_dqn_loss_fn,
+    make_dqn_opt_cfg,
+)
+
+_DQN_STEPS_CACHE: Dict[Tuple[DQNConfig, bool], tuple] = {}
+_DQN_TRACES: Counter = Counter()
+
+
+def dqn_step_traces(cfg: DQNConfig, *, use_pallas: bool = False) -> int:
+    """How many times the (cached) per-step train function of this config
+    has been retraced — the no-recompilation tests assert this stays at 1
+    across any number of same-config agents."""
+    return _DQN_TRACES[(cfg, bool(use_pallas), "train")]
 
 
 def make_dqn_steps(cfg: DQNConfig, *, use_pallas: bool = False):
-    """Returns (act_fn, train_fn) — both jitted."""
+    """Returns (q_values, train_fn, opt_cfg) — both jitted, cached per
+    (config, use_pallas): N same-config agents share one compilation."""
+    cache_key = (cfg, bool(use_pallas))
+    hit = _DQN_STEPS_CACHE.get(cache_key)
+    if hit is not None:
+        return hit
 
     @jax.jit
     def q_values(params, obs, loc):
+        _DQN_TRACES[(cfg, bool(use_pallas), "q")] += 1
         return dqn_apply(cfg, params, obs, loc)
 
-    opt_cfg = AdamWConfig(
-        lr=cfg.lr, weight_decay=0.0, clip_norm=10.0, warmup_steps=0, total_steps=10**9
-    )
-
-    def loss_fn(params, target_params, batch):
-        q = dqn_apply(cfg, params, batch["obs"], batch["loc"])
-        q_sel = jnp.take_along_axis(q, batch["action"][:, None], 1)
-        q_next = dqn_apply(cfg, target_params, batch["next_obs"], batch["next_loc"])
-        q_next = jax.lax.stop_gradient(q_next)
-        return td_loss(
-            q_sel,
-            q_next,
-            batch["reward"][:, None],
-            batch["done"][:, None],
-            cfg.gamma,
-            use_pallas,
-        )
+    opt_cfg = make_dqn_opt_cfg(cfg)
+    loss_fn = make_dqn_loss_fn(cfg, use_pallas)
 
     @jax.jit
     def train_fn(params, target_params, opt_state, batch):
+        _DQN_TRACES[(cfg, bool(use_pallas), "train")] += 1
         loss, grads = jax.value_and_grad(loss_fn)(params, target_params, batch)
         params, opt_state, _ = adamw_update(opt_cfg, params, grads, opt_state)
         return params, opt_state, loss
 
-    return q_values, train_fn, opt_cfg
+    steps = (q_values, train_fn, opt_cfg)
+    _DQN_STEPS_CACHE[cache_key] = steps
+    return steps
 
 
 @dataclass
 class DQNAgent:
-    """One ADFLL participant (also used standalone for Agents X/Y/M)."""
+    """One ADFLL participant (also used standalone for Agents X/Y/M).
+
+    ``backend="fleet"`` (default): state lives in a fleet slot — either
+    a shared ``engine`` (the ADFLL system passes one so the whole fleet
+    trains in batched flushes) or a private single-slot engine.
+    ``backend="stepwise"``: the legacy one-dispatch-per-step path.
+    """
 
     agent_id: int
     cfg: DQNConfig
     seed: int = 0
     speed: float = 1.0  # relative hardware speed (sim time)
     use_pallas: bool = False
+    backend: str = "fleet"  # "fleet" | "stepwise"
+    engine: Optional[FleetEngine] = None
 
     def __post_init__(self):
-        key = jax.random.PRNGKey(self.seed)
-        self.params = dqn_init(key, self.cfg)
-        self.target_params = self.params
-        self.q_values, self.train_fn, opt_cfg = make_dqn_steps(
+        if self.backend not in ("fleet", "stepwise"):
+            raise ValueError(f"unknown backend: {self.backend!r}")
+        self.q_values, self._train_fn, opt_cfg = make_dqn_steps(
             self.cfg, use_pallas=self.use_pallas
         )
-        self.opt_state = adamw_init(opt_cfg, self.params)
+        if self.backend == "fleet":
+            if self.engine is None:
+                self.engine = FleetEngine(self.cfg, use_pallas=self.use_pallas)
+            elif self.engine.cfg != self.cfg:
+                raise ValueError("shared FleetEngine built for a different config")
+            self.slot = self.engine.add_slot(self.seed)
+        else:
+            self.engine = None
+            key = jax.random.PRNGKey(self.seed)
+            self._params = dqn_init(key, self.cfg)
+            self._target_params = self._params
+            self._opt_state = adamw_init(opt_cfg, self._params)
         self.rng = np.random.default_rng(abs(self.seed + 1000 * self.agent_id))
         self.step_count = 0
         self.personal_erbs: List[ERB] = []
         self.seen_erb_ids: set = set()
         self.seen_snap_ids: set = set()
         self.rounds_done = 0
-        self.sampler = SelectiveReplaySampler(use_pallas=False)
+        self.sampler = SelectiveReplaySampler(use_pallas=self.use_pallas)
+
+    # -- state views (fleet slot or local buffers) ---------------------------
+    @property
+    def params(self):
+        if self.engine is not None:
+            return self.engine.get_params(self.slot)
+        return self._params
+
+    @params.setter
+    def params(self, value):
+        if self.engine is not None:
+            self.engine.set_params(self.slot, value)
+        else:
+            self._params = value
+
+    @property
+    def target_params(self):
+        if self.engine is not None:
+            return self.engine.get_target(self.slot)
+        return self._target_params
+
+    @target_params.setter
+    def target_params(self, value):
+        if self.engine is not None:
+            self.engine.set_target(self.slot, value)
+        else:
+            self._target_params = value
+
+    @property
+    def opt_state(self):
+        if self.engine is not None:
+            return self.engine.get_opt(self.slot)
+        return self._opt_state
+
+    @opt_state.setter
+    def opt_state(self, value):
+        if self.engine is not None:
+            self.engine.set_opt(self.slot, value)
+        else:
+            self._opt_state = value
 
     # -- acting ----------------------------------------------------------
     def epsilon(self) -> float:
@@ -123,9 +202,31 @@ class DQNAgent:
         return erb
 
     # -- learning ------------------------------------------------------------
+    def _submit_steps(
+        self, n_steps: int, current: Optional[ERB], incoming: Sequence[ERB]
+    ) -> TrainFuture:
+        """Plan n minibatches (host index selection, same rng stream as
+        the stepwise path) and queue them as one scan-fused fleet job."""
+        plans = [
+            self.sampler.plan(
+                self.rng,
+                self.cfg.batch_size,
+                current,
+                personal=self.personal_erbs,
+                incoming=incoming,
+            )
+            for _ in range(n_steps)
+        ]
+        self.step_count += n_steps
+        return self.engine.submit(self.slot, plans)
+
     def train_steps(
         self, n_steps: int, current: Optional[ERB], incoming: Sequence[ERB] = ()
     ) -> float:
+        if self.engine is not None:
+            future = self._submit_steps(n_steps, current, incoming)
+            self.engine.flush()
+            return future.loss if future.loss is not None else 0.0
         last = 0.0
         for _ in range(n_steps):
             batch = self.sampler.sample(
@@ -136,12 +237,12 @@ class DQNAgent:
                 incoming=incoming,
             )
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
-            self.params, self.opt_state, loss = self.train_fn(
-                self.params, self.target_params, self.opt_state, batch
+            self._params, self._opt_state, loss = self._train_fn(
+                self._params, self._target_params, self._opt_state, batch
             )
             self.step_count += 1
             if self.step_count % self.cfg.target_update == 0:
-                self.target_params = self.params
+                self._target_params = self._params
             last = float(loss)
         return last
 
@@ -178,6 +279,45 @@ class DQNAgent:
         return len(snaps)
 
     # -- ADFLL round (paper A.3) ----------------------------------------------
+    def begin_round(
+        self,
+        env: LandmarkEnv,
+        task: TaskTag,
+        incoming: Sequence[ERB],
+        *,
+        erb_capacity: int,
+        share_size: int,
+        train_steps: int,
+        collect_episodes: int = 24,
+        share_strategy: str = "uniform",
+    ) -> Tuple[ERB, TrainFuture]:
+        """Collect on the round's task and *submit* the round's training
+        (current + personal + incoming replay) to the fleet engine
+        without forcing execution. Returns (shared ERB, loss future) —
+        the shared slice never depends on the round's own updates, so the
+        system can keep scheduling while jobs accumulate into one batched
+        flush. On the stepwise backend the future resolves immediately."""
+        current = erb_init(
+            erb_capacity,
+            self.cfg.box_size,
+            task=task,
+            source_agent=self.agent_id,
+            round_idx=self.rounds_done,
+        )
+        self.collect(env, current, collect_episodes)
+        for e in incoming:
+            self.seen_erb_ids.add(e.meta.erb_id)
+        if self.engine is not None:
+            future = self._submit_steps(train_steps, current, incoming)
+        else:
+            future = TrainFuture()
+            future.resolve(self.train_steps(train_steps, current, incoming))
+        self.personal_erbs.append(current)
+        self.rounds_done += 1
+        shared = erb_share_slice(current, share_size, self.rng, strategy=share_strategy)
+        self.seen_erb_ids.add(shared.meta.erb_id)
+        return shared, future
+
     def train_round(
         self,
         env: LandmarkEnv,
@@ -192,23 +332,19 @@ class DQNAgent:
     ) -> Tuple[ERB, float]:
         """Collect on the round's task, then train on
         current + personal + incoming replay. Returns (shared ERB, loss)."""
-        current = erb_init(
-            erb_capacity,
-            self.cfg.box_size,
-            task=task,
-            source_agent=self.agent_id,
-            round_idx=self.rounds_done,
+        shared, future = self.begin_round(
+            env,
+            task,
+            incoming,
+            erb_capacity=erb_capacity,
+            share_size=share_size,
+            train_steps=train_steps,
+            collect_episodes=collect_episodes,
+            share_strategy=share_strategy,
         )
-        self.collect(env, current, collect_episodes)
-        for e in incoming:
-            self.seen_erb_ids.add(e.meta.erb_id)
-        loss = self.train_steps(train_steps, current, incoming)
-        self.personal_erbs.append(current)
-        self.rounds_done += 1
-        shared = erb_share_slice(current, share_size, self.rng, strategy=share_strategy)
-        shared.meta = shared.meta  # provenance kept
-        self.seen_erb_ids.add(shared.meta.erb_id)
-        return shared, loss
+        if self.engine is not None:
+            self.engine.flush()
+        return shared, future.loss
 
     # -- evaluation ------------------------------------------------------------
     def evaluate(

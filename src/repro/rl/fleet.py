@@ -1,0 +1,493 @@
+"""Vectorized fleet engine: stacked-agent pytrees, scan-fused training,
+and device-resident replay.
+
+The ADFLL simulator used to execute its fleet one agent at a time: a
+fresh ``jax.jit`` per agent, one dispatch per training step, and a
+blocking ``float(loss)`` host sync after every update — N agents x K
+steps = N*K dispatches per round of rounds. This module turns that into
+*one* compiled program stepping many agents at once:
+
+* :class:`FleetState` — every agent's params / target params / optimizer
+  state / PRNG key / step counter as one stacked pytree with a leading
+  agent axis.
+* :func:`make_fleet_steps` — a module-level, config-keyed cache of the
+  compiled fleet program. The train chunk is ``lax.scan``-fused over the
+  K inner steps of a round and ``vmap``-ed over the agent axis, so a
+  flush of J pending rounds is a single dispatch. Buffers are donated on
+  accelerators (donation is a no-op on CPU).
+* Device-resident replay: ERBs are cached on device as flat ``[size, F]``
+  float32 matrices; the host :class:`~repro.core.replay.SelectiveReplaySampler`
+  shrinks to pool/index *selection* (its ``plan()`` half), and batch
+  materialization happens inside the compiled chunk through the
+  ``replay_gather`` Pallas kernel — one stacked host->device index
+  transfer per scan chunk instead of one batch transfer per step.
+* :class:`FleetEngine` — the host-side orchestrator: slots, lazy job
+  queue, flush-on-read semantics. ``DQNAgent`` is a thin view over a
+  slot; ``ADFLLSystem`` submits rounds and lets reads force batched
+  flushes.
+
+Numerics: the per-slot math of the fleet chunk is bitwise invariant to
+the number of agents batched together (vmap slots are independent and
+XLA:CPU compiles the slot program identically for any leading axis — see
+``tests/test_fleet.py``), which is what makes the fleet-vs-sequential
+bit-equivalence guarantee testable. The *legacy* per-step dispatch path
+(``DQNAgent(backend="stepwise")``) differs from the fused program by
+float-fusion ULPs, so it is kept only as a baseline and for
+benchmarking.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.adfll_dqn import DQNConfig
+from repro.core.erb import ERB, erb_flatten, flat_width
+from repro.kernels.fused_td.ops import td_loss
+from repro.kernels.replay_gather.ops import replay_gather
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.rl.dqn import dqn_apply, dqn_init
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class FleetState:
+    """Stacked per-agent training state, leading axis = agent slot."""
+
+    params: Any  # [N, ...] stacked DQN parameter pytree
+    target: Any  # [N, ...] stacked target-network pytree
+    opt: Any  # [N, ...] stacked AdamW state ({m, v, count})
+    rng: jax.Array  # [N, 2] uint32 per-slot PRNG keys
+    count: jax.Array  # [N] int32 per-slot step counters (target sync)
+
+    def tree_flatten(self):
+        return (self.params, self.target, self.opt, self.rng, self.count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.count.shape[0])
+
+
+def make_dqn_opt_cfg(cfg: DQNConfig) -> AdamWConfig:
+    """The DQN optimizer settings — one definition for the fleet chunk
+    and the legacy per-step path (they must stay numerically twinned)."""
+    return AdamWConfig(
+        lr=cfg.lr, weight_decay=0.0, clip_norm=10.0, warmup_steps=0, total_steps=10**9
+    )
+
+
+def make_dqn_loss_fn(cfg: DQNConfig, use_pallas: bool):
+    """The TD loss on a minibatch dict — shared by the fleet chunk and
+    the legacy per-step path."""
+
+    def loss_fn(params, target_params, batch):
+        q = dqn_apply(cfg, params, batch["obs"], batch["loc"])
+        q_sel = jnp.take_along_axis(q, batch["action"][:, None], 1)
+        q_next = dqn_apply(cfg, target_params, batch["next_obs"], batch["next_loc"])
+        q_next = jax.lax.stop_gradient(q_next)
+        return td_loss(
+            q_sel,
+            q_next,
+            batch["reward"][:, None],
+            batch["done"][:, None],
+            cfg.gamma,
+            use_pallas,
+        )
+
+    return loss_fn
+
+
+class FleetSteps:
+    """The compiled fleet program for one (config, use_pallas) pair.
+
+    ``train_chunk(state_slice, pool, idx) -> (state_slice, losses)`` where
+    ``state_slice`` is a :class:`FleetState` of the participating slots,
+    ``pool`` is the flat ``[R, F]`` device replay pool shared by the
+    chunk, and ``idx`` is the ``[K, N, B]`` int32 global row-index tensor
+    (the one host->device transfer of a flush). ``n_traces`` counts
+    retraces — the no-recompilation tests assert it stays at 1 across
+    same-config agents.
+    """
+
+    def __init__(self, cfg: DQNConfig, use_pallas: bool):
+        self.cfg = cfg
+        self.use_pallas = use_pallas
+        self.opt_cfg = make_dqn_opt_cfg(cfg)
+        self.n_traces = 0
+        box = cfg.box_size
+        obs_f = box[0] * box[1] * box[2]
+        feat = flat_width(box)
+
+        def split_rows(rows):
+            """[B, F] flat rows -> batch dict (FLAT_FIELDS column order)."""
+            b = rows.shape[0]
+            o = 0
+            out = {}
+            for key, width in (
+                ("obs", obs_f),
+                ("loc", 3),
+                ("action", 1),
+                ("reward", 1),
+                ("next_obs", obs_f),
+                ("next_loc", 3),
+                ("done", 1),
+            ):
+                v = rows[:, o : o + width]
+                o += width
+                if key in ("obs", "next_obs"):
+                    v = v.reshape(b, *box)
+                elif key in ("action", "reward", "done"):
+                    v = v[:, 0]
+                if key == "action":
+                    v = v.astype(jnp.int32)
+                out[key] = v
+            return out
+
+        loss_fn = make_dqn_loss_fn(cfg, use_pallas)
+
+        def slot_step(params, target, opt, count, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, target, batch)
+            params, opt, _ = adamw_update(self.opt_cfg, params, grads, opt)
+            count = count + 1
+            sync = (count % cfg.target_update) == 0
+            target = jax.tree_util.tree_map(
+                lambda t, p: jnp.where(sync, p, t), target, params
+            )
+            return params, target, opt, count, loss
+
+        def chunk(state: FleetState, pool, idx):
+            self.n_traces += 1  # trace-time side effect: counts retraces
+
+            def body(carry, idx_k):
+                p, t, o, c = carry
+                n, b = idx_k.shape
+                rows = replay_gather(
+                    pool,
+                    idx_k.reshape(-1),
+                    jnp.ones((n * b,), jnp.float32),
+                    mode="auto",  # compiled kernel on TPU, XLA gather on CPU
+                )
+                batch = jax.vmap(split_rows)(rows.reshape(n, b, feat))
+                p, t, o, c, loss = jax.vmap(slot_step)(p, t, o, c, batch)
+                return (p, t, o, c), loss
+
+            carry = (state.params, state.target, state.opt, state.count)
+            (p, t, o, c), losses = jax.lax.scan(body, carry, idx)
+            rng = jax.vmap(jax.random.fold_in)(state.rng, c)
+            return FleetState(p, t, o, rng, c), losses
+
+        # donated stacked buffers: in-place update on accelerators
+        # (donation is unimplemented on CPU; avoid the warning spam there)
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        self.train_chunk: Callable = jax.jit(chunk, donate_argnums=donate)
+
+    def init_slot(self, seed: int) -> FleetState:
+        """A 1-slot :class:`FleetState` seeded exactly like the legacy
+        ``DQNAgent.__post_init__`` (``dqn_init(PRNGKey(seed))``)."""
+        key = jax.random.PRNGKey(seed)
+        params = dqn_init(key, self.cfg)
+        opt = adamw_init(self.opt_cfg, params)
+        one = lambda x: jax.tree_util.tree_map(lambda v: jnp.asarray(v)[None], x)
+        return FleetState(
+            params=one(params),
+            target=one(params),
+            opt=one(opt),
+            rng=jax.random.fold_in(key, 1)[None],
+            count=jnp.zeros((1,), jnp.int32),
+        )
+
+
+_FLEET_STEPS_CACHE: Dict[Tuple[DQNConfig, bool], FleetSteps] = {}
+
+
+def make_fleet_steps(cfg: DQNConfig, *, use_pallas: bool = False) -> FleetSteps:
+    """Config-keyed cache of the compiled fleet program: N same-config
+    agents (or engines) share one traced/compiled ``train_chunk``."""
+    key = (cfg, bool(use_pallas))
+    steps = _FLEET_STEPS_CACHE.get(key)
+    if steps is None:
+        steps = FleetSteps(cfg, bool(use_pallas))
+        _FLEET_STEPS_CACHE[key] = steps
+    return steps
+
+
+class TrainFuture:
+    """Resolution handle of a submitted training job: ``loss`` is the
+    last-step TD loss once the job's chunk has flushed."""
+
+    __slots__ = ("done", "loss", "_cbs")
+
+    def __init__(self):
+        self.done = False
+        self.loss: Optional[float] = None
+        self._cbs: List[Callable[[float], None]] = []
+
+    def on_done(self, cb: Callable[[float], None]) -> None:
+        if self.done:
+            cb(self.loss)
+        else:
+            self._cbs.append(cb)
+
+    def resolve(self, loss: float) -> None:
+        self.done = True
+        self.loss = float(loss)
+        cbs, self._cbs = self._cbs, []
+        for cb in cbs:
+            cb(self.loss)
+
+
+class _Job:
+    """One pending round of training for a slot: the ERBs it reads and
+    the per-step (erb-position, row) selection, shuffle already applied."""
+
+    __slots__ = ("slot", "n_steps", "erbs", "eidx", "rows", "future")
+
+    def __init__(self, slot, n_steps, erbs, eidx, rows, future):
+        self.slot = slot
+        self.n_steps = n_steps
+        self.erbs: List[ERB] = erbs
+        self.eidx: np.ndarray = eidx  # [K, B] int32 position into self.erbs
+        self.rows: np.ndarray = rows  # [K, B] int32 local row index
+        self.future: TrainFuture = future
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
+
+
+class FleetEngine:
+    """Host-side orchestrator of one stacked fleet.
+
+    Slots are added per agent; training rounds are *submitted* as jobs
+    (pure index plans — no data moves) and executed lazily: any read or
+    write of a slot's state forces a flush, and a flush trains **all**
+    pending jobs in one scan-fused, vmapped dispatch. Futures resolve in
+    submission order, so deferred bookkeeping (round records) lands in
+    the same order as sequential execution.
+    """
+
+    def __init__(
+        self,
+        cfg: DQNConfig,
+        *,
+        use_pallas: bool = False,
+        erb_cache_size: int = 128,
+        erb_cache_bytes: int = 256 * 1024**2,
+        pool_bucket_floor: int = 128,
+    ):
+        self.cfg = cfg
+        self.use_pallas = bool(use_pallas)
+        self.steps = make_fleet_steps(cfg, use_pallas=use_pallas)
+        self.state: Optional[FleetState] = None
+        self.n_slots = 0
+        self.erb_cache_size = erb_cache_size
+        self.erb_cache_bytes = erb_cache_bytes
+        self.pool_bucket_floor = pool_bucket_floor
+        self._feat = flat_width(cfg.box_size)
+        self._pending: List[_Job] = []
+        self._pending_slots: set = set()
+        self._erb_cache: OrderedDict[Tuple[str, int], jax.Array] = OrderedDict()
+        self._erb_cache_nbytes = 0
+        self._views: Dict[int, FleetState] = {}
+        # flush statistics (fleet_throughput reports these)
+        self.n_flushes = 0
+        self.n_steps_trained = 0
+        self.flush_sizes: List[int] = []
+
+    # -- slots ---------------------------------------------------------------
+    def add_slot(self, seed: int) -> int:
+        slot_state = self.steps.init_slot(seed)
+        if self.state is None:
+            self.state = slot_state
+        else:
+            self.flush()  # resident axis changes: retire pending jobs first
+            self.state = jax.tree_util.tree_map(
+                lambda s, x: jnp.concatenate([s, x], axis=0), self.state, slot_state
+            )
+        slot = self.n_slots
+        self.n_slots += 1
+        return slot
+
+    # -- state access (flush-on-read/write) -----------------------------------
+    def ensure_flushed(self, slot: Optional[int] = None) -> None:
+        """Flush all pending jobs iff ``slot`` has one (or any, if None)."""
+        if slot is None:
+            if self._pending:
+                self.flush()
+        elif slot in self._pending_slots:
+            self.flush()
+
+    def _view(self, slot: int) -> FleetState:
+        v = self._views.get(slot)
+        if v is None:
+            v = jax.tree_util.tree_map(lambda x: x[slot], self.state)
+            self._views[slot] = v
+        return v
+
+    def get_params(self, slot: int):
+        self.ensure_flushed(slot)
+        return self._view(slot).params
+
+    def get_target(self, slot: int):
+        self.ensure_flushed(slot)
+        return self._view(slot).target
+
+    def get_opt(self, slot: int):
+        self.ensure_flushed(slot)
+        return self._view(slot).opt
+
+    def _set_field(self, slot: int, field: str, value) -> None:
+        self.ensure_flushed(slot)
+        updated = jax.tree_util.tree_map(
+            lambda s, v: s.at[slot].set(jnp.asarray(v)),
+            getattr(self.state, field),
+            value,
+        )
+        parts = {
+            f: getattr(self.state, f)
+            for f in ("params", "target", "opt", "rng", "count")
+        }
+        parts[field] = updated
+        self.state = FleetState(**parts)
+        self._views.pop(slot, None)
+
+    def set_params(self, slot: int, params) -> None:
+        self._set_field(slot, "params", params)
+
+    def set_target(self, slot: int, target) -> None:
+        self._set_field(slot, "target", target)
+
+    def set_opt(self, slot: int, opt) -> None:
+        self._set_field(slot, "opt", opt)
+
+    # -- replay pool ----------------------------------------------------------
+    def _flat_erb(self, erb: ERB) -> jax.Array:
+        """Device-resident [size, F] matrix of an ERB (LRU-cached; keyed
+        by (erb_id, version) so host-side ring appends invalidate; bounded
+        by entry count *and* total bytes — at paper-scale buffers the byte
+        budget binds first)."""
+        key = (erb.meta.erb_id, erb.version)
+        hit = self._erb_cache.get(key)
+        if hit is not None:
+            self._erb_cache.move_to_end(key)
+            return hit
+        flat = jnp.asarray(erb_flatten(erb))
+        self._erb_cache[key] = flat
+        self._erb_cache_nbytes += flat.nbytes
+        while len(self._erb_cache) > 1 and (
+            len(self._erb_cache) > self.erb_cache_size
+            or self._erb_cache_nbytes > self.erb_cache_bytes
+        ):
+            _, evicted = self._erb_cache.popitem(last=False)
+            self._erb_cache_nbytes -= evicted.nbytes
+        return flat
+
+    # -- job queue ------------------------------------------------------------
+    def submit(self, slot: int, plans: Sequence) -> TrainFuture:
+        """Queue one job: K minibatch :class:`~repro.core.replay.ReplayPlan`s
+        for ``slot``. Returns a future resolving to the last-step loss."""
+        if slot in self._pending_slots:
+            self.flush()  # one in-flight round per slot
+        future = TrainFuture()
+        n_steps = len(plans)
+        if n_steps == 0:
+            future.resolve(0.0)
+            return future
+        batch = plans[0].batch_size
+        erbs: List[ERB] = []
+        positions: Dict[str, int] = {}
+        eidx = np.empty((n_steps, batch), np.int32)
+        rows = np.empty((n_steps, batch), np.int32)
+        for k, plan in enumerate(plans):
+            e_parts, r_parts = [], []
+            for erb, ridx in plan.picks:
+                pos = positions.get(erb.meta.erb_id)
+                if pos is None:
+                    pos = len(erbs)
+                    positions[erb.meta.erb_id] = pos
+                    erbs.append(erb)
+                e_parts.append(np.full(len(ridx), pos, np.int32))
+                r_parts.append(np.asarray(ridx, np.int32))
+            # permuting indices before the gather == permuting rows after
+            eidx[k] = np.concatenate(e_parts)[plan.perm]
+            rows[k] = np.concatenate(r_parts)[plan.perm]
+        self._pending.append(_Job(slot, n_steps, erbs, eidx, rows, future))
+        self._pending_slots.add(slot)
+        return future
+
+    def flush(self) -> None:
+        """Train every pending job in one dispatch (per distinct K)."""
+        if not self._pending:
+            return
+        jobs, self._pending = self._pending, []
+        self._pending_slots = set()
+        # chunk consecutive jobs of equal K so futures resolve in
+        # submission order (one K per ADFLL run; mixed only in tests)
+        i = 0
+        while i < len(jobs):
+            j = i + 1
+            while j < len(jobs) and jobs[j].n_steps == jobs[i].n_steps:
+                j += 1
+            self._flush_group(jobs[i:j])
+            i = j
+
+    def _flush_group(self, jobs: List[_Job]) -> None:
+        n_real = len(jobs)
+        k_steps = jobs[0].n_steps
+        batch = jobs[0].eidx.shape[1]
+        # one shared device pool: the union of every job's ERBs
+        offsets: Dict[str, int] = {}
+        parts: List[jax.Array] = []
+        total = 0
+        for job in jobs:
+            for erb in job.erbs:
+                if erb.meta.erb_id not in offsets:
+                    offsets[erb.meta.erb_id] = total
+                    total += erb.size
+                    parts.append(self._flat_erb(erb))
+        # bucket pool rows and job count (powers of two) to bound the
+        # number of compiled (K, N, R) shape variants
+        r_pad = max(self.pool_bucket_floor, _pow2(total))
+        if r_pad > total:
+            parts.append(jnp.zeros((r_pad - total, self._feat), jnp.float32))
+        pool = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+        n_pad = _pow2(n_real)
+        idx = np.zeros((k_steps, n_pad, batch), np.int32)
+        for jpos, job in enumerate(jobs):
+            base = np.array([offsets[e.meta.erb_id] for e in job.erbs], np.int32)
+            idx[:, jpos, :] = base[job.eidx] + job.rows
+        slots = [job.slot for job in jobs]
+        padded = slots + [slots[0]] * (n_pad - n_real)  # inert duplicates
+        gather = jnp.asarray(padded)
+        sub = jax.tree_util.tree_map(lambda x: jnp.take(x, gather, axis=0), self.state)
+        new, losses = self.steps.train_chunk(sub, pool, jnp.asarray(idx))
+        real = jnp.asarray(slots)
+        self.state = jax.tree_util.tree_map(
+            lambda s, ns: s.at[real].set(ns[:n_real]), self.state, new
+        )
+        self._views.clear()
+        losses_np = np.asarray(losses)  # the flush's one host sync
+        self.n_flushes += 1
+        self.n_steps_trained += n_real * k_steps
+        self.flush_sizes.append(n_real)
+        for jpos, job in enumerate(jobs):
+            job.future.resolve(float(losses_np[-1, jpos]))
+
+
+__all__ = [
+    "FleetEngine",
+    "FleetState",
+    "FleetSteps",
+    "TrainFuture",
+    "make_fleet_steps",
+]

@@ -1,0 +1,276 @@
+"""Fleet engine: bit-equivalence, no-recompilation, device-resident replay.
+
+The load-bearing guarantee: driving ADFLL rounds through the vectorized
+fleet engine — lazily batched, scan-fused, vmapped over agents — changes
+*nothing* about round semantics. Batched flushes produce bit-identical
+params, losses, history, and eval distances to sequential (flush-per-
+round) driving, because the per-slot math of the fleet chunk is bitwise
+invariant to how many agents share a dispatch. The legacy per-step path
+(``backend="stepwise"``) is only fusion-ULPs away and keeps identical
+metadata (arrival order, sim times, replay selection).
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
+from repro.core.erb import TaskTag, erb_add, erb_init
+from repro.core.federated import ADFLLSystem
+from repro.core.replay import SelectiveReplaySampler
+from repro.rl.agent import DQNAgent, dqn_step_traces, make_dqn_steps
+from repro.rl.env import LandmarkEnv
+from repro.rl.fleet import FleetEngine, make_fleet_steps
+from repro.rl.synth import make_volume, paper_eight_tasks, patient_split
+
+DQN = DQNConfig(
+    volume_shape=(16, 16, 16),
+    box_size=(6, 6, 6),
+    conv_features=(4,),
+    hidden=(32,),
+    max_episode_steps=12,
+    batch_size=16,
+    eps_decay_steps=100,
+    target_update=8,  # force target syncs inside the scanned chunk
+)
+
+
+def _sys_cfg(engine: str, **kw) -> ADFLLConfig:
+    return ADFLLConfig(
+        n_agents=2,
+        agent_hub=(0, 1),
+        agent_speed=(1.0, 2.0),
+        rounds=2,
+        train_steps_per_round=12,
+        erb_capacity=512,
+        erb_share_size=64,
+        hub_sync_period=0.25,
+        engine=engine,
+        **kw,
+    )
+
+
+TASKS = paper_eight_tasks()
+TRAIN_P, TEST_P = patient_split(16)
+
+
+def _tree_equal(a, b) -> bool:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+def _tree_maxdiff(a, b) -> float:
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return max(
+        float(np.max(np.abs(np.asarray(x) - np.asarray(y))))
+        for x, y in zip(la, lb)
+    )
+
+
+def _run_system(engine: str, *, planes=("erb",)):
+    sysm = ADFLLSystem(
+        _sys_cfg(engine, share_planes=tuple(planes)), DQN, TASKS, TRAIN_P, seed=0
+    )
+    sysm.run()
+    ev = sysm.evaluate(TASKS[:2], TEST_P)
+    return sysm, ev
+
+
+def _filled_erb(rng: np.random.Generator, capacity: int = 256):
+    erb = erb_init(capacity, DQN.box_size, task=TaskTag("t1", "axial", "HGG"))
+    n = capacity
+    erb_add(
+        erb,
+        {
+            "obs": rng.standard_normal((n, *DQN.box_size)).astype(np.float32),
+            "loc": rng.random((n, 3)).astype(np.float32),
+            "action": rng.integers(0, DQN.n_actions, n).astype(np.int32),
+            "reward": rng.standard_normal(n).astype(np.float32),
+            "next_obs": rng.standard_normal((n, *DQN.box_size)).astype(np.float32),
+            "next_loc": rng.random((n, 3)).astype(np.float32),
+            "done": (rng.random(n) < 0.1).astype(np.float32),
+        },
+    )
+    return erb
+
+
+# -- the tentpole guarantee --------------------------------------------------
+def test_fleet_vs_sequential_bit_equivalence():
+    """Same seeds -> identical params, history, and eval distance for a
+    2-agent ADFLL run, batched-lazy vs flush-per-round sequential."""
+    lazy, ev_lazy = _run_system("fleet")
+    seq, ev_seq = _run_system("fleet-eager")
+    assert any(n > 1 for n in lazy.engine.flush_sizes), "nothing batched"
+    assert all(n == 1 for n in seq.engine.flush_sizes)
+    for aid in lazy.agents:
+        assert _tree_equal(lazy.agents[aid].params, seq.agents[aid].params)
+        assert _tree_equal(
+            lazy.agents[aid].target_params, seq.agents[aid].target_params
+        )
+    assert ev_lazy == ev_seq  # bit-identical greedy rollouts
+    assert [dataclasses.astuple(r) for r in lazy.history] == [
+        dataclasses.astuple(r) for r in seq.history
+    ]
+
+
+def test_fleet_vs_sequential_with_weight_plane():
+    """Staleness-discounted weight mixing rides the same guarantee."""
+    planes = ("erb", "weights")
+    lazy, ev_lazy = _run_system("fleet", planes=planes)
+    seq, ev_seq = _run_system("fleet-eager", planes=planes)
+    assert any(r.n_mixed > 0 for r in lazy.history), "no mixing happened"
+    for aid in lazy.agents:
+        assert _tree_equal(lazy.agents[aid].params, seq.agents[aid].params)
+    assert ev_lazy == ev_seq
+    assert [dataclasses.astuple(r) for r in lazy.history] == [
+        dataclasses.astuple(r) for r in seq.history
+    ]
+
+
+def test_fleet_vs_legacy_stepwise_semantics():
+    """The legacy per-step path differs only by float-fusion ULPs: every
+    RoundRecord field except the loss is identical (arrival order,
+    staleness mixing, sim-time accounting unchanged)."""
+    fleet, _ = _run_system("fleet")
+    legacy, _ = _run_system("stepwise")
+    assert legacy.engine is None
+    ha = [dataclasses.astuple(r) for r in fleet.history]
+    hb = [dataclasses.astuple(r) for r in legacy.history]
+    assert len(ha) == len(hb)
+    for ra, rb in zip(ha, hb):
+        assert ra[:6] == rb[:6] and ra[7:] == rb[7:]  # all but loss exact
+        assert abs(ra[6] - rb[6]) < 1e-4
+    for aid in fleet.agents:
+        assert (
+            _tree_maxdiff(fleet.agents[aid].params, legacy.agents[aid].params) < 1e-5
+        )
+
+
+def test_chunk_is_bitwise_invariant_to_fleet_width():
+    """One batched 3-slot flush == three 1-slot flushes, bit for bit."""
+    data_rng = np.random.default_rng(7)
+    erb = _filled_erb(data_rng)
+    shared = FleetEngine(DQN)
+    solo = [FleetEngine(DQN) for _ in range(3)]
+    sampler = SelectiveReplaySampler()
+    for i in range(3):
+        assert shared.add_slot(seed=i) == i
+        solo[i].add_slot(seed=i)
+    # submit identical plans to the shared fleet and the solo engines
+    futs = []
+    for i in range(3):
+        plan_rng = np.random.default_rng(100 + i)
+        plans = [sampler.plan(plan_rng, DQN.batch_size, erb) for _ in range(9)]
+        futs.append(shared.submit(i, plans))
+    shared.flush()
+    assert shared.flush_sizes == [3]
+    for i in range(3):
+        plan_rng = np.random.default_rng(100 + i)
+        plans = [sampler.plan(plan_rng, DQN.batch_size, erb) for _ in range(9)]
+        fut = solo[i].submit(0, plans)
+        solo[i].flush()
+        assert _tree_equal(shared.get_params(i), solo[i].get_params(0))
+        assert _tree_equal(shared.get_target(i), solo[i].get_target(0))
+        assert _tree_equal(shared.get_opt(i), solo[i].get_opt(0))
+        assert futs[i].loss == fut.loss
+
+
+def test_flush_on_read_and_future_resolution():
+    engine = FleetEngine(DQN)
+    agent = DQNAgent(0, DQN, seed=3, engine=engine)
+    erb = _filled_erb(np.random.default_rng(1))
+    before = agent.params
+    fut = agent._submit_steps(5, erb, ())
+    assert not fut.done
+    seen = []
+    fut.on_done(seen.append)
+    after = agent.params  # read forces the flush
+    assert fut.done and np.isfinite(fut.loss) and seen == [fut.loss]
+    assert not _tree_equal(before, after)
+    assert agent.step_count == 5
+
+
+# -- no recompilation across same-config agents ------------------------------
+def test_make_steps_compile_once_across_agents():
+    # unique config objects so module-level caches/counters start fresh
+    cfg = dataclasses.replace(DQN, eps_decay_steps=997)
+    assert make_dqn_steps(cfg) is make_dqn_steps(cfg)
+    assert make_fleet_steps(cfg) is make_fleet_steps(cfg)
+
+    agents = [DQNAgent(i, cfg, seed=i, backend="stepwise") for i in range(3)]
+    erb = _filled_erb(np.random.default_rng(2))
+    for a in agents:
+        a.train_steps(2, erb)
+    assert dqn_step_traces(cfg) == 1  # one trace serves all three agents
+
+    engine = FleetEngine(cfg)
+    fleet_agents = [DQNAgent(i, cfg, seed=i, engine=engine) for i in range(3)]
+    for _ in range(2):  # two identical batched flushes, one compile
+        for a in fleet_agents:
+            a._submit_steps(4, erb, ())
+        engine.flush()
+    assert engine.steps.n_traces == 1
+    assert make_fleet_steps(cfg).n_traces == 1
+
+
+# -- host planning == host materialization -----------------------------------
+def test_sampler_plan_matches_sample():
+    """plan() + materialize() is the decomposition of sample(): same rng
+    stream, same rows, same shuffle."""
+    rng_data = np.random.default_rng(0)
+    current = _filled_erb(rng_data, 128)
+    personal = [_filled_erb(rng_data, 64)]
+    incoming = [_filled_erb(rng_data, 64), _filled_erb(rng_data, 32)]
+    sampler = SelectiveReplaySampler()
+    r1, r2 = np.random.default_rng(5), np.random.default_rng(5)
+    direct = sampler.sample(r1, 32, current, personal=personal, incoming=incoming)
+    plan = sampler.plan(r2, 32, current, personal=personal, incoming=incoming)
+    via_plan = sampler.materialize(plan)
+    assert set(direct) == set(via_plan)
+    for k in direct:
+        np.testing.assert_array_equal(direct[k], via_plan[k])
+    # both consumed the stream identically
+    assert r1.bit_generator.state == r2.bit_generator.state
+
+
+# -- vectorized observation gather -------------------------------------------
+def _observe_reference(env: LandmarkEnv, locs: np.ndarray) -> np.ndarray:
+    """The pre-vectorization implementation: per-call np.pad + row loop."""
+    b = locs.shape[0]
+    bx, by, bz = env.cfg.box_size
+    half = np.array([bx // 2, by // 2, bz // 2])
+    pad = max(bx, by, bz)
+    vol = np.pad(env.volume, pad)
+    out = np.empty((b, bx, by, bz), np.float32)
+    for i in range(b):
+        c = locs[i] + pad - half
+        out[i] = vol[c[0] : c[0] + bx, c[1] : c[1] + by, c[2] : c[2] + bz]
+    return out
+
+
+def test_observe_matches_loop_reference(rng):
+    vol, lm = make_volume(TaskTag("t2", "axial", "LGG"), 4, n=16)
+    env = LandmarkEnv(vol, lm, DQN)
+    n = env.n
+    locs = np.concatenate(
+        [
+            rng.integers(0, n, size=(32, 3)),
+            np.array([[0, 0, 0], [n - 1, n - 1, n - 1], [0, n - 1, 7]]),
+        ]
+    ).astype(np.int32)
+    want = _observe_reference(env, locs)
+    got = env.observe(locs)
+    assert got.dtype == np.float32 and got.flags["C_CONTIGUOUS"]
+    np.testing.assert_array_equal(got, want)
+    # second call exercises the pad-once cache
+    np.testing.assert_array_equal(env.observe(locs), want)
+
+
+def test_agent_sampler_inherits_use_pallas_flag():
+    agent = DQNAgent(0, DQN, seed=0, backend="stepwise")
+    assert agent.sampler.use_pallas is False
+    agent_p = DQNAgent(1, DQN, seed=1, backend="stepwise", use_pallas=True)
+    assert agent_p.sampler.use_pallas is True
