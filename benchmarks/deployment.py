@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.stats import paired_ttest
+from repro.sweeps.stats import paired_ttest
 from repro import experiments
 
 # label -> (registered scenario, seed offset kept from the classic script)

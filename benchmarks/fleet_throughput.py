@@ -25,7 +25,6 @@ against ``benchmarks/baselines/BENCH_fleet.json``.
 
 from __future__ import annotations
 
-import argparse
 import json
 import time
 
@@ -144,16 +143,14 @@ def run(fast: bool = False, json_path: str | None = None):
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser()
-    ap.add_argument(
-        "--fast", action="store_true", help="reduced sizes/steps (CI sanity)"
+    import sys
+
+    from benchmarks.cli import Gate, bench_main
+
+    sys.exit(
+        bench_main(
+            run,
+            benchmark="fleet_throughput",
+            gates=(Gate("speedup", higher_better=True, tol=0.50, abs_floor=0.5),),
+        )
     )
-    ap.add_argument(
-        "--json",
-        type=str,
-        default=None,
-        metavar="OUT",
-        help="write results as JSON (BENCH_*.json for CI gating)",
-    )
-    args = ap.parse_args()
-    run(fast=args.fast, json_path=args.json)

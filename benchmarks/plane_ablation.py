@@ -20,7 +20,6 @@ Sized to finish in well under 5 minutes on CPU.
 
 from __future__ import annotations
 
-import argparse
 import json
 
 from repro import experiments
@@ -77,17 +76,15 @@ def run(seed: int = 0, fast: bool = False, json_path=None):
 
 
 if __name__ == "__main__":
-    ap = argparse.ArgumentParser()
-    ap.add_argument(
-        "--fast", action="store_true", help="reduced step counts (CI sanity)"
+    import sys
+
+    from benchmarks.cli import Gate, bench_main
+
+    sys.exit(
+        bench_main(
+            run,
+            benchmark="plane_ablation",
+            seed=True,
+            gates=(Gate("mean_dist_err"),),
+        )
     )
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument(
-        "--json",
-        type=str,
-        default=None,
-        metavar="OUT",
-        help="write results as JSON (BENCH_*.json for CI gating)",
-    )
-    args = ap.parse_args()
-    run(seed=args.seed, fast=args.fast, json_path=args.json)

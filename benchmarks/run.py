@@ -20,17 +20,17 @@ Paper mapping:
 
 from __future__ import annotations
 
-import argparse
 import time
+
+from benchmarks.cli import build_parser
 
 
 def main(argv=None) -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument(
-        "--fast", action="store_true", help="reduced step counts (CI sanity)"
-    )
+    ap = build_parser("python -m benchmarks.run")
     ap.add_argument("--only", default=None)
     args = ap.parse_args(argv)
+    if args.json or args.check:
+        ap.error("the harness has no single JSON; use a benchmark's own --json")
 
     from benchmarks import (
         ablation_addition,

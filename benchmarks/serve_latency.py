@@ -1,0 +1,117 @@
+"""Online inference plane: continuous-batching serving latency/throughput.
+
+Two rows over identical synthetic traffic (same seeds, same volumes,
+same fleet), both spanning a mid-session train+publish hot swap:
+
+* ``single``  — ``max_batch=1``: one request in flight at a time, the
+  unbatched reference the hot-swap consistency tests compare against.
+* ``batched`` — ``max_batch=8``: continuous batching over the pow2
+  bucket ladder; new requests join mid-flight, finished ones retire
+  without recompiling.
+
+Reported per row: requests/sec, p50/p99 latency, ticks per request,
+hot-swap count, recompiles after warmup (must be 0 — the acceptance
+trace counter), and served accuracy.  The ``batched`` row adds
+``batch_speedup`` (batched / single requests-per-sec) — the CI-gated
+ratio alongside throughput, machine-speed independent like the fleet
+benchmark's ``speedup``:
+
+    PYTHONPATH=src python -m benchmarks.serve_latency [--fast] [--seed N] \
+        [--json OUT] [--check benchmarks/baselines/BENCH_serve.json]
+
+Gated in CI against ``benchmarks/baselines/BENCH_serve.json`` on
+``requests_per_sec`` (higher better) and ``p99_latency_ms``.
+"""
+
+from __future__ import annotations
+
+import json
+
+import repro.core  # noqa: F401  (resolve the core<->rl import cycle first)
+from repro.configs.adfll_dqn import DQNConfig
+from repro.serve import TrafficSpec, build_session, run_session
+
+CFG = DQNConfig(
+    volume_shape=(16, 16, 16),
+    box_size=(6, 6, 6),
+    conv_features=(4,),
+    hidden=(32,),
+    max_episode_steps=16,
+    batch_size=16,
+    eps_decay_steps=100,
+)
+
+ROW_KEYS = (
+    "n_requests",
+    "requests_per_sec",
+    "p50_latency_ms",
+    "p99_latency_ms",
+    "ticks_per_request",
+    "n_swaps",
+    "recompiles",
+    "mean_dist_err",
+)
+
+
+def _serve_row(max_batch: int, seed: int, fast: bool) -> dict:
+    traffic = TrafficSpec(
+        n_requests=24 if fast else 96,
+        max_batch=max_batch,
+        n_version_slots=2,
+        max_staleness=1,
+        seed=seed,
+    )
+    session = build_session(CFG, n_agents=2, traffic=traffic, seed=seed)
+    report = run_session(
+        session, traffic, n_waves=2, train_steps=10 if fast else 30
+    )
+    s = report.summary()
+    return {k: s[k] for k in ROW_KEYS}
+
+
+def run(seed: int = 0, fast: bool = False, json_path=None):
+    results = {}
+    print("config,req_per_sec,p50_ms,p99_ms,ticks_per_req,swaps,recompiles")
+    for name, max_batch in (("single", 1), ("batched", 8)):
+        row = _serve_row(max_batch, seed, fast)
+        results[name] = row
+        print(
+            f"{name},{row['requests_per_sec']:.1f},{row['p50_latency_ms']:.2f},"
+            f"{row['p99_latency_ms']:.2f},{row['ticks_per_request']:.1f},"
+            f"{row['n_swaps']},{row['recompiles']}"
+        )
+    results["batched"]["batch_speedup"] = (
+        results["batched"]["requests_per_sec"]
+        / results["single"]["requests_per_sec"]
+    )
+    print(f"derived,batch_speedup={results['batched']['batch_speedup']:.2f}")
+    if json_path:
+        payload = {
+            "benchmark": "serve_latency",
+            "seed": seed,
+            "fast": bool(fast),
+            "configs": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    from benchmarks.cli import Gate, bench_main
+
+    sys.exit(
+        bench_main(
+            run,
+            benchmark="serve_latency",
+            seed=True,
+            gates=(
+                # generous bounds: CI machines vary widely in speed
+                Gate("requests_per_sec", higher_better=True, tol=0.60, abs_floor=5.0),
+                Gate("p99_latency_ms", tol=1.50, abs_floor=20.0),
+            ),
+        )
+    )

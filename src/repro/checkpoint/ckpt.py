@@ -3,6 +3,7 @@
 Keys encode the tree path; restore rebuilds against a reference structure
 (so dtype/shape drift fails loudly rather than silently).
 """
+
 from __future__ import annotations
 
 import os
@@ -17,8 +18,7 @@ _SEP = "|"
 def _flatten(tree) -> Dict[str, np.ndarray]:
     out = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in path)
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
         out[key] = np.asarray(leaf)
     return out
 
@@ -36,12 +36,10 @@ def restore_pytree(path: str, like: Any) -> Any:
     flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
     for p, ref in flat_like:
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in p)
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
         arr = data[key]
         if tuple(arr.shape) != tuple(ref.shape):
-            raise ValueError(f"shape mismatch at {key}: "
-                             f"{arr.shape} vs {ref.shape}")
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {ref.shape}")
         leaves.append(arr.astype(ref.dtype))
     struct = jax.tree_util.tree_structure(like)
     return jax.tree_util.tree_unflatten(struct, leaves)

@@ -140,7 +140,7 @@ class Report:
 
     def summary(self) -> Dict[str, Any]:
         """Flat JSON-able metrics (the ``configs`` entry CI gates on)."""
-        return {
+        out = {
             "system": self.system,
             "seed": self.seed,
             "mean_dist_err": self.mean_dist_err,
@@ -162,6 +162,9 @@ class Report:
                 for p in self.eval_curve
             ],
         }
+        if self.extra:
+            out["extra"] = dict(self.extra)
+        return out
 
 
 class ExperimentHooks:

@@ -18,6 +18,7 @@ from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
 from repro.core.experiment import ChurnEvent, HubFailure
 from repro.core.gossip import LinkModel
 from repro.experiments.spec import ScenarioSpec
+from repro.serve.traffic import TrafficSpec
 
 _REGISTRY: Dict[str, ScenarioSpec] = {}
 
@@ -327,6 +328,29 @@ register(
             HubFailure(at=1.5, hub_id=2),
         ),
         fast_train_steps=20,
+    )
+)
+
+# -- online inference plane: train-while-serve session ----------------------
+register(
+    ScenarioSpec(
+        name="serve_localization",
+        system="serve",
+        description="Online inference plane: continuous-batching "
+        "localization serving with a mid-session param hot swap "
+        "(train-while-serve)",
+        task_set="paper8",
+        n_tasks=4,
+        n_patients=16,
+        dqn=_TINY_DQN,
+        sys=_ablation_sys(n_agents=2, rounds=2, train_steps_per_round=20),
+        serve_traffic=TrafficSpec(
+            n_requests=32, max_batch=8, n_version_slots=2, max_staleness=1
+        ),
+        seed=600,
+        eval_patients=2,
+        eval_episodes=2,
+        fast_train_steps=8,
     )
 )
 

@@ -21,7 +21,7 @@ from repro.core.federated import ADFLLSystem, CentralAggregationSystem
 from repro.experiments.protocol import SupportsChurn, System
 from repro.experiments.registry import get_scenario
 from repro.experiments.spec import ScenarioSpec
-from repro.experiments.systems import BaselineSystem
+from repro.experiments.systems import BaselineSystem, ServeSystem
 from repro.rl.synth import all_tasks, paper_eight_tasks, patient_split
 
 SpecLike = Union[str, ScenarioSpec]
@@ -96,6 +96,21 @@ def _build(spec: ScenarioSpec, hooks: Sequence[ExperimentHooks]) -> _Built:
             rounds=sys_cfg.rounds,
             steps=sys_cfg.train_steps_per_round,
             erb_capacity=sys_cfg.erb_capacity,
+            seed=spec.seed,
+        )
+    elif spec.system == "serve":
+        if spec.churn or spec.agent_sites or spec.hub_failures:
+            raise ValueError(
+                f"{spec.name}: {spec.system} supports no churn/sites/hub failures"
+            )
+        system = ServeSystem(
+            spec.dqn,
+            tasks,
+            train_p,
+            traffic=spec.serve_traffic,
+            n_agents=sys_cfg.n_agents,
+            n_waves=max(2, sys_cfg.rounds),  # >= one hot swap per session
+            train_steps=sys_cfg.train_steps_per_round,
             seed=spec.seed,
         )
     else:  # single-agent baselines

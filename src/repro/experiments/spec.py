@@ -21,8 +21,9 @@ from typing import Optional, Tuple
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
 from repro.core.experiment import ChurnEvent, HubFailure
 from repro.core.gossip import LinkModel
+from repro.serve.traffic import TrafficSpec
 
-SYSTEMS = ("adfll", "fedavg", "all_knowing", "partial", "sequential")
+SYSTEMS = ("adfll", "fedavg", "all_knowing", "partial", "sequential", "serve")
 TASK_SETS = ("paper8", "all")
 
 
@@ -47,6 +48,7 @@ class ScenarioSpec:
     hub_sites: Tuple[int, ...] = ()  # per-hub site ids
     intra_link: Optional[LinkModel] = None  # fast same-site link
     inter_link: Optional[LinkModel] = None  # slow cross-site link
+    serve_traffic: Optional[TrafficSpec] = None  # system="serve" workload
     # -- evaluation --------------------------------------------------------
     eval_tasks: Optional[int] = None  # eval on first N tasks (None = all)
     eval_patients: Optional[int] = 4  # held-out patients per task
@@ -65,6 +67,10 @@ class ScenarioSpec:
             raise ValueError("agent_sites given without intra/inter links")
         if self.hub_failures and self.sys.topology == "gossip":
             raise ValueError("hub_failures given but topology='gossip' has no hubs")
+        if self.serve_traffic is not None and self.system != "serve":
+            raise ValueError(
+                f"serve_traffic given but system={self.system!r} is not 'serve'"
+            )
 
     # -- derived variants --------------------------------------------------
     def with_seed(self, seed: int) -> "ScenarioSpec":

@@ -1,4 +1,15 @@
-"""Serving driver: prefill a batch of requests, then batched decode.
+"""Serving CLI: the localization inference plane, plus the legacy
+transformer prefill+decode driver.
+
+Fleet mode — continuous-batching localization serving with train-while-
+serve hot swaps (the production direction; see ``repro.serve``):
+
+    PYTHONPATH=src python -m repro.launch.serve --fleet \
+        [--agents 2] [--requests 64] [--max-batch 8] [--waves 2] \
+        [--rate REQ_PER_S] [--seed 0] [--json OUT]
+
+Transformer mode — one-shot prefill then batched greedy decode of a
+model-zoo config (the original driver; all old flags keep working):
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b-smoke \
         --batch 4 --prompt-len 64 --gen 32
@@ -7,6 +18,7 @@
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -23,15 +35,105 @@ from repro.models.model import (
 from repro.models.sharding import ShardingPolicy
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.launch.serve")
+    mode = ap.add_argument_group("mode (exactly one)")
+    mode.add_argument(
+        "--fleet",
+        action="store_true",
+        help="serve the localization fleet under synthetic traffic",
+    )
+    mode.add_argument("--arch", default=None, help="transformer config to decode")
+    ap.add_argument("--seed", type=int, default=0)
+    # -- transformer-mode flags (unchanged) --------------------------------
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
+    # -- fleet-mode flags --------------------------------------------------
+    ap.add_argument("--agents", type=int, default=2, help="fleet slots served")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument(
+        "--waves",
+        type=int,
+        default=2,
+        help="traffic waves; each later wave follows a train+publish "
+        "round, exercising a param hot-swap",
+    )
+    ap.add_argument(
+        "--rate",
+        type=float,
+        default=None,
+        help="open-loop arrival rate (req/s); default: all at once",
+    )
+    ap.add_argument("--train-steps", type=int, default=20)
+    ap.add_argument("--version-slots", type=int, default=2)
+    ap.add_argument("--max-staleness", type=int, default=1)
+    ap.add_argument("--json", default=None, metavar="OUT")
     args = ap.parse_args(argv)
 
+    if args.fleet == (args.arch is not None):
+        ap.error("exactly one of --fleet or --arch is required")
+    if args.fleet:
+        return _fleet_main(args)
+    return _transformer_main(args)
+
+
+def _fleet_main(args) -> int:
+    """Thin driver over ``repro.serve``: build, serve, report."""
+    from repro.configs.adfll_dqn import DQNConfig
+    from repro.serve import TrafficSpec, build_session, run_session
+
+    cfg = DQNConfig(
+        volume_shape=(16, 16, 16),
+        box_size=(6, 6, 6),
+        conv_features=(4,),
+        hidden=(32,),
+        max_episode_steps=16,
+        batch_size=16,
+        eps_decay_steps=100,
+    )
+    traffic = TrafficSpec(
+        n_requests=args.requests,
+        max_batch=args.max_batch,
+        n_version_slots=args.version_slots,
+        max_staleness=args.max_staleness,
+        rate=args.rate,
+        seed=args.seed,
+    )
+    session = build_session(cfg, n_agents=args.agents, traffic=traffic, seed=args.seed)
+    report = run_session(
+        session, traffic, n_waves=args.waves, train_steps=args.train_steps
+    )
+    s = report.summary()
+    print(
+        f"served {s['n_requests']} requests in {s['wall_time_s']:.2f}s "
+        f"({s['requests_per_sec']:.1f} req/s)"
+    )
+    print(
+        f"latency p50={s['p50_latency_ms']:.1f}ms p99={s['p99_latency_ms']:.1f}ms "
+        f"ticks/req={s['ticks_per_request']:.1f} "
+        f"queue depth mean={s['mean_queue_depth']:.1f}"
+    )
+    print(
+        f"hot swaps={s['n_swaps']} versions_served={s['versions_served']} "
+        f"stall_ticks={s['n_stall_ticks']}"
+    )
+    print(
+        f"compiled buckets={session.service.buckets} "
+        f"recompiles_after_warmup={s['recompiles']}"
+    )
+    if s["mean_dist_err"] is not None:
+        print(f"mean_dist_err={s['mean_dist_err']:.2f} voxels (synthetic landmarks)")
+    if args.json:
+        payload = {"benchmark": "serve", "fast": False, "configs": {"fleet": s}}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {args.json}")
+    return 0 if s["recompiles"] == 0 else 1
+
+
+def _transformer_main(args) -> int:
     cfg = get_config(args.arch)
     policy = ShardingPolicy()
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
@@ -73,23 +175,36 @@ def main(argv=None):
     tok_s = args.gen * b / dt
     print(f"decoded {args.gen} tokens x {b} reqs in {dt:.2f}s ({tok_s:.1f} tok/s)")
     print("sample token ids:", np.concatenate(out_tokens, 1)[0][:16])
+    return 0
 
 
 def _load_prefill(cfg, caches, pre_caches, s):
-    """Copy prefill k/v (and recurrent states) into the decode caches."""
+    """Copy prefill k/v (and recurrent states) into the decode caches.
+
+    Every prefill leaf must either match its decode leaf exactly or be a
+    same-rank prefix of it (kv caches sized for the full conversation);
+    anything else is a wiring bug, and silently keeping the zero decode
+    cache would serve garbage — raise instead.
+    """
 
     def copy_leaf(dst, src):
-        try:
-            if dst.shape == src.shape:
-                return src.astype(dst.dtype)
+        if dst.shape == src.shape:
+            return src.astype(dst.dtype)
+        if dst.ndim == src.ndim and all(
+            sd <= dd for sd, dd in zip(src.shape, dst.shape)
+        ):
             # group-stacked kv: [G, B, S_cache, H, D] <- [G, B, s, H, D]
             sl = tuple(slice(0, d) for d in src.shape)
             return dst.at[sl].set(src.astype(dst.dtype))
-        except Exception:
-            return dst
+        raise ValueError(
+            f"prefill cache leaf {src.shape} does not fit decode cache "
+            f"leaf {dst.shape} (rank or axis mismatch)"
+        )
 
     return jax.tree_util.tree_map(copy_leaf, caches, pre_caches)
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+
+    sys.exit(main())

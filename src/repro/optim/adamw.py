@@ -4,6 +4,7 @@ Optimizer moments are stored in ``opt_dtype`` (f32 by default; bf16 for the
 largest zoo configs where f32 moments would not fit the per-device HBM
 budget — see DESIGN.md §5).
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -29,7 +30,8 @@ def cosine_schedule(cfg: AdamWConfig, step):
     step = step.astype(jnp.float32)
     warm = step / jnp.maximum(1.0, cfg.warmup_steps)
     frac = (step - cfg.warmup_steps) / jnp.maximum(
-        1.0, cfg.total_steps - cfg.warmup_steps)
+        1.0, cfg.total_steps - cfg.warmup_steps
+    )
     frac = jnp.clip(frac, 0.0, 1.0)
     cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
     return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
@@ -37,7 +39,7 @@ def cosine_schedule(cfg: AdamWConfig, step):
 
 def adamw_init(cfg: AdamWConfig, params):
     dt = jnp.dtype(cfg.opt_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
     return {
         "m": jax.tree_util.tree_map(zeros, params),
         "v": jax.tree_util.tree_map(zeros, params),
@@ -47,8 +49,7 @@ def adamw_init(cfg: AdamWConfig, params):
 
 def global_norm(tree):
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
 
 
 def adamw_update(cfg: AdamWConfig, params, grads, opt_state):
@@ -57,8 +58,8 @@ def adamw_update(cfg: AdamWConfig, params, grads, opt_state):
     scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
     lr = cosine_schedule(cfg, count)
     c = count.astype(jnp.float32)
-    bc1 = 1.0 - cfg.b1 ** c
-    bc2 = 1.0 - cfg.b2 ** c
+    bc1 = 1.0 - cfg.b1**c
+    bc2 = 1.0 - cfg.b2**c
     dt = jnp.dtype(cfg.opt_dtype)
 
     def upd(p, g, m, v):
@@ -74,8 +75,10 @@ def adamw_update(cfg: AdamWConfig, params, grads, opt_state):
     flat_g = treedef.flatten_up_to(grads)
     flat_m = treedef.flatten_up_to(opt_state["m"])
     flat_v = treedef.flatten_up_to(opt_state["v"])
-    out = [upd(p, g, m, v) for p, g, m, v in
-           zip(flat_p, flat_g, flat_m, flat_v, strict=True)]
+    out = [
+        upd(p, g, m, v)
+        for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v, strict=True)
+    ]
     new_p = treedef.unflatten([o[0] for o in out])
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])

@@ -9,7 +9,7 @@ side; the Q-network forward is the jitted part).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -19,6 +19,41 @@ from repro.configs.adfll_dqn import DQNConfig
 _DELTA = np.array(
     [[0, 0, 1], [0, 0, -1], [0, 1, 0], [0, -1, 0], [1, 0, 0], [-1, 0, 0]], np.int32
 )
+
+
+def apply_actions(
+    locs: np.ndarray, actions: np.ndarray, n, step_size: int
+) -> np.ndarray:
+    """Move ``locs`` [B,3] by ``actions`` [B] and clip to the volume.
+
+    The landmark-free half of :meth:`LandmarkEnv.step` — the serving
+    plane moves requests through volumes whose landmark it does not
+    know, so the kinematics must not require one. ``n`` is the volume
+    side: a scalar, or [B] per-row sides when the batch mixes volumes.
+    """
+    hi = np.asarray(n, np.int32) - 1
+    if hi.ndim:
+        hi = hi[:, None]
+    return np.clip(locs + step_size * _DELTA[actions], 0, hi).astype(np.int32)
+
+
+def observe_many(
+    envs: Sequence["LandmarkEnv"], locs: np.ndarray
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-request observation batch over *heterogeneous* environments.
+
+    ``envs[i]`` supplies row ``i``'s crop and normalized location —
+    unlike :meth:`LandmarkEnv.observe`, which batches many locations in
+    *one* volume. Returns ``(obs [B, box], norm_loc [B, 3])``; this is
+    the host half of a serving tick (each request owns its own volume).
+    """
+    obs = np.stack(
+        [env.observe(loc[None])[0] for env, loc in zip(envs, locs, strict=True)]
+    )
+    norm = np.stack(
+        [env.norm_loc(loc) for env, loc in zip(envs, locs, strict=True)]
+    ).astype(np.float32)
+    return obs, norm
 
 
 @dataclass
@@ -66,8 +101,7 @@ class LandmarkEnv:
         self, locs: np.ndarray, actions: np.ndarray
     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """-> (new_locs, reward, done)."""
-        step = self.cfg.step_size
-        new = np.clip(locs + step * _DELTA[actions], 0, self.n - 1)
+        new = apply_actions(locs, actions, self.n, self.cfg.step_size)
         r = self.dist(locs) - self.dist(new)
         done = self.dist(new) < 1.5
-        return new.astype(np.int32), r.astype(np.float32), done
+        return new, r.astype(np.float32), done

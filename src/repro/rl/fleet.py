@@ -221,6 +221,65 @@ def make_fleet_steps(cfg: DQNConfig, *, use_pallas: bool = False) -> FleetSteps:
     return steps
 
 
+class ActSteps:
+    """The compiled batched greedy-act program of one config.
+
+    ``act(stacked, slot, obs, loc) -> (actions, q)`` where ``stacked``
+    is a parameter pytree with one leading stacked axis (fleet slots, or
+    the serving plane's flattened version x agent grid), ``slot`` is the
+    per-request [B] int32 row into that axis, and ``obs``/``loc`` are
+    the [B, *box] / [B, 3] observation batch. Each request runs as an
+    independent ``vmap`` lane gathering its own parameter rows, so the
+    per-request math is bitwise invariant to the batch it shares a
+    dispatch with — the same slot-independence that backs the fleet
+    train chunk's N-invariance (``tests/test_fleet.py``) makes batched
+    serving bit-identical to single-request serving.
+
+    ``n_traces`` counts retraces; one compile per distinct batch-size
+    bucket, so a service that pads to pow2 buckets stops retracing once
+    its buckets are warm (asserted by the serve tests and surfaced by
+    ``launch.serve --fleet`` as ``recompiles_after_warmup``).
+    """
+
+    def __init__(self, cfg: DQNConfig):
+        self.cfg = cfg
+        self.n_traces = 0
+
+        def one(stacked, slot, obs, loc):
+            p = jax.tree_util.tree_map(lambda x: x[slot], stacked)
+            return dqn_apply(cfg, p, obs[None], loc[None])[0]
+
+        def act(stacked, slot, obs, loc):
+            self.n_traces += 1  # trace-time side effect: counts retraces
+            q = jax.vmap(one, in_axes=(None, 0, 0, 0))(stacked, slot, obs, loc)
+            return jnp.argmax(q, axis=-1).astype(jnp.int32), q
+
+        self.act: Callable = jax.jit(act)
+
+    def warmup(self, stacked, batch_sizes: Sequence[int]) -> None:
+        """Compile every bucket entrypoint up front (zero-filled inputs;
+        the results are discarded)."""
+        box = self.cfg.box_size
+        for b in batch_sizes:
+            slot = jnp.zeros((b,), jnp.int32)
+            obs = jnp.zeros((b, *box), jnp.float32)
+            loc = jnp.zeros((b, 3), jnp.float32)
+            jax.block_until_ready(self.act(stacked, slot, obs, loc))
+
+
+_ACT_STEPS_CACHE: Dict[DQNConfig, ActSteps] = {}
+
+
+def make_act_steps(cfg: DQNConfig) -> ActSteps:
+    """Config-keyed cache of the batched act program (one compile per
+    batch bucket shared by every service/evaluator of this config)."""
+    steps = _ACT_STEPS_CACHE.get(cfg)
+    if steps is None:
+        steps = ActSteps(cfg)
+        _ACT_STEPS_CACHE[cfg] = steps
+    return steps
+
+
 class TrainFuture:
     """Resolution handle of a submitted training job: ``loss`` is the
     last-step TD loss once the job's chunk has flushed."""
@@ -337,6 +396,13 @@ class FleetEngine:
     def get_params(self, slot: int):
         self.ensure_flushed(slot)
         return self._view(slot).params
+
+    def stacked_params(self):
+        """Flush-on-read snapshot of *every* slot's params as one
+        stacked [N, ...] pytree — the serving plane's publish path
+        (:class:`repro.serve.ParamPublisher` reads this between ticks)."""
+        self.ensure_flushed()
+        return self.state.params
 
     def get_target(self, slot: int):
         self.ensure_flushed(slot)
@@ -485,9 +551,11 @@ class FleetEngine:
 
 
 __all__ = [
+    "ActSteps",
     "FleetEngine",
     "FleetState",
     "FleetSteps",
     "TrainFuture",
+    "make_act_steps",
     "make_fleet_steps",
 ]

@@ -1,0 +1,37 @@
+"""Online inference plane: continuous-batching localization serving.
+
+The repo's first inference-side subsystem: a request queue +
+continuous-batching :class:`LocalizationService` over batch-size-
+bucketed compiled act entrypoints, and a :class:`ParamPublisher` that
+hot-swaps fleet params out of a live training engine between ticks
+(train-while-serve with a bounded-staleness version ring).
+
+    from repro.serve import (
+        LocalizationService, ParamPublisher, ServeRequest,
+        TrafficSpec, synthetic_requests,
+    )
+"""
+
+import repro.core  # noqa: F401  (resolve the core<->rl import cycle first)
+from repro.serve.driver import ServeSession, build_session, run_session
+from repro.serve.publisher import ParamPublisher, ParamVersion
+from repro.serve.queue import RequestQueue, ServeRequest, ServeResult
+from repro.serve.report import RequestRecord, ServeReport
+from repro.serve.service import LocalizationService
+from repro.serve.traffic import TrafficSpec, synthetic_requests
+
+__all__ = [
+    "LocalizationService",
+    "ParamPublisher",
+    "ParamVersion",
+    "RequestQueue",
+    "RequestRecord",
+    "ServeReport",
+    "ServeRequest",
+    "ServeResult",
+    "ServeSession",
+    "TrafficSpec",
+    "build_session",
+    "run_session",
+    "synthetic_requests",
+]

@@ -1,0 +1,132 @@
+"""Train-while-serve session driver.
+
+One reusable loop under ``launch.serve --fleet``, the
+``serve_latency`` benchmark, and the ``serve_localization`` scenario:
+build a fleet, give it a short training warm start, then alternate
+serving traffic waves with training rounds — each round ends in a
+``publish()`` the service hot-swaps in before the next wave, so every
+session exercises the continuous-batching and hot-swap paths together.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.adfll_dqn import DQNConfig
+from repro.core.federated import env_for
+from repro.rl.agent import DQNAgent
+from repro.rl.fleet import FleetEngine
+from repro.rl.synth import paper_eight_tasks, patient_split
+from repro.serve.publisher import ParamPublisher
+from repro.serve.report import ServeReport
+from repro.serve.service import LocalizationService
+from repro.serve.traffic import TrafficSpec, synthetic_requests
+
+
+@dataclass
+class ServeSession:
+    """A live fleet + publisher + service triple."""
+
+    cfg: DQNConfig
+    engine: FleetEngine
+    agents: List[DQNAgent]
+    publisher: ParamPublisher
+    service: LocalizationService
+    tasks: list
+    patients: list
+
+    def train_round(self, round_idx: int, train_steps: int) -> None:
+        """One lifelong round per agent (personal replay, no federation
+        — the serving session exercises the inference plane, not the
+        sharing planes) followed by nothing: callers publish."""
+        for agent in self.agents:
+            task = self.tasks[(round_idx + agent.agent_id) % len(self.tasks)]
+            patient = int(agent.rng.choice(self.patients))
+            env = env_for(task, patient, self.cfg)
+            agent.train_round(
+                env,
+                task,
+                incoming=(),
+                erb_capacity=512,
+                share_size=0,
+                train_steps=train_steps,
+            )
+
+    def publish(self) -> None:
+        self.publisher.publish()
+
+
+def build_session(
+    cfg: DQNConfig,
+    *,
+    n_agents: int,
+    traffic: TrafficSpec,
+    seed: int = 0,
+    tasks: Optional[Sequence] = None,
+    patients: Optional[Sequence[int]] = None,
+    warmup: bool = True,
+) -> ServeSession:
+    """Fleet + publisher + service, params published once (version 0)."""
+    engine = FleetEngine(cfg)
+    agents = [
+        DQNAgent(i, cfg, seed=seed + i, engine=engine) for i in range(n_agents)
+    ]
+    task_list = list(tasks if tasks is not None else paper_eight_tasks())
+    if patients is None:
+        patients, _ = patient_split(16)
+    publisher = ParamPublisher(engine)
+    publisher.publish()
+    service = LocalizationService(
+        cfg,
+        publisher=publisher,
+        max_batch=traffic.max_batch,
+        n_version_slots=traffic.n_version_slots,
+        max_staleness=traffic.max_staleness,
+        warmup=warmup,
+    )
+    return ServeSession(
+        cfg=cfg,
+        engine=engine,
+        agents=agents,
+        publisher=publisher,
+        service=service,
+        tasks=task_list,
+        patients=list(patients),
+    )
+
+
+def run_session(
+    session: ServeSession,
+    traffic: TrafficSpec,
+    *,
+    n_waves: int = 2,
+    train_steps: int = 20,
+    train_rounds_per_wave: int = 1,
+) -> ServeReport:
+    """Alternate traffic waves with train+publish rounds.
+
+    Wave 0 serves on version 0; each later wave is preceded by
+    ``train_rounds_per_wave`` fleet rounds and one publish, so waves
+    1..n serve hot-swapped versions 1..n — train-while-serve in one
+    thread (the simulator has no real concurrency; interleaving at wave
+    granularity is the deterministic equivalent).
+    """
+    requests = synthetic_requests(
+        traffic, session.cfg, n_agents=len(session.agents), tasks=session.tasks
+    )
+    waves = np.array_split(np.arange(len(requests)), max(1, n_waves))
+    round_idx = 0
+    for w, idx in enumerate(waves):
+        if w > 0:
+            for _ in range(train_rounds_per_wave):
+                session.train_round(round_idx, train_steps)
+                round_idx += 1
+            session.publish()
+        session.service.serve([requests[i] for i in idx], rate=traffic.rate)
+    return session.service.report
+
+
+__all__ = ["ServeSession", "build_session", "run_session"]

@@ -109,3 +109,37 @@ ENTRY %main (a: f32[4]) -> f32[4] {
     res = parse_collectives(hlo)
     assert res["all-reduce"] == 4096
     assert res["all-gather"] == 24 * 16 * 128 * 4  # trip-multiplied
+
+
+# ---------------------------------------------------------------------------
+# serving CLI: prefill -> decode cache handoff
+# ---------------------------------------------------------------------------
+
+
+def test_load_prefill_copies_exact_and_prefix_leaves():
+    from repro.launch.serve import _load_prefill
+
+    dst = {
+        "k": jnp.zeros((2, 4, 96, 8, 16), jnp.float32),
+        "state": jnp.zeros((4, 32), jnp.float32),
+    }
+    src = {
+        "k": jnp.ones((2, 4, 64, 8, 16), jnp.float32),
+        "state": jnp.ones((4, 32), jnp.float32),
+    }
+    out = _load_prefill(None, dst, src, s=64)
+    assert float(out["k"][:, :, :64].min()) == 1.0  # prefix copied
+    assert float(out["k"][:, :, 64:].max()) == 0.0  # tail untouched
+    assert float(out["state"].min()) == 1.0  # exact-shape leaf replaced
+
+
+def test_load_prefill_raises_on_mismatched_leaf():
+    from repro.launch.serve import _load_prefill
+
+    dst = {"k": jnp.zeros((2, 4, 96, 8, 16), jnp.float32)}
+    rank = {"k": jnp.ones((4, 64, 8, 16), jnp.float32)}  # rank mismatch
+    with pytest.raises(ValueError, match="does not fit"):
+        _load_prefill(None, dst, rank, s=64)
+    wide = {"k": jnp.ones((2, 4, 64, 8, 32), jnp.float32)}  # axis too wide
+    with pytest.raises(ValueError, match="does not fit"):
+        _load_prefill(None, dst, wide, s=64)

@@ -1,0 +1,366 @@
+"""Online inference plane: continuous batching, hot swaps, bit-identity.
+
+The load-bearing guarantee mirrors the fleet engine's: batching changes
+*nothing* about what a request computes. Every request runs as an
+independent vmap lane gathering its own version-ring row, so a
+continuous batch of requests — admitted and retired at different ticks,
+across a param hot swap — produces final voxels bit-identical to
+serving each request alone (``max_batch=1``) on the version it pinned.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import repro.core  # noqa: F401  (resolve the core<->rl import cycle first)
+from repro.configs.adfll_dqn import DQNConfig
+from repro.rl.env import LandmarkEnv, apply_actions
+from repro.rl.fleet import FleetEngine
+from repro.serve import (
+    LocalizationService,
+    ParamPublisher,
+    ServeReport,
+    TrafficSpec,
+    build_session,
+    run_session,
+    synthetic_requests,
+)
+from repro.serve.queue import RequestQueue, _Ticket
+from repro.serve.report import RequestRecord
+
+CFG = DQNConfig(
+    volume_shape=(16, 16, 16),
+    box_size=(6, 6, 6),
+    conv_features=(4,),
+    hidden=(32,),
+    max_episode_steps=12,
+    batch_size=16,
+    eps_decay_steps=100,
+)
+
+
+def _stacked_params(n_agents: int, seed: int = 0):
+    """A hand-built published pytree: per-seed inits stacked [N, ...]."""
+    import jax
+
+    from repro.rl.dqn import dqn_init
+
+    params = [dqn_init(jax.random.PRNGKey(seed + i), CFG) for i in range(n_agents)]
+    return jax.tree_util.tree_map(lambda *xs: np.stack(xs), *params)
+
+
+def _requests(n: int, seed: int = 0, n_agents: int = 2):
+    spec = TrafficSpec(n_requests=n, seed=seed)
+    return synthetic_requests(spec, CFG, n_agents=n_agents)
+
+
+def _final_locs(service: LocalizationService, ids):
+    return {i: tuple(int(v) for v in service.results[i].final_loc) for i in ids}
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+
+def test_service_completes_all_requests_batched():
+    params = _stacked_params(2)
+    service = LocalizationService(CFG, params=params, max_batch=8)
+    requests = _requests(20)
+    ids = [service.submit(r) for r in requests]
+    report = service.drain()
+    assert report.n_requests == 20
+    assert sorted(service.results) == sorted(ids)
+    for r in report.requests:
+        assert 1 <= r.n_ticks <= CFG.max_episode_steps
+        assert r.dist_err is not None  # synthetic traffic carries landmarks
+    # continuous batching really batched: fewer ticks than serial sum
+    assert report.n_ticks < sum(r.n_ticks for r in report.requests)
+
+
+def test_no_recompiles_after_warmup():
+    params = _stacked_params(2)
+    service = LocalizationService(CFG, params=params, max_batch=8)
+    traces_after_warmup = service.steps.n_traces
+    service.serve(_requests(20))
+    assert service.steps.n_traces == traces_after_warmup
+    assert service.report.recompiles == 0
+    # only pow2 buckets were dispatched
+    assert set(service.report.batch_sizes) <= set(service.buckets)
+
+
+def test_bucket_ladder_is_pow2():
+    params = _stacked_params(1, seed=3)
+    service = LocalizationService(CFG, params=params, max_batch=6, warmup=False)
+    assert service.buckets == [1, 2, 4, 8]
+
+
+def test_batched_results_bit_identical_to_unbatched():
+    params = _stacked_params(2)
+    requests = _requests(12)
+    batched = LocalizationService(CFG, params=params, max_batch=8)
+    ids_b = [batched.submit(r) for r in requests]
+    batched.drain()
+    single = LocalizationService(CFG, params=params, max_batch=1)
+    ids_s = [single.submit(r) for r in requests]
+    single.drain()
+    locs_b = _final_locs(batched, ids_b)
+    locs_s = _final_locs(single, ids_s)
+    for ib, i_s in zip(ids_b, ids_s, strict=True):
+        assert locs_b[ib] == locs_s[i_s]
+        assert batched.results[ib].n_ticks == single.results[i_s].n_ticks
+
+
+# ---------------------------------------------------------------------------
+# hot swap
+# ---------------------------------------------------------------------------
+
+
+def _two_version_publisher(n_agents: int = 2):
+    """A publisher whose publishes alternate two distinct param sets."""
+    versions = [_stacked_params(n_agents, seed=0), _stacked_params(n_agents, seed=9)]
+    state = {"i": 0}
+
+    def source():
+        p = versions[state["i"] % 2]
+        state["i"] += 1
+        return p
+
+    return ParamPublisher(source), versions
+
+
+def test_hot_swap_consistency_across_versions():
+    """A request admitted before a swap completes on the old version; one
+    admitted after uses the new one; both match unbatched serving."""
+    publisher, versions = _two_version_publisher()
+    service = LocalizationService(
+        CFG, publisher=publisher, max_batch=4, n_version_slots=2, max_staleness=1
+    )
+    requests = _requests(8)
+    pre, post = requests[:4], requests[4:]  # one full batch each
+
+    ids_pre = [service.submit(r) for r in pre]
+    # admit + advance the pre-swap cohort one tick, then publish v1:
+    # the cohort stays pinned to v0 while v1 serves later admissions
+    service.tick()
+    publisher.publish()
+    ids_post = [service.submit(r) for r in post]
+    report = service.drain()
+
+    assert report.n_swaps == 1
+    for i in ids_pre:
+        assert service.results[i].version == 0
+    for i in ids_post:
+        assert service.results[i].version == 1
+    assert report.versions_served == {0: 4, 1: 4}
+
+    # bit-identity: each cohort matches single-request serving on the
+    # params of the version it pinned
+    cohorts = ((ids_pre, pre, versions[0]), (ids_post, post, versions[1]))
+    for cohort, reqs, params in cohorts:
+        ref = LocalizationService(CFG, params=params, max_batch=1)
+        ref_ids = [ref.submit(r) for r in reqs]
+        ref.drain()
+        got = _final_locs(service, cohort)
+        want = _final_locs(ref, ref_ids)
+        for i_mix, i_ref in zip(cohort, ref_ids, strict=True):
+            assert got[i_mix] == want[i_ref]
+
+
+def test_swap_deferred_while_target_slot_busy():
+    """With a 1-slot ring, a swap cannot land while any request is in
+    flight — and the staleness bound then stalls admission."""
+    publisher, _ = _two_version_publisher()
+    service = LocalizationService(
+        CFG, publisher=publisher, max_batch=2, n_version_slots=1, max_staleness=0
+    )
+    for r in _requests(6):
+        service.submit(r)
+    service.tick()  # two requests now in flight on v0
+    publisher.publish()  # v1: can't land, slot 0 is busy
+    assert service.sync_params() is False
+    assert service.report.n_deferred_swaps >= 1
+    assert service.current_version == 0
+    report = service.drain()
+    # admission paused until the in-flight pair retired, then v1 landed
+    assert report.n_stall_ticks >= 1
+    assert report.n_swaps == 1
+    assert set(report.versions_served) == {0, 1}
+
+
+def test_stale_or_duplicate_publish_rejected():
+    params = _stacked_params(2)
+    publisher = ParamPublisher(lambda: params)
+    service = LocalizationService(CFG, publisher=publisher, warmup=False)
+    pv0 = publisher.latest
+    assert service.install(pv0) is False  # duplicate of the installed v0
+    assert service.report.n_swaps == 0
+    pv1 = publisher.publish()
+    assert service.install(pv1) is True
+    assert service.current_version == 1
+
+
+def test_agent_mismatch_rejected():
+    service = LocalizationService(CFG, params=_stacked_params(2), warmup=False)
+    other = ParamPublisher(lambda: _stacked_params(3))
+    with pytest.raises(ValueError, match="agents"):
+        service.install(other.publish())
+
+
+# ---------------------------------------------------------------------------
+# publisher
+# ---------------------------------------------------------------------------
+
+
+def test_publisher_monotonic_versions():
+    publisher = ParamPublisher(lambda: _stacked_params(2))
+    assert publisher.version == -1
+    assert [publisher.publish().version for _ in range(3)] == [0, 1, 2]
+    assert publisher.latest.version == 2
+
+
+def test_publisher_flush_on_read(rng):
+    """Publishing mid-round forces the engine flush: the snapshot equals
+    get_params after an explicit flush, never a stale pre-job copy."""
+    import jax
+
+    from repro.core.erb import TaskTag, erb_add, erb_init
+    from repro.rl.agent import DQNAgent
+
+    engine = FleetEngine(CFG)
+    agent = DQNAgent(0, CFG, seed=0, engine=engine)
+    erb = erb_init(64, CFG.box_size, task=TaskTag("t1", "axial", "HGG"))
+    n = 64
+    erb_add(
+        erb,
+        {
+            "obs": rng.standard_normal((n, *CFG.box_size)).astype(np.float32),
+            "loc": rng.random((n, 3)).astype(np.float32),
+            "action": rng.integers(0, CFG.n_actions, n).astype(np.int32),
+            "reward": rng.standard_normal(n).astype(np.float32),
+            "next_obs": rng.standard_normal((n, *CFG.box_size)).astype(np.float32),
+            "next_loc": rng.random((n, 3)).astype(np.float32),
+            "done": np.zeros(n, np.float32),
+        },
+    )
+    publisher = ParamPublisher(engine)
+    v0 = publisher.publish()
+    plans = [agent.sampler.plan(agent.rng, CFG.batch_size, erb) for _ in range(4)]
+    engine.submit(agent.slot, plans)  # pending, not yet flushed
+    v1 = publisher.publish()  # must flush before snapshotting
+    leaves0 = jax.tree_util.tree_leaves(v0.params)
+    leaves1 = jax.tree_util.tree_leaves(v1.params)
+    assert any(
+        not np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(leaves0, leaves1, strict=True)
+    )
+    assert v1.train_steps == 4
+
+
+# ---------------------------------------------------------------------------
+# queue / report / env helpers
+# ---------------------------------------------------------------------------
+
+
+def test_queue_fifo_never_jumps_unarrived_head():
+    q = RequestQueue()
+    reqs = _requests(3)
+    t = [_Ticket(i, r, CFG) for i, r in enumerate(reqs)]
+    q.push(t[0], not_before=100.0)  # head not yet arrived
+    q.push(t[1], not_before=0.0)
+    q.push(t[2], not_before=0.0)
+    assert q.pop_ready(now=1.0) is None  # FIFO: no jumping the head
+    assert len(q) == 3
+    assert q.pop_ready(now=200.0) is t[0]
+    assert q.pop_ready(now=200.0) is t[1]
+    assert q.pop_ready(now=200.0) is t[2]
+    assert q.pop_ready(now=200.0) is None
+
+
+def test_report_percentiles_and_summary():
+    report = ServeReport(wall_time_s=2.0)
+    for i, lat in enumerate((0.010, 0.020, 0.030, 0.040)):
+        report.requests.append(
+            RequestRecord(
+                request_id=i,
+                agent_id=0,
+                version=0,
+                n_ticks=5,
+                latency_s=lat,
+                queued_s=0.0,
+                dist_err=float(i),
+            )
+        )
+    assert report.percentile_ms(50) == pytest.approx(25.0)
+    s = report.summary()
+    assert s["n_requests"] == 4
+    assert s["requests_per_sec"] == pytest.approx(2.0)
+    assert s["p50_latency_ms"] == pytest.approx(25.0)
+    assert s["mean_dist_err"] == pytest.approx(1.5)
+    assert s["recompiles"] == 0
+
+
+def test_apply_actions_matches_env_step():
+    rng = np.random.default_rng(1)
+    vol = rng.standard_normal((16, 16, 16)).astype(np.float32)
+    env = LandmarkEnv(vol, np.array([8.0, 8.0, 8.0], np.float32), CFG)
+    locs = rng.integers(0, 16, size=(9, 3)).astype(np.int32)
+    actions = rng.integers(0, CFG.n_actions, size=9).astype(np.int32)
+    new, _, _ = env.step(locs, actions)
+    np.testing.assert_array_equal(
+        new, apply_actions(locs, actions, env.n, CFG.step_size)
+    )
+    # per-row volume sides clip rows independently
+    edge = np.array([[15, 15, 15]], np.int32)
+    out = apply_actions(edge, np.array([0]), np.array([16]), 1)
+    np.testing.assert_array_equal(out, edge)  # clipped at n-1
+
+
+def test_oscillation_termination():
+    """A ticket retires the moment the rollout revisits a voxel."""
+    req = _requests(1)[0]
+    ticket = _Ticket(0, req, CFG)
+    start = ticket.loc.copy()
+    step = np.array([0, 0, CFG.step_size], np.int32)
+    assert ticket.advance(start + step) is False
+    assert ticket.advance(start) is True  # revisit -> oscillation
+    assert ticket.n_ticks == 2
+
+
+# ---------------------------------------------------------------------------
+# train-while-serve session + scenario integration
+# ---------------------------------------------------------------------------
+
+
+def test_run_session_serves_across_a_swap():
+    traffic = TrafficSpec(n_requests=12, max_batch=4, seed=2)
+    session = build_session(CFG, n_agents=2, traffic=traffic, seed=2)
+    report = run_session(session, traffic, n_waves=2, train_steps=5)
+    assert report.n_requests == 12
+    assert report.n_swaps == 1
+    assert report.recompiles == 0
+    assert set(report.versions_served) == {0, 1}
+
+
+def test_serve_scenario_registered():
+    from repro.experiments import get_scenario, run
+
+    spec = get_scenario("serve_localization")
+    assert spec.system == "serve"
+    assert spec.serve_traffic is not None
+    fast = dataclasses.replace(
+        spec.fast(), serve_traffic=TrafficSpec(n_requests=8, max_batch=4)
+    )
+    r = run(fast, fast=True)
+    assert np.isfinite(r.mean_dist_err)
+    assert r.extra["serve"]["recompiles"] == 0
+    assert r.extra["serve"]["n_swaps"] >= 1
+    assert "Serve" in r.task_errors
+
+
+def test_serve_traffic_requires_serve_system():
+    from repro.experiments.spec import ScenarioSpec
+
+    with pytest.raises(ValueError, match="serve_traffic"):
+        ScenarioSpec(name="x", system="adfll", serve_traffic=TrafficSpec())
