@@ -7,26 +7,61 @@ schedule inside the ``churn_addition_fig4`` scenario (timed
 only runs the scenario and prints its evaluation curve.  Expected
 qualitative result: average error decreases phase over phase, and newly
 added agents catch up via the hub database.
+
+    PYTHONPATH=src python -m benchmarks.ablation_addition [--fast] \\
+        [--seed N] [--json OUT] [--check BASELINE]
+
+One ``phaseN`` row per evaluation-curve point; ``--check`` gates each
+phase's ``mean_err``.
 """
 
 from __future__ import annotations
+
+import json
 
 from repro import experiments
 
 SCENARIO = "churn_addition_fig4"
 
 
-def run(seed: int = 0, fast: bool = False):
+def run(seed: int = 0, fast: bool = False, json_path=None):
     report = experiments.run(SCENARIO, fast=fast, seed=seed)
+    results = {}
     for i, p in enumerate(report.eval_curve):
+        results[f"phase{i + 1}"] = {
+            "t": p.t,
+            "n_agents": p.n_agents,
+            "mean_err": p.mean_err,
+        }
         print(
             f"phase {i + 1}: t={p.t:.2f} agents={p.n_agents} "
             f"avg_err={p.mean_err:.2f}"
         )
     errs = [p.mean_err for p in report.eval_curve]
     print("derived,errors_per_phase=" + ";".join(f"{e:.2f}" for e in errs))
-    return errs
+    if json_path:
+        payload = {
+            "benchmark": "ablation_addition",
+            "seed": seed,
+            "fast": bool(fast),
+            "configs": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    return results
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    from benchmarks.cli import Gate, bench_main
+
+    sys.exit(
+        bench_main(
+            run,
+            benchmark="ablation_addition",
+            seed=True,
+            gates=(Gate("mean_err", tol=0.35, abs_floor=1.0),),
+        )
+    )

@@ -13,9 +13,17 @@ is scenario selection + reporting only.
 
 Validation target (DESIGN.md §6): the *orderings* —
 best-ADFLL <= AgentX < AgentM << AgentY — and significance vs Agent Y.
+
+    PYTHONPATH=src python -m benchmarks.deployment [--fast] [--seed N] \\
+        [--json OUT] [--check BASELINE]
+
+One row per table column (``AgentX`` ... ``Agent4``); ``--check`` gates
+each column's ``mean_dist_err``.
 """
 
 from __future__ import annotations
+
+import json
 
 import numpy as np
 
@@ -30,7 +38,7 @@ BASELINES = {
 }
 
 
-def run(seed: int = 0, fast: bool = False):
+def run(seed: int = 0, fast: bool = False, json_path=None):
     adfll = experiments.run("paper_fig2", fast=fast, seed=seed)
 
     table = {}
@@ -58,8 +66,30 @@ def run(seed: int = 0, fast: bool = False):
         f"rounds={adfll.n_rounds},"
         f"erbs_in_system={adfll.records_known.get('erb', 0)}"
     )
-    return means, best_adfll
+    results = {n: {"mean_dist_err": means[n]} for n in names}
+    if json_path:
+        payload = {
+            "benchmark": "deployment",
+            "seed": seed,
+            "fast": bool(fast),
+            "configs": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    return results
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    from benchmarks.cli import Gate, bench_main
+
+    sys.exit(
+        bench_main(
+            run,
+            benchmark="deployment",
+            seed=True,
+            gates=(Gate("mean_dist_err", tol=0.35, abs_floor=1.0),),
+        )
+    )

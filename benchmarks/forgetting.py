@@ -7,9 +7,17 @@ lifelong) and once WITHOUT (plain fine-tuning) — and report the error
 regression on task A.
 
     forgetting = err_A(after B) - err_A(after A)
+
+    PYTHONPATH=src python -m benchmarks.forgetting [--fast] [--seed N] \\
+        [--json OUT] [--check BASELINE]
+
+Two rows (``no_replay`` / ``with_replay``), each averaging the drift
+over ``seed`` and ``seed + 1``; ``--check`` gates ``forgetting``.
 """
 
 from __future__ import annotations
+
+import json
 
 import numpy as np
 
@@ -53,31 +61,51 @@ def _train_task_chain(replay: bool, steps: int, seed: int = 0, n_tasks: int = 4)
     return err_0_after_first, err_0_final
 
 
-def run(fast: bool = False, seeds=(0, 1)):
+def run(seed: int = 0, fast: bool = False, json_path=None):
     steps = 20 if fast else 80
     n_tasks = 2 if fast else 4
-    rows = []
+    seeds = (seed, seed + 1)
+    results = {}
     for replay in (False, True):
         f = []
         for s in seeds:
             before, after = _train_task_chain(replay, steps, seed=s, n_tasks=n_tasks)
             f.append(after - before)
         tag = "with_replay" if replay else "no_replay"
-        rows.append((tag, float(np.mean(f))))
         drift = float(np.mean(f))
+        results[tag] = {"forgetting": drift}
         per_seed = [round(x, 2) for x in f]
         print(
             f"{tag}: task-0 error drift after {n_tasks}-task chain = "
             f"{drift:+.2f} (per-seed: {per_seed})"
         )
-    no_r = dict(rows)["no_replay"]
-    with_r = dict(rows)["with_replay"]
     print(
-        f"derived,forgetting_no_replay={no_r:.2f},"
-        f"forgetting_with_replay={with_r:.2f}"
+        f"derived,forgetting_no_replay={results['no_replay']['forgetting']:.2f},"
+        f"forgetting_with_replay={results['with_replay']['forgetting']:.2f}"
     )
-    return rows
+    if json_path:
+        payload = {
+            "benchmark": "forgetting",
+            "seed": seed,
+            "fast": bool(fast),
+            "configs": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    return results
 
 
 if __name__ == "__main__":
-    run()
+    import sys
+
+    from benchmarks.cli import Gate, bench_main
+
+    sys.exit(
+        bench_main(
+            run,
+            benchmark="forgetting",
+            seed=True,
+            gates=(Gate("forgetting", tol=0.50, abs_floor=1.0),),
+        )
+    )

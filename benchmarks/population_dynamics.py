@@ -1,0 +1,92 @@
+"""Population dynamics: the trace-driven fleet scenarios end to end.
+
+One row per registry population scenario — ``hospital_diurnal`` (two
+sites on opposite day/night shifts, availability-aware gossip),
+``flash_crowd`` (hundreds of agents joining over a staggered mid-run
+wave), ``long_tail_stragglers`` (lognormal step-time tail plus
+heavy-tailed connectivity sessions).  Reported per row: mean distance
+error under churn, simulated makespan, rounds, fleet availability (the
+fraction of agent-time spent online), availability-weighted rounds/sec
+(rounds per unit of *online* agent-time — pacing that does not reward
+simply keeping agents offline), and the availability-timeline digest
+(bit-reproducibility at a glance):
+
+    PYTHONPATH=src python -m benchmarks.population_dynamics [--fast] \\
+        [--seed N] [--json OUT] \\
+        [--check benchmarks/baselines/BENCH_population.json]
+
+Gated in CI against ``benchmarks/baselines/BENCH_population.json`` on
+``mean_dist_err`` and ``makespan``.
+"""
+
+from __future__ import annotations
+
+import json
+
+import repro.core  # noqa: F401  (resolve the core<->rl import cycle first)
+from repro import experiments
+
+SCENARIOS = ("hospital_diurnal", "flash_crowd", "long_tail_stragglers")
+
+
+def _row(name: str, seed: int, fast: bool) -> dict:
+    report = experiments.run(name, fast=fast, seed=seed)
+    pop = report.extra["population"]
+    online_time = float(pop["online_time"])
+    return {
+        "mean_dist_err": report.mean_dist_err,
+        "makespan": report.makespan,
+        "n_rounds": report.n_rounds,
+        "n_agents": pop["n_agents"],
+        "n_departed": pop["n_departed"],
+        "n_toggles": pop["n_toggles"],
+        "availability": pop["availability"],
+        "aw_rounds_per_time": (
+            report.n_rounds / online_time if online_time > 0 else 0.0
+        ),
+        "timeline_digest": pop["timeline_digest"],
+    }
+
+
+def run(seed: int = 0, fast: bool = False, json_path=None):
+    results = {}
+    print("config,mean_dist_err,makespan,rounds,agents,avail,aw_rounds_per_time")
+    for name in SCENARIOS:
+        row = _row(name, seed, fast)
+        results[name] = row
+        print(
+            f"{name},{row['mean_dist_err']:.3f},{row['makespan']:.2f},"
+            f"{row['n_rounds']},{row['n_agents']},{row['availability']:.3f},"
+            f"{row['aw_rounds_per_time']:.3f}"
+        )
+    if json_path:
+        payload = {
+            "benchmark": "population_dynamics",
+            "seed": seed,
+            "fast": bool(fast),
+            "configs": results,
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"wrote {json_path}")
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    from benchmarks.cli import Gate, bench_main
+
+    sys.exit(
+        bench_main(
+            run,
+            benchmark="population_dynamics",
+            seed=True,
+            gates=(
+                Gate("mean_dist_err", tol=0.35, abs_floor=1.0),
+                # simulated time: deterministic given the seed, so a tight
+                # relative bound catches scheduling regressions
+                Gate("makespan", tol=0.15, abs_floor=0.5),
+            ),
+        )
+    )

@@ -13,6 +13,8 @@ Paper mapping:
   plane_ablation    -> beyond-paper: plane_* scenarios (ERB/weights/hybrid)
   gossip_ablation   -> beyond-paper: topo_* scenarios, bytes-on-wire per
                        plane, compressed weight plane
+  population        -> beyond-paper: trace-driven fleet scenarios
+                       (hospital_diurnal / flash_crowd / stragglers)
   kernels           -> framework kernel microbenches (Pallas vs oracle)
   roofline          -> EXPERIMENTS.md §Roofline source table (reads the
                        dry-run JSONs; run repro.launch.dryrun --all first)
@@ -40,6 +42,7 @@ def main(argv=None) -> None:
         gossip_ablation,
         kernels,
         plane_ablation,
+        population_dynamics,
         roofline,
     )
 
@@ -50,6 +53,7 @@ def main(argv=None) -> None:
         ("plane_ablation", lambda: plane_ablation.run(fast=args.fast)),
         ("gossip_ablation", lambda: gossip_ablation.run(fast=args.fast)),
         ("forgetting_ablation", lambda: forgetting.run(fast=args.fast)),
+        ("population_dynamics", lambda: population_dynamics.run(fast=args.fast)),
         ("kernels_micro", kernels.run),
         ("roofline_table", roofline.run),
     ]

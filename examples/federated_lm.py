@@ -9,6 +9,7 @@ saw natively, and protects against forgetting its own style.
 
     PYTHONPATH=src python examples/federated_lm.py
 """
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -21,8 +22,7 @@ from repro.data.pipeline import TokenStreamConfig, lm_task_erb
 from repro.launch.specs import opt_cfg_for
 from repro.models.model import init_train_state, make_loss_fn, make_train_step
 
-ARCHS = ["h2o-danube-3-4b-smoke", "qwen3-moe-235b-a22b-smoke",
-         "xlstm-125m-smoke"]
+ARCHS = ["h2o-danube-3-4b-smoke", "qwen3-moe-235b-a22b-smoke", "xlstm-125m-smoke"]
 VOCAB = 512
 SEQ = 64
 STEPS_PER_ROUND = 25
@@ -36,20 +36,17 @@ def build_agent(arch, seed):
     loss_fn = jax.jit(make_loss_fn(cfg))
 
     def np_step(state, batch):
-        batch = {k: jnp.asarray(v % cfg.vocab_size)
-                 for k, v in batch.items()}
+        batch = {k: jnp.asarray(v % cfg.vocab_size) for k, v in batch.items()}
         return raw_step(state, batch)
 
-    tr = LifelongTrainer(np_step, state, batch_size=8,
-                         rng=np.random.default_rng(seed))
+    tr = LifelongTrainer(np_step, state, batch_size=8, rng=np.random.default_rng(seed))
     return cfg, tr, loss_fn
 
 
 def eval_style(cfg, loss_fn, params, style):
     sc = TokenStreamConfig(VOCAB, SEQ, 16, seed=999, n_styles=4)
     erb = lm_task_erb(sc, style=style, n_batches=1)
-    batch = {k: jnp.asarray(v % cfg.vocab_size)
-             for k, v in erb.data.items()}
+    batch = {k: jnp.asarray(v % cfg.vocab_size) for k, v in erb.data.items()}
     _, m = loss_fn(params, batch)
     return float(m["loss"])
 
@@ -75,19 +72,26 @@ def main():
         incoming = net.agent_pull(i, tr.seen_erb_ids)
         erb = lm_task_erb(sc, style=i, n_batches=8, source_agent=i)
         tr.steps(STEPS_PER_ROUND, erb, incoming=incoming)
-        print(f"  agent{i} ({cfg.name}): learned from {len(incoming)} "
-              f"foreign ERBs")
+        print(
+            f"  agent{i} ({cfg.name}): learned from {len(incoming)} "
+            f"foreign ERBs"
+        )
 
     print("\nper-style eval loss (rows: agents/archs, cols: styles):")
     for i, (cfg, tr, loss_fn) in enumerate(agents):
-        row = [eval_style(cfg, loss_fn, tr.state['params'], s)
-               for s in range(len(ARCHS))]
+        row = [
+            eval_style(cfg, loss_fn, tr.state["params"], s) for s in range(len(ARCHS))
+        ]
         own = row[i]
-        print(f"  {cfg.name:32s} " +
-              " ".join(f"{x:6.3f}" for x in row) +
-              f"   (own style: {own:.3f})")
-    print("\nheterogeneous architectures, one federation — no weight "
-          "averaging involved.")
+        print(
+            f"  {cfg.name:32s} "
+            + " ".join(f"{x:6.3f}" for x in row)
+            + f"   (own style: {own:.3f})"
+        )
+    print(
+        "\nheterogeneous architectures, one federation — no weight "
+        "averaging involved."
+    )
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ pod the identical entry point runs under the production mesh via
 
     PYTHONPATH=src python examples/train_lm_125m.py --steps 300 --batch 4
 """
+
 import argparse
 
 from repro.launch import train as train_driver
@@ -19,11 +20,20 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=256)
     args = ap.parse_args()
-    train_driver.main([
-        "--arch", "xlstm-125m", "--steps", str(args.steps),
-        "--batch", str(args.batch), "--seq", str(args.seq),
-        "--ckpt", "experiments/xlstm125m_params.npz",
-    ])
+    train_driver.main(
+        [
+            "--arch",
+            "xlstm-125m",
+            "--steps",
+            str(args.steps),
+            "--batch",
+            str(args.batch),
+            "--seq",
+            str(args.seq),
+            "--ckpt",
+            "experiments/xlstm125m_params.npz",
+        ]
+    )
 
 
 if __name__ == "__main__":

@@ -209,6 +209,11 @@ class ExperimentHooks:
         """A hub died; ``orphaned`` are the agents it stranded (they are
         re-homed to surviving hubs when any exist)."""
 
+    def on_availability(self, system, agent_id: int, online: bool, t: float) -> None:
+        """An agent's availability changed (population dynamics): offline
+        agents finish in-flight rounds but start no new ones and are
+        never sampled by gossip."""
+
 
 class HistoryRecorder(ExperimentHooks):
     """The default metrics hook: collects :class:`RoundRecord` objects

@@ -157,6 +157,13 @@ class ADFLLSystem:
         self._outstanding = 0  # finish events not yet processed
         self._pending_churn = 0  # scheduled churn events not yet applied
         self._pending_failures = 0  # scheduled hub failures not yet applied
+        # population simulation: availability bookkeeping (set lazily by
+        # repro.population.compile_onto) and rounds deferred while offline
+        self.population = None
+        self._deferred: set = set()
+        if self.network.gossip is not None:
+            # availability view: anti-entropy never samples an offline peer
+            self.network.gossip.online = self._agent_is_online
         for i in range(sys_cfg.n_agents):
             hub = sys_cfg.agent_hub[i] if i < len(sys_cfg.agent_hub) else None
             self.add_agent(
@@ -205,6 +212,8 @@ class ADFLLSystem:
         self.agents[aid] = agent
         self.network.attach_agent(aid, hub_id)
         t = self.sched.now if at is None else at
+        if self.population is not None:
+            self.population.note_join(aid, t, speed)
         self.sched.at(t, lambda s, tt, a=aid: self._start_round(a), tag=f"A{aid}_join")
         return aid
 
@@ -215,6 +224,9 @@ class ADFLLSystem:
             # record lands in the same history position as sequential
             self.engine.ensure_flushed(agent.slot)
         agent.active = False
+        self._deferred.discard(agent_id)
+        if self.population is not None:
+            self.population.note_depart(agent_id, self.sched.now)
         self.network.detach_agent(agent_id)
 
     def live_agents(self) -> Dict[int, DQNAgent]:
@@ -224,18 +236,62 @@ class ADFLLSystem:
             if getattr(a, "active", True) is not False
         }
 
-    def schedule_churn(self, events: Sequence[ChurnEvent]) -> None:
-        """Register a declarative churn schedule: each event fires on the
-        scheduler at its time and emits ``on_churn``.  The run does not
-        stop while churn events are still pending, so late joiners get
-        their rounds even if the incumbents finished first."""
-        for ev in sorted(events, key=lambda e: e.at):
-            self._pending_churn += 1
-            self.sched.at(
-                ev.at, lambda s, t, e=ev: self._apply_churn(e, t), tag="churn"
-            )
+    # -- availability ---------------------------------------------------------
+    def set_online(self, agent_id: int, online: bool) -> None:
+        """Flip one agent's availability.  Offline agents keep in-flight
+        rounds (disconnection granularity is one round) but start no new
+        ones; coming back online resumes a round deferred while away.
+        Emits ``on_availability`` on every state *change*."""
+        agent = self.agents.get(agent_id)
+        if agent is None or getattr(agent, "active", True) is False:
+            return
+        was = getattr(agent, "online", True)
+        agent.online = online
+        if self.population is not None:
+            self.population.note_toggle(agent_id, online, self.sched.now)
+        if online == was:
+            return
+        self._emit("on_availability", agent_id, online, self.sched.now)
+        if online and agent_id in self._deferred:
+            self._deferred.discard(agent_id)
+            self._start_round(agent_id)
 
-    def _apply_churn(self, ev: ChurnEvent, t: float) -> None:
+    def _agent_is_online(self, agent_id: int) -> bool:
+        """The gossip layer's availability view: live *and* online."""
+        agent = self.agents.get(agent_id)
+        return (
+            agent is not None
+            and getattr(agent, "active", True) is not False
+            and getattr(agent, "online", True) is not False
+        )
+
+    # -- population -----------------------------------------------------------
+    def apply_population(self, pop) -> None:
+        """Compile a :class:`~repro.population.PopulationSpec` onto the
+        scheduler: cohort arrivals, availability processes, departures,
+        and hub outages all become ordinary events feeding the churn
+        machinery.  This is the one entry point for population dynamics;
+        :meth:`schedule_churn` / :meth:`schedule_hub_failures` are thin
+        shims over it."""
+        from repro.population.compile import compile_onto
+
+        compile_onto(self, pop)
+
+    def schedule_churn(self, events: Sequence[ChurnEvent]) -> None:
+        """Classic churn shim: lifts the events into a
+        :class:`~repro.population.PopulationSpec` (point-arrival cohorts
+        and departures) and compiles it — bit-identical scheduling to the
+        historical hand-rolled path.  Each event fires on the scheduler
+        at its time and emits ``on_churn``; the run does not stop while
+        churn events are still pending, so late joiners get their rounds
+        even if the incumbents finished first."""
+        if not events:
+            return
+        from repro.population.spec import PopulationSpec
+
+        self.apply_population(PopulationSpec.from_churn(events))
+
+    def _apply_churn(self, ev: ChurnEvent, t: float) -> List[int]:
         self._pending_churn -= 1
         ids: List[int] = []
         if ev.action == "add":
@@ -254,28 +310,22 @@ class ADFLLSystem:
                 self.remove_agent(aid)
                 ids.append(aid)
         self._emit("on_churn", ev, ids, t)
+        return ids
 
     # -- hub failures -----------------------------------------------------------
     def schedule_hub_failures(self, events: Sequence[HubFailure]) -> None:
-        """Register a declarative hub-failure schedule (the paper's
-        Table 2 robustness experiment): each event kills its hub on the
-        scheduler at its time and emits ``on_hub_failure``.  The run does
-        not stop while failures are pending, so a failure landing after
-        the incumbents' last round still fires."""
-        if self.sys_cfg.topology == "gossip":
-            raise ValueError("topology='gossip' has no hubs to fail")
-        events = sorted(events, key=lambda e: e.at)
-        for ev in events:  # validate everything before touching the scheduler
-            if ev.hub_id >= len(self.network.hubs):
-                raise ValueError(
-                    f"hub_id {ev.hub_id} out of range "
-                    f"(n_hubs={len(self.network.hubs)})"
-                )
-        for ev in events:
-            self._pending_failures += 1
-            self.sched.at(
-                ev.at, lambda s, t, e=ev: self._apply_hub_failure(e, t), tag="hub_fail"
-            )
+        """Classic hub-failure shim (the paper's Table 2 robustness
+        experiment): lifts the events into hub outages on a
+        :class:`~repro.population.PopulationSpec` and compiles it.  Bad
+        schedules raise before anything touches the scheduler; each
+        outage kills its hub at its time and emits ``on_hub_failure``.
+        The run does not stop while failures are pending, so a failure
+        landing after the incumbents' last round still fires."""
+        if not events:
+            return
+        from repro.population.spec import PopulationSpec
+
+        self.apply_population(PopulationSpec.from_churn(hub_failures=events))
 
     def _apply_hub_failure(self, ev: HubFailure, t: float) -> None:
         self._pending_failures -= 1
@@ -312,6 +362,10 @@ class ADFLLSystem:
         if agent is None or getattr(agent, "active", True) is False:
             return
         if agent.rounds_done >= self.sys_cfg.rounds:
+            return
+        if getattr(agent, "online", True) is False:
+            # offline: park the round; set_online(True) resumes it
+            self._deferred.add(agent_id)
             return
         task = self._next_task()
         self._emit("on_round_start", agent_id, task, self.sched.now)
@@ -469,6 +523,8 @@ class ADFLLSystem:
                 "delivered": st.n_delivered,
                 "dropped": st.n_dropped,
             }
+        if self.population is not None:
+            extra["population"] = self.population.summary(float(makespan))
         return Report(
             system="adfll",
             seed=self.seed,

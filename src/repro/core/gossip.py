@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Set
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
@@ -254,6 +254,7 @@ class GossipTopology:
         meter: Optional[BandwidthMeter] = None,
         rng: Optional[np.random.Generator] = None,
         site_links: Optional[SiteLinks] = None,
+        online: Optional[Callable[[int], bool]] = None,
     ):
         self.planes = planes  # shared registry (same dict as Network.planes)
         self.sampler = sampler
@@ -263,6 +264,11 @@ class GossipTopology:
         self.rng = rng if rng is not None else np.random.default_rng(0)
         self.stores: Dict[int, Dict[str, Dict[str, Any]]] = {}
         self.stats = GossipStats()
+        # availability view (population simulator): when set, anti-entropy
+        # rounds run over online agents only — an offline peer is neither
+        # sampled nor initiates an exchange.  Its local store stays put (a
+        # mailbox for in-flight deliveries); None = everyone reachable.
+        self.online = online
 
     # -- membership ---------------------------------------------------------
     def add_agent(self, agent_id: int) -> None:
@@ -301,11 +307,16 @@ class GossipTopology:
         record is delivered by a future event at its link transfer time;
         without one, delivery is immediate (tests, final flushes).
         Returns the number of records put on the wire.
+
+        With an ``online`` view attached, the round runs over currently
+        online agents only: offline peers are invisible to the sampler.
         """
         t = sched.now if sched is not None else now
         self.sampler.new_round(t)
         self.stats.n_rounds += 1
         ids = sorted(self.stores)
+        if self.online is not None:
+            ids = [a for a in ids if self.online(a)]
         sent = 0
         done_pairs = set()  # an exchange is push-pull: reconcile a pair once
         for aid in ids:

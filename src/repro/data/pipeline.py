@@ -7,6 +7,7 @@ Two kinds of streams:
   analogue of the paper's imaging task-environments, consumable as ERBs by
   the LifelongTrainer.
 """
+
 from __future__ import annotations
 
 from dataclasses import dataclass
@@ -35,18 +36,28 @@ def _style_tokens(rng, vocab, seq, style):
     return (base + walk) % vocab
 
 
-def token_batches(cfg: TokenStreamConfig, style: int = 0
-                  ) -> Iterator[Dict[str, np.ndarray]]:
+def token_batches(
+    cfg: TokenStreamConfig, style: int = 0
+) -> Iterator[Dict[str, np.ndarray]]:
     rng = np.random.default_rng(cfg.seed + 7919 * style)
     while True:
-        toks = np.stack([_style_tokens(rng, cfg.vocab_size, cfg.seq_len + 1,
-                                       style)
-                         for _ in range(cfg.batch_size)]).astype(np.int32)
+        toks = np.stack(
+            [
+                _style_tokens(rng, cfg.vocab_size, cfg.seq_len + 1, style)
+                for _ in range(cfg.batch_size)
+            ]
+        ).astype(np.int32)
         yield {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
 
 
-def lm_task_erb(cfg: TokenStreamConfig, style: int, n_batches: int,
-                *, source_agent: int = -1, round_idx: int = 0) -> ERB:
+def lm_task_erb(
+    cfg: TokenStreamConfig,
+    style: int,
+    n_batches: int,
+    *,
+    source_agent: int = -1,
+    round_idx: int = 0,
+) -> ERB:
     """Materialize an LM 'task' as an ERB of (tokens, labels) rows —
     the supervised analogue of the paper's experience tuples."""
     it = token_batches(cfg, style)
@@ -55,20 +66,33 @@ def lm_task_erb(cfg: TokenStreamConfig, style: int, n_batches: int,
         b = next(it)
         toks.append(b["tokens"])
         labs.append(b["labels"])
-    data = {"tokens": np.concatenate(toks, 0),
-            "labels": np.concatenate(labs, 0)}
+    data = {"tokens": np.concatenate(toks, 0), "labels": np.concatenate(labs, 0)}
     n = data["tokens"].shape[0]
-    task = TaskTag(modality=f"style{style}", orientation="lm",
-                   pathology="none", landmark="next_token")
+    task = TaskTag(
+        modality=f"style{style}",
+        orientation="lm",
+        pathology="none",
+        landmark="next_token",
+    )
     meta = ERBMeta(new_erb_id("LMERB"), task, source_agent, round_idx, n)
     erb = ERB(meta=meta, data=data, capacity=n, size=n, cursor=0)
     return erb
 
 
-def federated_shards(cfg: TokenStreamConfig, n_agents: int
-                     ) -> Sequence[Iterator[Dict[str, np.ndarray]]]:
+def federated_shards(
+    cfg: TokenStreamConfig, n_agents: int
+) -> Sequence[Iterator[Dict[str, np.ndarray]]]:
     """Disjoint per-agent streams (different seeds + style rotation)."""
-    return [token_batches(
-        TokenStreamConfig(cfg.vocab_size, cfg.seq_len, cfg.batch_size,
-                          seed=cfg.seed + 104729 * a, n_styles=cfg.n_styles),
-        style=a % cfg.n_styles) for a in range(n_agents)]
+    return [
+        token_batches(
+            TokenStreamConfig(
+                cfg.vocab_size,
+                cfg.seq_len,
+                cfg.batch_size,
+                seed=cfg.seed + 104729 * a,
+                n_styles=cfg.n_styles,
+            ),
+            style=a % cfg.n_styles,
+        )
+        for a in range(n_agents)
+    ]

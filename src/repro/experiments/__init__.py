@@ -34,3 +34,12 @@ from repro.experiments.registry import (  # noqa: F401
 from repro.experiments.runner import build, resolve, run, write_json  # noqa: F401
 from repro.experiments.spec import ScenarioSpec  # noqa: F401
 from repro.experiments.systems import BaselineSystem  # noqa: F401
+from repro.population import (  # noqa: F401
+    Cohort,
+    Departure,
+    Diurnal,
+    HubOutage,
+    PopulationSpec,
+    Sessions,
+    Trace,
+)

@@ -18,6 +18,7 @@ from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
 from repro.core.experiment import ChurnEvent, HubFailure
 from repro.core.gossip import LinkModel
 from repro.experiments.spec import ScenarioSpec
+from repro.population import Cohort, Diurnal, PopulationSpec, Sessions
 from repro.serve.traffic import TrafficSpec
 
 _REGISTRY: Dict[str, ScenarioSpec] = {}
@@ -348,6 +349,114 @@ register(
             n_requests=32, max_batch=8, n_version_slots=2, max_staleness=1
         ),
         seed=600,
+        eval_patients=2,
+        eval_episodes=2,
+        fast_train_steps=8,
+    )
+)
+
+# -- population dynamics (trace-driven fleet simulation) --------------------
+register(
+    ScenarioSpec(
+        name="hospital_diurnal",
+        system="adfll",
+        description="Hospital-network diurnal load: two sites of gossiping "
+        "hospitals on opposite day/night shifts; availability-aware "
+        "anti-entropy only reaches the site that is awake",
+        task_set="paper8",
+        n_tasks=4,
+        n_patients=16,
+        dqn=_TINY_DQN,
+        sys=_ablation_sys(
+            rounds=3,
+            topology="gossip",
+            gossip_sampler="random",
+            gossip_fanout=2,
+        ),
+        population=PopulationSpec(
+            cohorts=(
+                Cohort(
+                    name="site_a",
+                    n_agents=3,
+                    availability=Diurnal(
+                        period=2.0, on_fraction=0.6, phase=0.0, jitter=0.1
+                    ),
+                ),
+                Cohort(
+                    name="site_b",
+                    n_agents=3,
+                    availability=Diurnal(
+                        period=2.0, on_fraction=0.6, phase=1.0, jitter=0.1
+                    ),
+                ),
+            ),
+        ),
+        seed=700,
+        eval_patients=2,
+        eval_episodes=2,
+        fast_train_steps=8,
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="flash_crowd",
+        system="adfll",
+        description="Flash-crowd onboarding: 4 incumbent agents, then 200 "
+        "more join over a staggered mid-run wave and catch up from the "
+        "hub databases",
+        task_set="paper8",
+        n_tasks=4,
+        n_patients=16,
+        dqn=_TINY_DQN,
+        sys=_ablation_sys(rounds=2, n_hubs=3),
+        population=PopulationSpec(
+            cohorts=(
+                Cohort(name="incumbents", n_agents=4),
+                Cohort(
+                    name="crowd",
+                    n_agents=200,
+                    arrive_at=1.0,
+                    arrive_spread=1.5,
+                ),
+            ),
+        ),
+        seed=710,
+        eval_patients=2,
+        eval_episodes=2,
+        fast_train_steps=8,
+        fast_population_scale=0.1,  # 4 + 200 agents -> 1 + 20 in CI
+    )
+)
+
+register(
+    ScenarioSpec(
+        name="long_tail_stragglers",
+        system="adfll",
+        description="Long-tail stragglers: one cohort with a lognormal "
+        "step-time tail (some machines far slower than the median) and "
+        "heavy-tailed connectivity sessions",
+        task_set="paper8",
+        n_tasks=4,
+        n_patients=16,
+        dqn=_TINY_DQN,
+        sys=_ablation_sys(rounds=3),
+        population=PopulationSpec(
+            cohorts=(
+                Cohort(
+                    name="fleet",
+                    n_agents=8,
+                    speed_sigma=0.75,
+                    availability=Sessions(
+                        mean_on=1.5,
+                        mean_off=0.5,
+                        distribution="lognormal",
+                        sigma=1.0,
+                    ),
+                ),
+            ),
+        ),
+        seed=720,
         eval_patients=2,
         eval_episodes=2,
         fast_train_steps=8,

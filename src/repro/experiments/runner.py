@@ -66,6 +66,10 @@ def _build(spec: ScenarioSpec, hooks: Sequence[ExperimentHooks]) -> _Built:
     curve: List[EvalPoint] = []
 
     if spec.system == "adfll":
+        if spec.population is not None:
+            # every agent arrives through a cohort (arrive_at=0 cohorts
+            # are the incumbents): the system starts empty
+            sys_cfg = replace(sys_cfg, n_agents=0, agent_hub=(), agent_speed=())
         system: System = ADFLLSystem(
             sys_cfg, spec.dqn, tasks, train_p, hooks=tuple(hooks)
         )
@@ -76,13 +80,15 @@ def _build(spec: ScenarioSpec, hooks: Sequence[ExperimentHooks]) -> _Built:
                 intra=spec.intra_link,
                 inter=spec.inter_link,
             )
-        if spec.churn or spec.hub_failures:
+        if spec.churn or spec.hub_failures or spec.population is not None:
             _schedule_probes(system, spec, eval_tasks, test_p, curve)
         if spec.churn:
             assert isinstance(system, SupportsChurn)
             system.schedule_churn(spec.churn)
         if spec.hub_failures:
             system.schedule_hub_failures(spec.hub_failures)
+        if spec.population is not None:
+            system.apply_population(spec.population)
     elif spec.system == "fedavg":
         if spec.churn or spec.agent_sites or spec.hub_failures:
             raise ValueError(
@@ -150,6 +156,10 @@ def _schedule_probes(
         system._emit("on_eval", point)
 
     times = {ev.at for ev in spec.churn} | {ev.at for ev in spec.hub_failures}
+    if spec.population is not None:
+        # probe at each membership event; t=0 is just the incumbents
+        # arriving — there is nothing to evaluate before them
+        times |= {t for t in spec.population.event_times() if t > 0.0}
     for at in sorted(times):
         system.sched.at(at, probe, tag="eval_probe")
 

@@ -21,6 +21,7 @@ from typing import Optional, Tuple
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
 from repro.core.experiment import ChurnEvent, HubFailure
 from repro.core.gossip import LinkModel
+from repro.population.spec import PopulationSpec
 from repro.serve.traffic import TrafficSpec
 
 SYSTEMS = ("adfll", "fedavg", "all_knowing", "partial", "sequential", "serve")
@@ -44,6 +45,7 @@ class ScenarioSpec:
     # -- scenario dynamics -------------------------------------------------
     churn: Tuple[ChurnEvent, ...] = ()  # timed add/remove events
     hub_failures: Tuple[HubFailure, ...] = ()  # timed hub deaths (Table 2)
+    population: Optional[PopulationSpec] = None  # declarative fleet dynamics
     agent_sites: Tuple[int, ...] = ()  # per-agent site ids (hetero links)
     hub_sites: Tuple[int, ...] = ()  # per-hub site ids
     intra_link: Optional[LinkModel] = None  # fast same-site link
@@ -57,6 +59,7 @@ class ScenarioSpec:
     # -- fast (CI) variant -------------------------------------------------
     fast_train_steps: int = 10
     fast_eval_tasks: Optional[int] = None
+    fast_population_scale: float = 1.0  # shrink cohorts for CI (1.0 = full)
 
     def __post_init__(self):
         if self.system not in SYSTEMS:
@@ -71,6 +74,24 @@ class ScenarioSpec:
             raise ValueError(
                 f"serve_traffic given but system={self.system!r} is not 'serve'"
             )
+        if self.population is not None:
+            if self.system != "adfll":
+                raise ValueError(
+                    f"population given but system={self.system!r} is not 'adfll'"
+                )
+            if self.churn or self.hub_failures:
+                raise ValueError(
+                    "population and churn/hub_failures are exclusive: express "
+                    "everything in the PopulationSpec (see PopulationSpec.from_churn)"
+                )
+            if not self.population.cohorts:
+                raise ValueError("scenario population has no cohorts (no agents)")
+            if self.population.hub_outages and self.sys.topology == "gossip":
+                raise ValueError("hub_outages given but topology='gossip' has no hubs")
+        if not 0.0 < self.fast_population_scale <= 1.0:
+            raise ValueError(
+                f"fast_population_scale not in (0, 1]: {self.fast_population_scale}"
+            )
 
     # -- derived variants --------------------------------------------------
     def with_seed(self, seed: int) -> "ScenarioSpec":
@@ -80,17 +101,22 @@ class ScenarioSpec:
 
     def fast(self) -> "ScenarioSpec":
         """The CI-sized variant: fewer train steps, optionally fewer
-        evaluation tasks; everything else identical."""
+        evaluation tasks and a shrunken population; everything else
+        identical."""
         steps = min(self.sys.train_steps_per_round, self.fast_train_steps)
         eval_tasks = (
             self.fast_eval_tasks
             if self.fast_eval_tasks is not None
             else self.eval_tasks
         )
+        pop = self.population
+        if pop is not None:
+            pop = pop.scaled(self.fast_population_scale)
         return replace(
             self,
             sys=replace(self.sys, train_steps_per_round=steps),
             eval_tasks=eval_tasks,
+            population=pop,
         )
 
 

@@ -1,0 +1,41 @@
+"""Trace-driven population simulation for ADFLL experiments.
+
+One declarative :class:`PopulationSpec` describes the whole fleet —
+cohorts with arrival windows, per-agent compute heterogeneity, diurnal /
+session / trace availability, timed departures, and hub outages — and
+is compiled onto the system's discrete-event scheduler by the runner.
+See the README "Population dynamics" section for the migration path
+from hand-placed ``ChurnEvent`` schedules.
+"""
+
+from repro.population.compile import PopulationState, compile_onto, member_rng
+from repro.population.processes import AvailabilityProcess, availability_segments
+from repro.population.spec import (
+    Availability,
+    Cohort,
+    Departure,
+    Diurnal,
+    HubOutage,
+    PopulationSpec,
+    Sessions,
+    Trace,
+)
+from repro.population.trace import load_windows, save_windows
+
+__all__ = [
+    "Availability",
+    "AvailabilityProcess",
+    "Cohort",
+    "Departure",
+    "Diurnal",
+    "HubOutage",
+    "PopulationSpec",
+    "PopulationState",
+    "Sessions",
+    "Trace",
+    "availability_segments",
+    "compile_onto",
+    "load_windows",
+    "member_rng",
+    "save_windows",
+]

@@ -19,6 +19,7 @@ seeded with ``i``, and the first examples probe interval endpoints, so
 failures reproduce exactly across runs (no shrinking, but the seed index
 is reported in the failure message).
 """
+
 from __future__ import annotations
 
 import functools
@@ -74,16 +75,17 @@ class _Floats(SearchStrategy):
 
 
 class _Lists(SearchStrategy):
-    def __init__(self, elements: SearchStrategy, min_size: int = 0,
-                 max_size: int = 10):
+    def __init__(
+        self, elements: SearchStrategy, min_size: int = 0, max_size: int = 10
+    ):
         self.elements = elements
         self.min_size, self.max_size = int(min_size), int(max_size)
 
     def example(self, rng: random.Random, i: int) -> List[Any]:
-        n = self.min_size if i == 0 else rng.randint(self.min_size,
-                                                     self.max_size)
-        return [self.elements.example(rng, 2 + rng.randrange(1 << 16))
-                for _ in range(n)]
+        n = self.min_size if i == 0 else rng.randint(self.min_size, self.max_size)
+        return [
+            self.elements.example(rng, 2 + rng.randrange(1 << 16)) for _ in range(n)
+        ]
 
 
 class _SampledFrom(SearchStrategy):
@@ -100,13 +102,15 @@ def integers(min_value: int = 0, max_value: int = 100) -> SearchStrategy:
     return _Integers(min_value, max_value)
 
 
-def floats(min_value: float = 0.0, max_value: float = 1.0,
-           **_kw: Any) -> SearchStrategy:
+def floats(
+    min_value: float = 0.0, max_value: float = 1.0, **_kw: Any
+) -> SearchStrategy:
     return _Floats(min_value, max_value)
 
 
-def lists(elements: SearchStrategy, min_size: int = 0,
-          max_size: int = 10, **_kw: Any) -> SearchStrategy:
+def lists(
+    elements: SearchStrategy, min_size: int = 0, max_size: int = 10, **_kw: Any
+) -> SearchStrategy:
     return _Lists(elements, min_size, max_size)
 
 
@@ -118,8 +122,9 @@ def booleans() -> SearchStrategy:
     return _SampledFrom([False, True])
 
 
-def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES,
-             deadline: Any = None, **_kw: Any):
+def settings(
+    max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline: Any = None, **_kw: Any
+):
     """Records max_examples on the (possibly already @given-wrapped) fn."""
 
     def deco(fn):
@@ -133,26 +138,26 @@ def given(**strategies_kw: SearchStrategy):
     """Keyword-strategy @given. Runs each example eagerly, no shrinking."""
 
     def deco(fn):
-
         @functools.wraps(fn)
         def wrapper(*args, **kwargs):
-            n = getattr(wrapper, "_fallback_max_examples",
-                        getattr(fn, "_fallback_max_examples",
-                                _DEFAULT_MAX_EXAMPLES))
+            n = getattr(
+                wrapper,
+                "_fallback_max_examples",
+                getattr(fn, "_fallback_max_examples", _DEFAULT_MAX_EXAMPLES),
+            )
             for i in range(n):
                 rng = random.Random(i)
-                drawn = {k: s.example(rng, i)
-                         for k, s in sorted(strategies_kw.items())}
+                drawn = {k: s.example(rng, i) for k, s in sorted(strategies_kw.items())}
                 try:
                     fn(*args, **drawn, **kwargs)
                 except Exception as exc:
-                    raise AssertionError(
-                        f"falsifying example #{i}: {drawn!r}") from exc
+                    raise AssertionError(f"falsifying example #{i}: {drawn!r}") from exc
 
         # hide strategy-filled params from pytest's fixture resolution
         sig = inspect.signature(fn)
-        remaining = [p for name, p in sig.parameters.items()
-                     if name not in strategies_kw]
+        remaining = [
+            p for name, p in sig.parameters.items() if name not in strategies_kw
+        ]
         wrapper.__signature__ = sig.replace(parameters=remaining)
         del wrapper.__wrapped__
         return wrapper
@@ -170,8 +175,14 @@ def install() -> None:
     hyp.settings = settings
     hyp.__is_repro_fallback__ = True
     st = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "lists", "sampled_from", "booleans",
-                 "SearchStrategy"):
+    for name in (
+        "integers",
+        "floats",
+        "lists",
+        "sampled_from",
+        "booleans",
+        "SearchStrategy",
+    ):
         setattr(st, name, globals()[name])
     hyp.strategies = st
     sys.modules["hypothesis"] = hyp

@@ -1,0 +1,462 @@
+"""Population simulator: spec validation, availability-timeline
+determinism, Handle-based scheduler cancellation, the log ring buffer,
+availability-aware gossip, offline round deferral, and cross-process
+bit-reproducibility of PopulationSpec-driven runs."""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro import experiments
+from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
+from repro.core.erb import TaskTag, erb_init
+from repro.core.experiment import ChurnEvent, ExperimentHooks, HubFailure
+from repro.core.federated import ADFLLSystem
+from repro.core.gossip import FullMeshSampler, GossipTopology
+from repro.core.plane import ERBPlane
+from repro.core.scheduler import Scheduler
+from repro.experiments import ScenarioSpec
+from repro.population import (
+    Cohort,
+    Departure,
+    Diurnal,
+    HubOutage,
+    PopulationSpec,
+    Sessions,
+    Trace,
+    availability_segments,
+    load_windows,
+    member_rng,
+    save_windows,
+)
+from repro.rl.synth import paper_eight_tasks, patient_split
+
+TINY_DQN = DQNConfig(
+    volume_shape=(12, 12, 12),
+    box_size=(4, 4, 4),
+    conv_features=(2,),
+    hidden=(8,),
+    batch_size=4,
+    max_episode_steps=4,
+    eps_decay_steps=20,
+)
+TINY_SYS = ADFLLConfig(
+    n_agents=2,
+    n_hubs=1,
+    agent_hub=(0, 0),
+    agent_speed=(1.0, 2.0),
+    rounds=2,
+    erb_capacity=128,
+    erb_share_size=16,
+    train_steps_per_round=2,
+    hub_sync_period=0.5,
+)
+TASKS = paper_eight_tasks()[:2]
+TRAIN_P, TEST_P = patient_split(8)
+
+
+# ---------------------------------------------------------------------------
+# scheduler: Handle cancellation + log ring buffer
+# ---------------------------------------------------------------------------
+def test_handle_cancels_a_pending_event_and_skips_its_log_entry():
+    s = Scheduler()
+    fired = []
+    h = s.at(1.0, lambda sc, t: fired.append("a"), tag="a")
+    s.at(2.0, lambda sc, t: fired.append("b"), tag="b")
+    assert h.active
+    h.cancel()
+    assert not h.active
+    s.run()
+    assert fired == ["b"]
+    assert [tag for _, tag in s.log] == ["b"]  # skipped events are not logged
+
+
+def test_every_handle_cancels_from_outside():
+    s = Scheduler()
+    ticks = []
+    h = s.every(1.0, lambda sc, t: ticks.append(t))
+    s.at(2.5, lambda sc, t: h.cancel())
+    s.run(until=10.0)
+    assert ticks == [1.0, 2.0]
+
+
+def test_every_handle_cancels_from_inside_its_own_callback():
+    # the documented limitation of tag-based cancel: the periodic re-arm
+    # happens after the callback returns, so only the Handle can do this
+    s = Scheduler()
+    ticks = []
+
+    def fn(sc, t):
+        ticks.append(t)
+        if len(ticks) == 3:
+            h.cancel()
+
+    h = s.every(1.0, fn)
+    s.run(until=10.0)
+    assert ticks == [1.0, 2.0, 3.0]
+
+
+def test_tag_cancel_shim_still_stops_periodic_timers():
+    s = Scheduler()
+    ticks = []
+    s.every(1.0, lambda sc, t: ticks.append(t), tag="tick")
+    s.at(2.5, lambda sc, t: sc.cancel("tick"))
+    s.run(until=10.0)
+    assert ticks == [1.0, 2.0]
+
+
+def test_log_ring_buffer_keeps_newest_and_counts_drops():
+    s = Scheduler(log_max=3)
+    for i in range(10):
+        s.at(float(i), lambda sc, t: None, tag=f"e{i}")
+    s.run()
+    assert len(s.log) == 3
+    assert s.log_dropped == 7
+    assert [tag for _, tag in s.log] == ["e7", "e8", "e9"]
+    unbounded = Scheduler()  # default: unbounded list, nothing dropped
+    unbounded.at(0.0, lambda sc, t: None, tag="x")
+    unbounded.run()
+    assert unbounded.log_dropped == 0 and len(unbounded.log) == 1
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+def test_spec_validation_rejects_bad_values():
+    with pytest.raises(ValueError):
+        Diurnal(period=0.0)
+    with pytest.raises(ValueError):
+        Diurnal(on_fraction=0.0)
+    with pytest.raises(ValueError):
+        Sessions(mean_on=0.0)
+    with pytest.raises(ValueError):
+        Sessions(distribution="weibull")
+    with pytest.raises(ValueError):
+        Trace(windows=((0.5, 0.2),))  # off before on
+    with pytest.raises(ValueError):
+        Trace(windows=((0.0, 1.0), (0.5, 2.0)))  # overlapping
+    with pytest.raises(ValueError):
+        Trace(windows=((0.0, 3.0),), repeat=2.0)  # repeat inside windows
+    with pytest.raises(ValueError):
+        Cohort(n_agents=0)
+    with pytest.raises(ValueError):
+        Cohort(n_agents=1, arrive_at=1.0, depart_at=0.5)
+    with pytest.raises(ValueError):
+        Cohort(n_agents=1, speed=0.0)
+    with pytest.raises(ValueError):
+        Departure(at=1.0, agent_id=3, count=2)
+    with pytest.raises(ValueError):
+        HubOutage(at=1.0, hub_id=-1)
+    with pytest.raises(ValueError):
+        PopulationSpec()  # empty
+
+
+def test_population_spec_event_times_scaled_and_n_agents():
+    pop = PopulationSpec(
+        cohorts=(
+            Cohort(n_agents=10),
+            Cohort(n_agents=40, arrive_at=1.0, depart_at=3.0),
+        ),
+        departures=(Departure(at=2.0, count=2),),
+        hub_outages=(HubOutage(at=2.5, hub_id=0),),
+    )
+    assert pop.n_agents == 50
+    assert pop.event_times() == (0.0, 1.0, 2.0, 2.5, 3.0)
+    small = pop.scaled(0.1)
+    assert [c.n_agents for c in small.cohorts] == [1, 4]
+    assert small.cohorts[1].depart_at == 3.0  # dynamics untouched
+    assert pop.scaled(1.0) is pop
+
+
+def test_from_churn_lifts_classic_schedules():
+    pop = PopulationSpec.from_churn(
+        events=(
+            ChurnEvent(at=1.6, action="add", count=4, speed=2.0, hub=1),
+            ChurnEvent(at=0.8, action="remove", count=2),
+        ),
+        hub_failures=(HubFailure(at=1.5, hub_id=0),),
+    )
+    (cohort,) = pop.cohorts
+    assert (cohort.arrive_at, cohort.n_agents, cohort.speed, cohort.hub) == (
+        1.6,
+        4,
+        2.0,
+        1,
+    )
+    (dep,) = pop.departures
+    assert (dep.at, dep.count) == (0.8, 2)
+    (outage,) = pop.hub_outages
+    assert (outage.at, outage.hub_id) == (1.5, 0)
+
+
+def test_scenario_spec_population_validation():
+    pop = PopulationSpec(cohorts=(Cohort(n_agents=2),))
+    base = dict(
+        name="t",
+        system="adfll",
+        n_tasks=2,
+        n_patients=8,
+        dqn=TINY_DQN,
+        sys=TINY_SYS,
+    )
+    spec = ScenarioSpec(population=pop, fast_population_scale=0.5, **base)
+    assert spec.fast().population.cohorts[0].n_agents == 1
+    with pytest.raises(ValueError, match="exclusive"):
+        ScenarioSpec(
+            population=pop, churn=(ChurnEvent(at=1.0, action="add"),), **base
+        )
+    with pytest.raises(ValueError, match="not 'adfll'"):
+        ScenarioSpec(**{**base, "system": "sequential"}, population=pop)
+    with pytest.raises(ValueError, match="no cohorts"):
+        ScenarioSpec(
+            population=PopulationSpec(departures=(Departure(at=1.0),)), **base
+        )
+    with pytest.raises(ValueError, match="no hubs"):
+        ScenarioSpec(
+            population=PopulationSpec(
+                cohorts=(Cohort(n_agents=2),),
+                hub_outages=(HubOutage(at=1.0, hub_id=0),),
+            ),
+            **{**base, "sys": dataclasses.replace(TINY_SYS, topology="gossip")},
+        )
+
+
+# ---------------------------------------------------------------------------
+# availability timelines (pure, deterministic)
+# ---------------------------------------------------------------------------
+def _take(avail, seed, n, member_idx=0):
+    segs = availability_segments(
+        avail, np.random.default_rng(seed), member_idx=member_idx
+    )
+    out = []
+    for _ in range(n):
+        seg = next(segs, None)
+        if seg is None:
+            break
+        out.append(seg)
+    return out
+
+
+def test_diurnal_segments_alternate_and_cover_the_period():
+    segs = _take(Diurnal(period=2.0, on_fraction=0.75, phase=0.5), seed=0, n=7)
+    assert segs[0] == (1.0, True)  # 0.5 into a 1.5-long on-window
+    assert [on for _, on in segs] == [True, False, True, False, True, False, True]
+    assert all(
+        d == pytest.approx(1.5 if on else 0.5) for d, on in segs[1:]
+    )
+    always_on = _take(Diurnal(on_fraction=1.0), seed=0, n=3)
+    assert always_on == []  # finite stream = online forever
+
+
+def test_session_segments_draw_from_the_distribution():
+    fixed = _take(Sessions(mean_on=2.0, mean_off=0.5, distribution="fixed"), 0, 4)
+    assert fixed == [(2.0, True), (0.5, False), (2.0, True), (0.5, False)]
+    exp = _take(Sessions(mean_on=1.0, mean_off=1.0, distribution="exp"), 3, 200)
+    on_mean = np.mean([d for d, on in exp if on])
+    assert 0.5 < on_mean < 2.0  # law of large numbers, loose bounds
+    logn = _take(Sessions(distribution="lognormal", sigma=1.0), 3, 10)
+    assert all(d > 0 for d, _ in logn)
+
+
+def test_trace_segments_replay_windows_and_stagger():
+    tr = Trace(windows=((0.5, 1.0), (2.0, 3.0)))
+    assert _take(tr, 0, 10) == [
+        (0.5, False),
+        (0.5, True),
+        (1.0, False),
+        (1.0, True),
+    ]  # finite: online forever after the last window
+    staggered = _take(tr, 0, 10, member_idx=2)
+    assert staggered[0] == (0.5 + 2 * tr.stagger, False) or tr.stagger == 0.0
+    tiled = _take(Trace(windows=((0.0, 1.0),), repeat=2.0), 0, 6)
+    assert tiled == [(1.0, True), (1.0, False)] * 3  # infinite tiling
+
+
+def test_timelines_are_bit_identical_for_identical_seeds():
+    avail = Sessions(distribution="lognormal", sigma=0.8)
+    a = _take(avail, seed=(7, 0x706F70, 1, 2), n=50)
+    b = _take(avail, seed=(7, 0x706F70, 1, 2), n=50)
+    assert a == b
+    c = _take(avail, seed=(8, 0x706F70, 1, 2), n=50)
+    assert a != c
+    # the compile-time member streams are disjoint per (cohort, member)
+    r1, r2 = member_rng(7, 0, 0), member_rng(7, 0, 1)
+    assert r1.uniform() != r2.uniform()
+
+
+def test_trace_files_round_trip(tmp_path):
+    windows = ((0.25, 1.5), (2.0, 2.75))
+    path = tmp_path / "avail.jsonl"
+    save_windows(path, windows)
+    assert load_windows(path) == windows
+    assert Trace(windows=load_windows(path)).windows == windows
+    path.write_text('{"on": 0.1}\n')
+    with pytest.raises(ValueError, match="bad trace row"):
+        load_windows(path)
+
+
+# ---------------------------------------------------------------------------
+# availability-aware gossip
+# ---------------------------------------------------------------------------
+class _RecordingSampler(FullMeshSampler):
+    def __init__(self):
+        self.seen = []
+
+    def peers(self, agent_id, ids):
+        self.seen.append(tuple(ids))
+        return super().peers(agent_id, ids)
+
+
+def test_gossip_never_samples_an_offline_peer():
+    online = {0: True, 1: False, 2: True}
+    sampler = _RecordingSampler()
+    topo = GossipTopology(
+        {"erb": ERBPlane()},
+        sampler,
+        rng=np.random.default_rng(0),
+        online=lambda a: online[a],
+    )
+    task = TaskTag("t1", "axial", "HGG")
+    for a in (0, 1, 2):
+        topo.add_agent(a)
+        erb = erb_init(4, (2, 2, 2), task=task, source_agent=a)
+        erb.size = 4
+        topo.insert_local(a, erb, topo.planes["erb"])
+    for _ in range(4):
+        topo.anti_entropy()
+    assert sampler.seen and all(1 not in ids for ids in sampler.seen)
+    # the offline agent neither received nor spread records
+    assert len(topo.local_store(1, "erb")) == 1
+    assert len(topo.local_store(0, "erb")) == 2  # its own + the online peer's
+    online[1] = True  # back online: next round reaches it
+    topo.anti_entropy()
+    assert len(topo.local_store(1, "erb")) == 3
+
+
+# ---------------------------------------------------------------------------
+# offline agents in the system
+# ---------------------------------------------------------------------------
+def test_offline_agent_defers_rounds_until_back_online():
+    toggles = []
+
+    class Obs(ExperimentHooks):
+        def on_availability(self, system, agent_id, on, t):
+            toggles.append((agent_id, on, t))
+
+    system = ADFLLSystem(
+        dataclasses.replace(TINY_SYS, rounds=1),
+        TINY_DQN,
+        TASKS,
+        TRAIN_P,
+        hooks=(Obs(),),
+    )
+    system.set_online(0, False)
+    system.sched.at(1.5, lambda s, t: system.set_online(0, True))
+    report = system.run()
+    starts = {r.agent_id: r.start for r in report.history}
+    assert starts[1] == 0.0  # the online agent started immediately
+    assert starts[0] >= 1.5  # the offline one waited for its window
+    assert all(a.rounds_done >= 1 for a in system.agents.values())
+    assert toggles == [(0, False, 0.0), (0, True, 1.5)]
+
+
+def test_population_run_applies_cohorts_departures_and_availability():
+    pop = PopulationSpec(
+        cohorts=(
+            Cohort(
+                n_agents=2,
+                availability=Trace(windows=((0.6, 1.4),), stagger=0.2),
+            ),
+            Cohort(n_agents=2, arrive_at=0.5, arrive_spread=0.4, speed_sigma=0.5),
+        ),
+        departures=(Departure(at=2.0, count=1),),
+    )
+    spec = ScenarioSpec(
+        name="tiny_pop",
+        system="adfll",
+        n_tasks=2,
+        n_patients=8,
+        dqn=TINY_DQN,
+        sys=dataclasses.replace(TINY_SYS, rounds=1),
+        population=pop,
+        eval_patients=2,
+        eval_episodes=2,
+    )
+
+    def fingerprint():
+        report = experiments.run(spec, seed=9)
+        hist = [
+            (r.agent_id, r.round_idx, r.task, round(r.start, 9), round(r.end, 9))
+            for r in report.history
+        ]
+        return hist, report.makespan, report.extra["population"]
+
+    h1, m1, p1 = fingerprint()
+    h2, m2, p2 = fingerprint()
+    assert (h1, m1, p1) == (h2, m2, p2)
+    assert p1["n_agents"] == 4 and p1["n_departed"] == 1
+    assert p1["n_toggles"] > 0 and p1["availability"] < 1.0
+    agent_ids = {a for a, *_ in h1}
+    assert len(agent_ids) >= 3  # both cohorts actually trained
+
+
+# ---------------------------------------------------------------------------
+# cross-process bit-identity (mirrors the sweep grid-key test)
+# ---------------------------------------------------------------------------
+_XPROC_CODE = """
+import dataclasses, json
+from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
+from repro.core.federated import ADFLLSystem
+from repro.population import Cohort, PopulationSpec, Trace
+from repro.rl.synth import paper_eight_tasks, patient_split
+
+dqn = DQNConfig(
+    volume_shape=(12, 12, 12), box_size=(4, 4, 4), conv_features=(2,),
+    hidden=(8,), batch_size=4, max_episode_steps=4, eps_decay_steps=20,
+)
+cfg = ADFLLConfig(
+    n_agents=0, agent_hub=(), agent_speed=(), n_hubs=1, rounds=1,
+    erb_capacity=128, erb_share_size=16, train_steps_per_round=1,
+    hub_sync_period=0.5, seed=11,
+)
+pop = PopulationSpec(cohorts=(
+    Cohort(n_agents=2, availability=Trace(windows=((0.4, 1.1),), stagger=0.3)),
+    Cohort(n_agents=1, arrive_at=0.5, arrive_spread=0.5, speed_sigma=0.4),
+))
+system = ADFLLSystem(cfg, dqn, paper_eight_tasks()[:2], patient_split(8)[0])
+system.apply_population(pop)
+report = system.run()
+print(json.dumps({
+    "history": [
+        (r.agent_id, r.round_idx, r.task, round(r.start, 9), round(r.end, 9))
+        for r in report.history
+    ],
+    "makespan": round(report.makespan, 9),
+    "population": report.extra["population"],
+}, sort_keys=True))
+"""
+
+
+def _xproc_run(hashseed: str) -> dict:
+    out = subprocess.run(
+        [sys.executable, "-c", _XPROC_CODE],
+        capture_output=True,
+        text=True,
+        env=dict(os.environ, PYTHONPATH="src", PYTHONHASHSEED=hashseed),
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert out.returncode == 0, out.stderr
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_population_runs_bit_identical_across_processes():
+    a = _xproc_run("0")
+    b = _xproc_run("271828")  # hash randomization must not matter
+    assert a == b
+    assert a["population"]["n_agents"] == 3
+    assert a["population"]["timeline_digest"] == b["population"]["timeline_digest"]
