@@ -16,10 +16,11 @@ standalone ``check_regression`` entrypoint uses, so CI can do either).
 from __future__ import annotations
 
 import argparse
+import inspect
 import json
 import sys
+from collections.abc import Callable, Sequence
 from dataclasses import dataclass
-from typing import Callable, Optional, Sequence
 
 from benchmarks.check_regression import compare
 
@@ -35,7 +36,7 @@ class Gate:
 
 
 def build_parser(
-    prog: Optional[str] = None, *, seed: bool = False
+    prog: str | None = None, *, seed: bool = False
 ) -> argparse.ArgumentParser:
     """The standard benchmark flag set (callers may add their own)."""
     ap = argparse.ArgumentParser(prog=prog)
@@ -60,6 +61,15 @@ def build_parser(
         metavar="BASELINE",
         help="gate the fresh results against a checked-in BENCH_*.json "
         "using the benchmark's declared metrics",
+    )
+    ap.add_argument(
+        "--trace",
+        type=str,
+        default=None,
+        metavar="PATH",
+        help="capture a telemetry trace of the benchmark run (Perfetto "
+        "JSON; .jsonl for the flat format); ignored by benchmarks that "
+        "do not support tracing",
     )
     return ap
 
@@ -94,7 +104,7 @@ def bench_main(
     benchmark: str,
     seed: bool = False,
     gates: Sequence[Gate] = (),
-    argv: Optional[Sequence[str]] = None,
+    argv: Sequence[str] | None = None,
 ) -> int:
     """The whole benchmark ``__main__``: flags -> run() -> gate.
 
@@ -108,6 +118,10 @@ def bench_main(
     kwargs = dict(fast=args.fast, json_path=args.json)
     if seed:
         kwargs["seed"] = args.seed
+    if "trace_path" in inspect.signature(run).parameters:
+        kwargs["trace_path"] = args.trace
+    elif args.trace:
+        print(f"--trace ignored: {benchmark} does not capture traces")
     results = run(**kwargs)
     if args.check:
         current = {

@@ -27,8 +27,8 @@ import json
 
 import numpy as np
 
-from repro.sweeps.stats import paired_ttest
 from repro import experiments
+from repro.sweeps.stats import paired_ttest
 
 # label -> (registered scenario, seed offset kept from the classic script)
 BASELINES = {

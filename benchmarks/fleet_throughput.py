@@ -21,6 +21,15 @@ raw steps/sec):
 
 Gated in CI via ``check_regression --metric speedup --higher-better``
 against ``benchmarks/baselines/BENCH_fleet.json``.
+
+A ``telemetry`` row additionally times the fleet path with an enabled
+:class:`~repro.telemetry.Telemetry` bundle against the default disabled
+path and reports ``telemetry_overhead`` (enabled/disabled wall-time
+ratio, ~1.0) — gated so instrumentation on the flush hot path stays
+observe-only in cost as well as in semantics.  The *disabled* path's
+cost is covered by the ``speedup`` gate itself: its baseline numbers
+predate the telemetry subsystem, so any disabled-mode overhead would
+show up there as a speedup regression.
 """
 
 from __future__ import annotations
@@ -35,6 +44,7 @@ from repro.configs.adfll_dqn import DQNConfig
 from repro.core.erb import ERB, TaskTag, erb_add, erb_init
 from repro.rl.agent import DQNAgent
 from repro.rl.fleet import FleetEngine
+from repro.telemetry import Telemetry, write_trace
 
 # Sized so the per-step *overhead* the engine eliminates (host batch
 # materialization, per-step dispatch, blocking loss sync) is not drowned
@@ -106,7 +116,63 @@ def _bench_pair(
     return t_step, t_fleet
 
 
-def run(fast: bool = False, json_path: str | None = None):
+def _bench_telemetry(
+    n_agents: int,
+    steps: int,
+    repeats: int,
+    capacity: int,
+    trace_path: str | None = None,
+) -> tuple[float, float, Telemetry]:
+    """(disabled, enabled) fleet-round seconds + the enabled bundle.
+
+    Same interleaved min-of-repeats discipline as :func:`_bench_pair`:
+    the two telemetry modes alternate within each repeat so shared-
+    machine noise cannot bias the ratio."""
+    rng = np.random.default_rng(0)
+    tel = Telemetry(enabled=True)
+    engine_off = FleetEngine(CFG)  # default NULL telemetry
+    engine_on = FleetEngine(CFG)
+    engine_on.telemetry = tel
+    fleets = {
+        "off": (
+            engine_off,
+            [DQNAgent(i, CFG, seed=i, engine=engine_off) for i in range(n_agents)],
+        ),
+        "on": (
+            engine_on,
+            [DQNAgent(i, CFG, seed=i, engine=engine_on) for i in range(n_agents)],
+        ),
+    }
+    erbs = [_filled_erb(rng, capacity) for _ in range(n_agents)]
+
+    def fleet_round(which: str):
+        engine, fleet = fleets[which]
+        for a, e in zip(fleet, erbs, strict=True):
+            plans = [a.sampler.plan(a.rng, CFG.batch_size, e) for _ in range(steps)]
+            engine.submit(a.slot, plans)
+        engine.flush()
+
+    fleet_round("off")  # warm the shared chunk compile
+    fleet_round("on")
+    t_off = t_on = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fleet_round("off")
+        t_off = min(t_off, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fleet_round("on")
+        t_on = min(t_on, time.perf_counter() - t0)
+    if trace_path:
+        write_trace(tel, trace_path)
+        print(f"wrote trace {trace_path}")
+    return t_off, t_on, tel
+
+
+def run(
+    fast: bool = False,
+    json_path: str | None = None,
+    trace_path: str | None = None,
+):
     sizes = (2, 8) if fast else (2, 8, 32)
     steps = 40 if fast else 150
     repeats = 4 if fast else 4
@@ -130,6 +196,21 @@ def run(fast: bool = False, json_path: str | None = None):
             f"n{n},{n},{steps},{row['stepwise_steps_per_sec']:.1f},"
             f"{row['fleet_steps_per_sec']:.1f},{row['speedup']:.2f}"
         )
+    n_tel = sizes[-1] if not fast else sizes[0]
+    t_off, t_on, tel = _bench_telemetry(n_tel, steps, repeats, capacity, trace_path)
+    results["telemetry"] = {
+        "n_agents": n_tel,
+        "train_steps": steps,
+        "fleet_round_sec_off": t_off,
+        "fleet_round_sec_on": t_on,
+        "telemetry_overhead": t_on / t_off,
+        "trace_events": len(tel.tracer.events),
+    }
+    print(
+        f"telemetry,{n_tel},{steps},off={t_off * 1e3:.1f}ms,"
+        f"on={t_on * 1e3:.1f}ms,"
+        f"overhead={results['telemetry']['telemetry_overhead']:.3f}"
+    )
     if json_path:
         payload = {
             "benchmark": "fleet_throughput",
@@ -151,6 +232,11 @@ if __name__ == "__main__":
         bench_main(
             run,
             benchmark="fleet_throughput",
-            gates=(Gate("speedup", higher_better=True, tol=0.50, abs_floor=0.5),),
+            gates=(
+                Gate("speedup", higher_better=True, tol=0.50, abs_floor=0.5),
+                # enabled-telemetry wall cost must stay near the disabled
+                # path's (ratio ~1.0); generous bounds absorb CI noise
+                Gate("telemetry_overhead", tol=0.30, abs_floor=0.25),
+            ),
         )
     )

@@ -30,6 +30,7 @@ import json
 import repro.core  # noqa: F401  (resolve the core<->rl import cycle first)
 from repro.configs.adfll_dqn import DQNConfig
 from repro.serve import TrafficSpec, build_session, run_session
+from repro.telemetry import Telemetry, write_trace
 
 CFG = DQNConfig(
     volume_shape=(16, 16, 16),
@@ -53,7 +54,9 @@ ROW_KEYS = (
 )
 
 
-def _serve_row(max_batch: int, seed: int, fast: bool) -> dict:
+def _serve_row(
+    max_batch: int, seed: int, fast: bool, telemetry: Telemetry | None = None
+) -> dict:
     traffic = TrafficSpec(
         n_requests=24 if fast else 96,
         max_batch=max_batch,
@@ -61,7 +64,9 @@ def _serve_row(max_batch: int, seed: int, fast: bool) -> dict:
         max_staleness=1,
         seed=seed,
     )
-    session = build_session(CFG, n_agents=2, traffic=traffic, seed=seed)
+    session = build_session(
+        CFG, n_agents=2, traffic=traffic, seed=seed, telemetry=telemetry
+    )
     report = run_session(
         session, traffic, n_waves=2, train_steps=10 if fast else 30
     )
@@ -69,11 +74,16 @@ def _serve_row(max_batch: int, seed: int, fast: bool) -> dict:
     return {k: s[k] for k in ROW_KEYS}
 
 
-def run(seed: int = 0, fast: bool = False, json_path=None):
+def run(seed: int = 0, fast: bool = False, json_path=None, trace_path=None):
     results = {}
+    telemetry = Telemetry(enabled=True) if trace_path else None
     print("config,req_per_sec,p50_ms,p99_ms,ticks_per_req,swaps,recompiles")
     for name, max_batch in (("single", 1), ("batched", 8)):
-        row = _serve_row(max_batch, seed, fast)
+        # trace only the batched row: the single row is the latency
+        # reference and should not carry even enabled-telemetry noise
+        row = _serve_row(
+            max_batch, seed, fast, telemetry if max_batch > 1 else None
+        )
         results[name] = row
         print(
             f"{name},{row['requests_per_sec']:.1f},{row['p50_latency_ms']:.2f},"
@@ -85,6 +95,9 @@ def run(seed: int = 0, fast: bool = False, json_path=None):
         / results["single"]["requests_per_sec"]
     )
     print(f"derived,batch_speedup={results['batched']['batch_speedup']:.2f}")
+    if trace_path:
+        write_trace(telemetry, trace_path)
+        print(f"wrote trace {trace_path}")
     if json_path:
         payload = {
             "benchmark": "serve_latency",

@@ -7,7 +7,7 @@ Keys encode the tree path; restore rebuilds against a reference structure
 from __future__ import annotations
 
 import os
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import numpy as np
@@ -15,7 +15,7 @@ import numpy as np
 _SEP = "|"
 
 
-def _flatten(tree) -> Dict[str, np.ndarray]:
+def _flatten(tree) -> dict[str, np.ndarray]:
     out = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
         key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)

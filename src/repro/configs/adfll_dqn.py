@@ -9,17 +9,16 @@ crops; we default to 24^3 synthetic volumes).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
 
 
 @dataclass(frozen=True)
 class DQNConfig:
-    volume_shape: Tuple[int, int, int] = (24, 24, 24)
-    box_size: Tuple[int, int, int] = (8, 8, 8)
+    volume_shape: tuple[int, int, int] = (24, 24, 24)
+    box_size: tuple[int, int, int] = (8, 8, 8)
     n_actions: int = 6  # +/- x, y, z
     frame_history: int = 1  # chain of locations in the state
-    conv_features: Tuple[int, ...] = (8, 16, 32)
-    hidden: Tuple[int, ...] = (128, 64)
+    conv_features: tuple[int, ...] = (8, 16, 32)
+    hidden: tuple[int, ...] = (128, 64)
     gamma: float = 0.9
     lr: float = 1e-3
     eps_start: float = 1.0
@@ -38,15 +37,15 @@ class ADFLLConfig:
     n_agents: int = 4
     n_hubs: int = 3
     # hub assignment per agent (paper: A1->H1, A2->H2, A3/A4->H3)
-    agent_hub: Tuple[int, ...] = (0, 1, 2, 2)
+    agent_hub: tuple[int, ...] = (0, 1, 2, 2)
     # relative training speed (paper: DGX-1 V100 agents ~2.5x faster than T4)
-    agent_speed: Tuple[float, ...] = (1.0, 1.0, 2.5, 2.5)
+    agent_speed: tuple[float, ...] = (1.0, 1.0, 2.5, 2.5)
     hub_sync_period: float = 1.0  # simulated time between hub syncs
     dropout: float = 0.0  # communication dropout probability
     rounds: int = 3
     erb_capacity: int = 2048
     erb_share_size: int = 512  # experiences shared per round
-    replay_mix: Tuple[float, float, float] = (0.5, 0.25, 0.25)
+    replay_mix: tuple[float, float, float] = (0.5, 0.25, 0.25)
     # fractions: (current task, personal past, incoming foreign)
     train_steps_per_round: int = 150
     seed: int = 0
@@ -77,7 +76,7 @@ class ADFLLConfig:
     link_drop: float = 0.0  # per-message gossip drop probability
     # -- sharing planes (beyond-paper: FedAsync-style weight plane) --------
     # which planes ride the topology: ("erb",), ("weights",), or both
-    share_planes: Tuple[str, ...] = ("erb",)
+    share_planes: tuple[str, ...] = ("erb",)
     # weight-plane wire compression: "none" (full float32 pytrees),
     # "int8" (dense quantized snapshots, ~4x), or "topk" (int8 top-k
     # deltas with sender-side error feedback, >=4x and usually ~15x)

@@ -10,7 +10,6 @@ exercises the identical code path as the full dry-run.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Block kinds
@@ -80,25 +79,25 @@ class ModelConfig:
     # Repeating pattern of (mixer, ffn) kinds. The pattern tiles over
     # n_layers - first_k_dense; the first first_k_dense layers are unrolled
     # (attn + dense FFN), DeepSeek style.
-    pattern: Tuple[Tuple[str, str], ...] = ((ATTN, FFN_DENSE),)
+    pattern: tuple[tuple[str, str], ...] = ((ATTN, FFN_DENSE),)
     first_k_dense: int = 0
     first_k_dense_d_ff: int = 0
     # --- attention ---------------------------------------------------------
     qkv_bias: bool = False
-    sliding_window: Optional[int] = None
+    sliding_window: int | None = None
     rope: str = "rope"  # rope | mrope | none
     rope_theta: float = 10_000.0
     attn_logit_softcap: float = 0.0
     # --- sub-configs --------------------------------------------------------
     moe: MoEConfig = field(default_factory=MoEConfig)
-    mla: Optional[MLAConfig] = None
+    mla: MLAConfig | None = None
     ssm: SSMConfig = field(default_factory=SSMConfig)
     xlstm: XLSTMConfig = field(default_factory=XLSTMConfig)
     # --- io ------------------------------------------------------------------
     # "tokens": int32 token ids; "embeds": precomputed frontend embeddings
     # (audio codec frames / vision patches) — the one allowed stub.
     input_kind: str = "tokens"
-    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t,h,w splits of head_dim/2
+    mrope_sections: tuple[int, int, int] = (16, 24, 24)  # t,h,w splits of head_dim/2
     # --- misc ----------------------------------------------------------------
     mlp_variant: str = "swiglu"  # swiglu | gelu
     norm: str = "rmsnorm"  # rmsnorm | layernorm
@@ -116,7 +115,7 @@ class ModelConfig:
         return self.head_dim or self.d_model // self.n_heads
 
     @property
-    def layer_pattern(self) -> Tuple[Tuple[str, str], ...]:
+    def layer_pattern(self) -> tuple[tuple[str, str], ...]:
         """Full per-layer (mixer, ffn) list, prefix + tiled pattern."""
         body = self.n_layers - self.first_k_dense
         p = len(self.pattern)

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass, replace
-from typing import Any, Dict, Tuple
+from typing import Any
 
 import jax.numpy as jnp
 import numpy as np
@@ -54,7 +54,7 @@ class ERB:
     """data: dict of arrays with leading dim = capacity; ``size`` filled."""
 
     meta: ERBMeta
-    data: Dict[str, Any]
+    data: dict[str, Any]
     capacity: int
     size: int = 0
     cursor: int = 0
@@ -66,7 +66,7 @@ class ERB:
 
 def erb_init(
     capacity: int,
-    obs_shape: Tuple[int, ...],
+    obs_shape: tuple[int, ...],
     *,
     task: TaskTag,
     source_agent: int = -1,
@@ -86,7 +86,7 @@ def erb_init(
     return ERB(meta=meta, data=data, capacity=capacity)
 
 
-def erb_add(erb: ERB, batch: Dict[str, np.ndarray]) -> ERB:
+def erb_add(erb: ERB, batch: dict[str, np.ndarray]) -> ERB:
     """Ring-append a batch of experiences (host-side, in place on data)."""
     n = int(batch["action"].shape[0])
     cap = erb.capacity
@@ -113,7 +113,7 @@ def erb_sample_indices(erb: ERB, rng: np.random.Generator, n: int) -> np.ndarray
 
 def erb_take(
     erb: ERB, idx: np.ndarray, *, use_pallas: bool = False
-) -> Dict[str, np.ndarray]:
+) -> dict[str, np.ndarray]:
     """Materialize the rows selected by ``idx`` (host gather, or the
     Pallas ``replay_gather`` kernel when ``use_pallas``)."""
     n = len(idx)
@@ -132,7 +132,7 @@ def erb_take(
 
 def erb_sample(
     erb: ERB, rng: np.random.Generator, n: int, *, use_pallas: bool = False
-) -> Dict[str, np.ndarray]:
+) -> dict[str, np.ndarray]:
     """Uniformly sample n experiences (with replacement if n > size)."""
     return erb_take(erb, erb_sample_indices(erb, rng, n), use_pallas=use_pallas)
 
@@ -140,7 +140,7 @@ def erb_sample(
 # -- flat row layout (device-resident replay) --------------------------------
 # The fleet engine keeps each ERB on device as one [size, F] float32 matrix
 # so a minibatch is a single row gather. Column order is fixed:
-FLAT_FIELDS: Tuple[str, ...] = (
+FLAT_FIELDS: tuple[str, ...] = (
     "obs",
     "loc",
     "action",
@@ -151,7 +151,7 @@ FLAT_FIELDS: Tuple[str, ...] = (
 )
 
 
-def flat_width(obs_shape: Tuple[int, ...]) -> int:
+def flat_width(obs_shape: tuple[int, ...]) -> int:
     """Row width of the flattened experience layout."""
     obs_f = int(np.prod(obs_shape))
     return 2 * obs_f + 3 + 3 + 3  # obs+next_obs, loc+next_loc, a/r/done
@@ -198,6 +198,6 @@ def erb_share_slice(
     return ERB(meta=meta, data=data, capacity=n, size=n, cursor=0)
 
 
-def stack_batches(batches) -> Dict[str, np.ndarray]:
+def stack_batches(batches) -> dict[str, np.ndarray]:
     keys = batches[0].keys()
     return {k: np.concatenate([b[k] for b in batches], 0) for k in keys}

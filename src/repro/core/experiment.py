@@ -19,8 +19,9 @@ curves, and bandwidth accounting become pluggable callbacks; the default
 
 from __future__ import annotations
 
+from collections.abc import Sequence
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Any
 
 
 @dataclass
@@ -45,7 +46,7 @@ class EvalPoint:
     t: float
     n_agents: int
     mean_err: float
-    per_agent: Dict[str, float] = field(default_factory=dict)
+    per_agent: dict[str, float] = field(default_factory=dict)
 
 
 @dataclass(frozen=True)
@@ -61,9 +62,9 @@ class ChurnEvent:
     at: float
     action: str  # "add" | "remove"
     count: int = 1
-    agent_id: Optional[int] = None
+    agent_id: int | None = None
     speed: float = 1.0
-    hub: Optional[int] = None
+    hub: int | None = None
 
     def __post_init__(self):
         if self.action not in ("add", "remove"):
@@ -109,28 +110,28 @@ class Report:
     makespan: float = 0.0
     n_rounds: int = 0
     comm_time: float = 0.0
-    history: List[RoundRecord] = field(default_factory=list)
+    history: list[RoundRecord] = field(default_factory=list)
     n_mixed: int = 0
     n_foreign_erbs: int = 0
     # -- transport ---------------------------------------------------------
-    bytes_by_plane: Dict[str, int] = field(default_factory=dict)
-    msgs_by_plane: Dict[str, int] = field(default_factory=dict)
-    plane_pushed: Dict[str, int] = field(default_factory=dict)
-    records_known: Dict[str, int] = field(default_factory=dict)
+    bytes_by_plane: dict[str, int] = field(default_factory=dict)
+    msgs_by_plane: dict[str, int] = field(default_factory=dict)
+    plane_pushed: dict[str, int] = field(default_factory=dict)
+    records_known: dict[str, int] = field(default_factory=dict)
     # -- evaluation --------------------------------------------------------
-    task_errors: Dict[str, Dict[str, float]] = field(default_factory=dict)
+    task_errors: dict[str, dict[str, float]] = field(default_factory=dict)
     mean_dist_err: float = float("nan")
     best_agent_err: float = float("nan")
-    eval_curve: List[EvalPoint] = field(default_factory=list)
-    eval_patients: Optional[int] = None
+    eval_curve: list[EvalPoint] = field(default_factory=list)
+    eval_patients: int | None = None
     eval_episodes: int = 0
-    extra: Dict[str, Any] = field(default_factory=dict)
+    extra: dict[str, Any] = field(default_factory=dict)
 
     @property
     def total_bytes(self) -> int:
         return sum(self.bytes_by_plane.values())
 
-    def agent_means(self) -> Dict[str, float]:
+    def agent_means(self) -> dict[str, float]:
         """Per-agent mean error across the evaluated tasks."""
         return {
             label: float(sum(errs.values()) / len(errs))
@@ -138,7 +139,7 @@ class Report:
             if errs
         }
 
-    def summary(self) -> Dict[str, Any]:
+    def summary(self) -> dict[str, Any]:
         """Flat JSON-able metrics (the ``configs`` entry CI gates on)."""
         out = {
             "system": self.system,
@@ -220,7 +221,7 @@ class HistoryRecorder(ExperimentHooks):
     (what used to be an inline ``self.history.append``)."""
 
     def __init__(self):
-        self.records: List[RoundRecord] = []
+        self.records: list[RoundRecord] = []
 
     def on_round_end(self, system, record: RoundRecord) -> None:
         self.records.append(record)
@@ -231,7 +232,7 @@ class CommLog(ExperimentHooks):
     link time and bytes the transport charged for it."""
 
     def __init__(self):
-        self.rows: List[Dict[str, Any]] = []
+        self.rows: list[dict[str, Any]] = []
 
     def on_push(self, system, agent_id: int, plane: str, result, t: float) -> None:
         self.rows.append(

@@ -23,7 +23,7 @@ wrapped as single-agent systems in ``repro.experiments.systems``.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import jax
 import numpy as np
@@ -47,6 +47,7 @@ from repro.rl.agent import DQNAgent
 from repro.rl.env import LandmarkEnv
 from repro.rl.fleet import FleetEngine
 from repro.rl.synth import make_volume
+from repro.telemetry import NULL, Telemetry
 
 
 def env_for(task: TaskTag, patient: int, cfg: DQNConfig) -> LandmarkEnv:
@@ -60,9 +61,9 @@ def evaluate_on_tasks(
     patients: Sequence[int],
     cfg: DQNConfig,
     *,
-    max_patients: Optional[int] = 4,
+    max_patients: int | None = 4,
     n_episodes: int = 4,
-) -> Dict[str, float]:
+) -> dict[str, float]:
     """Mean terminal distance per task over the held-out patients.
 
     ``max_patients`` caps how many of ``patients`` are evaluated (None =
@@ -104,17 +105,21 @@ class ADFLLSystem:
         tasks: Sequence[TaskTag],
         train_patients: Sequence[int],
         *,
-        seed: Optional[int] = None,
+        seed: int | None = None,
         hooks: Sequence[ExperimentHooks] = (),
+        telemetry: Telemetry | None = None,
     ):
         self.sys_cfg = sys_cfg
         self.dqn_cfg = dqn_cfg
         self.tasks = list(tasks)
         self.train_patients = list(train_patients)
         self.seed = int(sys_cfg.seed if seed is None else seed)
+        # observe-only: telemetry never touches a random stream or any
+        # run state, so enabled/disabled runs stay bit-identical
+        self.telemetry = telemetry if telemetry is not None else NULL
         self._recorder = HistoryRecorder()
-        self.hooks: Tuple[ExperimentHooks, ...] = (self._recorder, *hooks)
-        self.history: List[RoundRecord] = self._recorder.records
+        self.hooks: tuple[ExperimentHooks, ...] = (self._recorder, *hooks)
+        self.history: list[RoundRecord] = self._recorder.records
         self.rng = np.random.default_rng(self.seed)
         n_hubs = 0 if sys_cfg.topology == "gossip" else sys_cfg.n_hubs
         self.network = Network(
@@ -128,6 +133,7 @@ class ADFLLSystem:
                 drop=sys_cfg.link_drop,
             ),
         )
+        self.network.meter.bind(self.telemetry.registry)
         if sys_cfg.topology in ("gossip", "hybrid"):
             self.network.enable_gossip(
                 make_sampler(
@@ -137,11 +143,14 @@ class ADFLLSystem:
                 ),
                 rng=np.random.default_rng(self.seed + 3),
             )
+            self.network.gossip.telemetry = self.telemetry
         if sys_cfg.engine not in ("fleet", "fleet-eager", "stepwise"):
             raise ValueError(f"unknown engine: {sys_cfg.engine!r}")
-        self.engine: Optional[FleetEngine] = (
+        self.engine: FleetEngine | None = (
             FleetEngine(dqn_cfg) if sys_cfg.engine.startswith("fleet") else None
         )
+        if self.engine is not None:
+            self.engine.telemetry = self.telemetry
         self.use_erb = "erb" in sys_cfg.share_planes
         self.use_weights = "weights" in sys_cfg.share_planes
         if self.use_weights:
@@ -149,9 +158,12 @@ class ADFLLSystem:
         if sys_cfg.task_curriculum not in ("roundrobin", "blocked", "shuffled"):
             raise ValueError(f"unknown curriculum: {sys_cfg.task_curriculum!r}")
         self._task_rng = np.random.default_rng(self.seed + 4)
-        self._task_queue: List[int] = []
-        self.agents: Dict[int, DQNAgent] = {}
-        self.sched = Scheduler()
+        self._task_queue: list[int] = []
+        self.agents: dict[int, DQNAgent] = {}
+        self.sched = Scheduler(telemetry=self.telemetry)
+        if self.engine is not None:
+            self.engine.sim_clock = lambda: self.sched.now
+        self._tel_off_since: dict[int, float] = {}  # open offline windows
         self._task_cursor = 0
         self._next_agent_id = 0
         self._outstanding = 0  # finish events not yet processed
@@ -196,8 +208,8 @@ class ADFLLSystem:
         self,
         *,
         speed: float = 1.0,
-        hub_id: Optional[int] = None,
-        at: Optional[float] = None,
+        hub_id: int | None = None,
+        at: float | None = None,
     ) -> int:
         aid = self._next_agent_id
         self._next_agent_id += 1
@@ -229,7 +241,7 @@ class ADFLLSystem:
             self.population.note_depart(agent_id, self.sched.now)
         self.network.detach_agent(agent_id)
 
-    def live_agents(self) -> Dict[int, DQNAgent]:
+    def live_agents(self) -> dict[int, DQNAgent]:
         return {
             aid: a
             for aid, a in self.agents.items()
@@ -251,7 +263,20 @@ class ADFLLSystem:
             self.population.note_toggle(agent_id, online, self.sched.now)
         if online == was:
             return
-        self._emit("on_availability", agent_id, online, self.sched.now)
+        now = self.sched.now
+        if self.telemetry.enabled:
+            track = f"agent{agent_id}"
+            self.telemetry.instant(
+                "online" if online else "offline", track, now, agent=agent_id
+            )
+            self.telemetry.count("availability.toggles", 1, agent=agent_id)
+            if online:
+                t0 = self._tel_off_since.pop(agent_id, None)
+                if t0 is not None:
+                    self.telemetry.span("offline", track, t0, now, agent=agent_id)
+            else:
+                self._tel_off_since[agent_id] = now
+        self._emit("on_availability", agent_id, online, now)
         if online and agent_id in self._deferred:
             self._deferred.discard(agent_id)
             self._start_round(agent_id)
@@ -291,9 +316,9 @@ class ADFLLSystem:
 
         self.apply_population(PopulationSpec.from_churn(events))
 
-    def _apply_churn(self, ev: ChurnEvent, t: float) -> List[int]:
+    def _apply_churn(self, ev: ChurnEvent, t: float) -> list[int]:
         self._pending_churn -= 1
-        ids: List[int] = []
+        ids: list[int] = []
         if ev.action == "add":
             for _ in range(ev.count):
                 ids.append(self.add_agent(speed=ev.speed, hub_id=ev.hub))
@@ -309,6 +334,11 @@ class ADFLLSystem:
                     break  # unknown/already-departed id: nothing to remove
                 self.remove_agent(aid)
                 ids.append(aid)
+        if self.telemetry.enabled and ids:
+            self.telemetry.instant(
+                f"churn.{ev.action}", "population", t, agents=ids
+            )
+            self.telemetry.count("churn.events", 1, action=ev.action)
         self._emit("on_churn", ev, ids, t)
         return ids
 
@@ -330,6 +360,11 @@ class ADFLLSystem:
     def _apply_hub_failure(self, ev: HubFailure, t: float) -> None:
         self._pending_failures -= 1
         orphaned = self.network.fail_hub(ev.hub_id)
+        if self.telemetry.enabled:
+            self.telemetry.instant(
+                "hub.failure", "population", t, hub=ev.hub_id, orphaned=orphaned
+            )
+            self.telemetry.count("hub.failures", 1)
         self._emit("on_hub_failure", ev, orphaned, t)
 
     # -- round machinery --------------------------------------------------------
@@ -366,6 +401,11 @@ class ADFLLSystem:
         if getattr(agent, "online", True) is False:
             # offline: park the round; set_online(True) resumes it
             self._deferred.add(agent_id)
+            if self.telemetry.enabled:
+                self.telemetry.instant(
+                    "round.deferred", f"agent{agent_id}", self.sched.now
+                )
+                self.telemetry.count("rounds.deferred", 1)
             return
         task = self._next_task()
         self._emit("on_round_start", agent_id, task, self.sched.now)
@@ -403,6 +443,23 @@ class ADFLLSystem:
         # submission order, so history order matches sequential driving
         round_idx = agent.rounds_done - 1
         n_incoming = len(incoming)
+        if self.telemetry.enabled:
+            self.telemetry.span(
+                "round",
+                f"agent{agent_id}",
+                start,
+                end,
+                task=task.name,
+                round_idx=round_idx,
+                n_incoming=n_incoming,
+                n_mixed=n_mixed,
+                comm=comm,
+            )
+            self.telemetry.count("rounds.started", 1)
+            self.telemetry.observe("round.duration", dur)
+            self.telemetry.observe("round.incoming", n_incoming)
+            if n_mixed:
+                self.telemetry.count("mix.snapshots", n_mixed)
 
         def emit_record(loss):
             self._emit(
@@ -434,12 +491,20 @@ class ADFLLSystem:
             if self.use_erb:
                 res = self.network.agent_push(aid, erb)
                 comm_out += res.comm_time
+                if self.telemetry.enabled and res.comm_time > 0.0:
+                    self.telemetry.span(
+                        "push.erb", f"agent{aid}", t, t + res.comm_time
+                    )
                 self._emit("on_push", aid, "erb", res, t)
             if self.use_weights:
                 res = self.network.agent_push(
                     aid, a.snapshot_params(t), plane="weights"
                 )
                 comm_out += res.comm_time
+                if self.telemetry.enabled and res.comm_time > 0.0:
+                    self.telemetry.span(
+                        "push.weights", f"agent{aid}", t, t + res.comm_time
+                    )
                 self._emit("on_push", aid, "weights", res, t)
             if comm_out > 0.0:
                 # the upload occupies the agent's link before its next round
@@ -454,7 +519,7 @@ class ADFLLSystem:
         self._outstanding += 1
         self.sched.at(end, finish, tag=f"A{agent_id}_round_done")
 
-    def _mix_peer_weights(self, agent_id: int) -> Tuple[int, float]:
+    def _mix_peer_weights(self, agent_id: int) -> tuple[int, float]:
         """Pull unseen peer snapshots and fold them into the agent's
         params, staleness-discounted (FedAsync alpha*s(dtau)); compressed
         snapshots are dequantized inside the mix.  Returns the number of
@@ -525,6 +590,8 @@ class ADFLLSystem:
             }
         if self.population is not None:
             extra["population"] = self.population.summary(float(makespan))
+        if self.telemetry.enabled:
+            extra["telemetry"] = self.telemetry.summary()
         return Report(
             system="adfll",
             seed=self.seed,
@@ -549,9 +616,9 @@ class ADFLLSystem:
         tasks: Sequence[TaskTag],
         patients: Sequence[int],
         *,
-        max_patients: Optional[int] = 4,
+        max_patients: int | None = 4,
         n_episodes: int = 4,
-    ) -> Dict[str, Dict[str, float]]:
+    ) -> dict[str, dict[str, float]]:
         """Per-live-agent mean terminal distance per task (labels follow
         the paper's 1-based numbering: agent 0 is ``"Agent1"``)."""
         return {
@@ -680,8 +747,8 @@ class CentralAggregationSystem:
         self,
         round_idx: int,
         *,
-        steps: Optional[int] = None,
-        erb_capacity: Optional[int] = None,
+        steps: int | None = None,
+        erb_capacity: int | None = None,
     ):
         steps = self.steps if steps is None else steps
         erb_capacity = self.erb_capacity if erb_capacity is None else erb_capacity
@@ -725,9 +792,9 @@ class CentralAggregationSystem:
         tasks: Sequence[TaskTag],
         patients: Sequence[int],
         *,
-        max_patients: Optional[int] = 4,
+        max_patients: int | None = 4,
         n_episodes: int = 4,
-    ) -> Dict[str, Dict[str, float]]:
+    ) -> dict[str, dict[str, float]]:
         return {
             "FedAvg": evaluate_on_tasks(
                 self.agents[0],

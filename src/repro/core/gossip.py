@@ -27,12 +27,14 @@ identically, which is what makes ``topology="hybrid"`` coherent.
 from __future__ import annotations
 
 import math
+from collections.abc import Callable, Sequence
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence, Set
+from typing import Any
 
 import numpy as np
 
 from repro.core.plane import SharePlane
+from repro.telemetry import NULL, MetricsRegistry, Telemetry
 
 # ---------------------------------------------------------------------------
 # link + bandwidth accounting
@@ -71,19 +73,19 @@ class SiteLinks:
     """
 
     default: LinkModel
-    agent_site: Dict[int, int] = field(default_factory=dict)
-    hub_site: Dict[int, int] = field(default_factory=dict)
-    intra: Optional[LinkModel] = None
-    inter: Optional[LinkModel] = None
+    agent_site: dict[int, int] = field(default_factory=dict)
+    hub_site: dict[int, int] = field(default_factory=dict)
+    intra: LinkModel | None = None
+    inter: LinkModel | None = None
 
-    def _pick(self, same_site: Optional[bool]) -> LinkModel:
+    def _pick(self, same_site: bool | None) -> LinkModel:
         if same_site is None:
             return self.default
         if same_site:
             return self.intra if self.intra is not None else self.default
         return self.inter if self.inter is not None else self.default
 
-    def agent_hub(self, agent_id: int, hub_id: Optional[int]) -> LinkModel:
+    def agent_hub(self, agent_id: int, hub_id: int | None) -> LinkModel:
         sa = self.agent_site.get(agent_id)
         sh = self.hub_site.get(hub_id) if hub_id is not None else None
         if sa is None or sh is None:
@@ -97,16 +99,44 @@ class SiteLinks:
         return self._pick(sa == sb)
 
 
-@dataclass
 class BandwidthMeter:
-    """Bytes/messages that crossed a link, keyed by plane name."""
+    """Bytes/messages that crossed a link, keyed by plane name.
 
-    bytes_by_plane: Dict[str, int] = field(default_factory=dict)
-    msgs_by_plane: Dict[str, int] = field(default_factory=dict)
+    Since the telemetry subsystem landed, the meter is a thin view over
+    ``comm.bytes`` / ``comm.msgs`` counter series in a
+    :class:`~repro.telemetry.MetricsRegistry`.  It owns a private,
+    always-enabled registry by default so run semantics (the per-plane
+    byte totals in :class:`~repro.core.experiment.Report`) never depend
+    on telemetry being switched on; :meth:`bind` rebases it onto a run
+    registry so the same totals also appear in exported traces.
+    The ``bytes_by_plane`` / ``msgs_by_plane`` / ``total_bytes``
+    interface is unchanged.
+    """
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        if registry is None or not registry.enabled:
+            registry = MetricsRegistry(max_series=64)
+        self._registry = registry
+
+    def bind(self, registry: MetricsRegistry) -> None:
+        """Account onto ``registry`` from now on (ignored when disabled —
+        a NullRegistry would silently drop the run's byte totals)."""
+        if registry.enabled:
+            self._registry = registry
 
     def account(self, plane: str, nbytes: int) -> None:
-        self.bytes_by_plane[plane] = self.bytes_by_plane.get(plane, 0) + int(nbytes)
-        self.msgs_by_plane[plane] = self.msgs_by_plane.get(plane, 0) + 1
+        self._registry.count("comm.bytes", int(nbytes), plane=plane)
+        self._registry.count("comm.msgs", 1, plane=plane)
+
+    @property
+    def bytes_by_plane(self) -> dict[str, int]:
+        by = self._registry.counters_by_label("comm.bytes", "plane")
+        return {k: int(v) for k, v in sorted(by.items())}
+
+    @property
+    def msgs_by_plane(self) -> dict[str, int]:
+        by = self._registry.counters_by_label("comm.msgs", "plane")
+        return {k: int(v) for k, v in sorted(by.items())}
 
     @property
     def total_bytes(self) -> int:
@@ -126,7 +156,7 @@ class PeerSampler:
     def new_round(self, t: float) -> None:
         """Hook called once per anti-entropy round (time-varying policies)."""
 
-    def peers(self, agent_id: int, ids: Sequence[int]) -> List[int]:
+    def peers(self, agent_id: int, ids: Sequence[int]) -> list[int]:
         raise NotImplementedError
 
 
@@ -139,7 +169,7 @@ class RingSampler(PeerSampler):
     def __init__(self, fanout: int = 1):
         self.fanout = max(1, int(fanout))
 
-    def peers(self, agent_id: int, ids: Sequence[int]) -> List[int]:
+    def peers(self, agent_id: int, ids: Sequence[int]) -> list[int]:
         ring = sorted(ids)
         if agent_id not in ring or len(ring) < 2:
             return []
@@ -157,7 +187,7 @@ class RandomKSampler(PeerSampler):
         self.k = max(1, int(k))
         self.rng = np.random.default_rng(seed)
 
-    def peers(self, agent_id: int, ids: Sequence[int]) -> List[int]:
+    def peers(self, agent_id: int, ids: Sequence[int]) -> list[int]:
         others = sorted(x for x in ids if x != agent_id)
         if not others:
             return []
@@ -171,7 +201,7 @@ class FullMeshSampler(PeerSampler):
 
     name = "full"
 
-    def peers(self, agent_id: int, ids: Sequence[int]) -> List[int]:
+    def peers(self, agent_id: int, ids: Sequence[int]) -> list[int]:
         return [x for x in sorted(ids) if x != agent_id]
 
 
@@ -189,7 +219,7 @@ class TimeVaryingSampler(PeerSampler):
     def new_round(self, t: float) -> None:
         self._round += 1
 
-    def peers(self, agent_id: int, ids: Sequence[int]) -> List[int]:
+    def peers(self, agent_id: int, ids: Sequence[int]) -> list[int]:
         ring = sorted(ids)
         n = len(ring)
         if agent_id not in ring or n < 2:
@@ -247,22 +277,24 @@ class GossipTopology:
 
     def __init__(
         self,
-        planes: Dict[str, SharePlane],
+        planes: dict[str, SharePlane],
         sampler: PeerSampler,
         *,
-        link: Optional[LinkModel] = None,
-        meter: Optional[BandwidthMeter] = None,
-        rng: Optional[np.random.Generator] = None,
-        site_links: Optional[SiteLinks] = None,
-        online: Optional[Callable[[int], bool]] = None,
+        link: LinkModel | None = None,
+        meter: BandwidthMeter | None = None,
+        rng: np.random.Generator | None = None,
+        site_links: SiteLinks | None = None,
+        online: Callable[[int], bool] | None = None,
+        telemetry: Telemetry | None = None,
     ):
         self.planes = planes  # shared registry (same dict as Network.planes)
         self.sampler = sampler
         self.link = link if link is not None else LinkModel()
         self.meter = meter if meter is not None else BandwidthMeter()
+        self.telemetry = telemetry if telemetry is not None else NULL
         self.site_links = site_links  # shared with Network.configure_sites
         self.rng = rng if rng is not None else np.random.default_rng(0)
-        self.stores: Dict[int, Dict[str, Dict[str, Any]]] = {}
+        self.stores: dict[int, dict[str, dict[str, Any]]] = {}
         self.stats = GossipStats()
         # availability view (population simulator): when set, anti-entropy
         # rounds run over online agents only — an offline peer is neither
@@ -277,7 +309,7 @@ class GossipTopology:
     def remove_agent(self, agent_id: int) -> None:
         self.stores.pop(agent_id, None)
 
-    def local_store(self, agent_id: int, plane: str) -> Dict[str, Any]:
+    def local_store(self, agent_id: int, plane: str) -> dict[str, Any]:
         """The agent's own store for one plane ({} if the agent has left —
         never re-created, so departed agents stay departed)."""
         agent = self.stores.get(agent_id)
@@ -292,7 +324,7 @@ class GossipTopology:
             return False
         return plane.admit(self.local_store(agent_id, plane.name), item)
 
-    def pull_local(self, agent_id: int, seen: Set[str], plane: str) -> List[Any]:
+    def pull_local(self, agent_id: int, seen: set[str], plane: str) -> list[Any]:
         return [
             v
             for k, v in sorted(self.local_store(agent_id, plane).items())
@@ -341,6 +373,8 @@ class GossipTopology:
     def _exchange(self, sched, t: float, a: int, b: int) -> int:
         """Push-pull reconciliation of one pair, every plane."""
         sent = 0
+        pair_bytes = 0
+        t_last = t
         link = self.pair_link(a, b)
         for name in sorted(self.planes):
             plane = self.planes[name]
@@ -353,19 +387,37 @@ class GossipTopology:
                     sent += 1
                     if link.drop > 0.0 and self.rng.random() < link.drop:
                         self.stats.n_dropped += 1
+                        self.telemetry.count("gossip.dropped", 1, plane=name)
                         continue
                     nbytes = plane.payload_nbytes(rec)
+                    pair_bytes += nbytes
                     self.meter.account(name, nbytes)
                     if sched is None:
                         self._deliver(dst, rec, name)
                     else:
+                        arrival = t + link.transfer_time(nbytes)
+                        t_last = max(t_last, arrival)
                         sched.at(
-                            t + link.transfer_time(nbytes),
+                            arrival,
                             lambda s, tt, d=dst, r=rec, p=name: self._deliver(
                                 d, r, p
                             ),
                             tag=f"gossip_deliver_{name}",
                         )
+        if self.telemetry.enabled and sent:
+            # span from initiation to the last in-flight delivery of the
+            # pair — a "gossip burst" on the shared gossip track
+            self.telemetry.span(
+                "gossip.exchange",
+                "gossip",
+                t,
+                t_last,
+                pair=f"{a}<->{b}",
+                records=sent,
+                bytes=pair_bytes,
+            )
+            self.telemetry.count("gossip.exchange.bytes", pair_bytes)
+            self.telemetry.observe("gossip.exchange.records", sent)
         return sent
 
     def _deliver(self, dst: int, rec: Any, plane_name: str) -> bool:
@@ -378,8 +430,8 @@ class GossipTopology:
         return False
 
     # -- introspection ------------------------------------------------------
-    def all_known(self, plane: str) -> Set[str]:
-        ids: Set[str] = set()
+    def all_known(self, plane: str) -> set[str]:
+        ids: set[str] = set()
         for aid in self.stores:
             ids |= set(self.local_store(aid, plane))
         return ids

@@ -20,8 +20,9 @@ modeled (hubs are assumed to sit on fast interconnect).
 
 from __future__ import annotations
 
+from collections.abc import Sequence
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Set
+from typing import Any
 
 import numpy as np
 
@@ -34,15 +35,15 @@ _DEFAULT_PLANE = ERBPlane()
 @dataclass
 class Hub:
     hub_id: int
-    stores: Dict[str, Dict[str, Any]] = field(default_factory=dict)
+    stores: dict[str, dict[str, Any]] = field(default_factory=dict)
     alive: bool = True
 
-    def store(self, plane: str = "erb") -> Dict[str, Any]:
+    def store(self, plane: str = "erb") -> dict[str, Any]:
         """The record_id -> record map for one plane (created on demand)."""
         return self.stores.setdefault(plane, {})
 
     @property
-    def database(self) -> Dict[str, Any]:
+    def database(self) -> dict[str, Any]:
         """The ERB-plane store (the paper's 'distributed database')."""
         return self.store("erb")
 
@@ -52,13 +53,13 @@ class Hub:
             return False
         return plane.admit(self.store(plane.name), item)
 
-    def pull_unseen(self, seen: Set[str], plane: str = "erb") -> List[Any]:
+    def pull_unseen(self, seen: set[str], plane: str = "erb") -> list[Any]:
         """Hub -> agent: every record the agent has not yet consumed."""
         if not self.alive:
             return []
         return [v for k, v in sorted(self.store(plane).items()) if k not in seen]
 
-    def snapshot(self) -> List[dict]:
+    def snapshot(self) -> list[dict]:
         """Fig. 7 table: one row per ERB in the shared database."""
         return [
             {
@@ -82,7 +83,7 @@ def sync_hubs(
     rng: np.random.Generator,
     dropout: float = 0.0,
     planes: Sequence[SharePlane] = (_DEFAULT_PLANE,),
-    meter: Optional[BandwidthMeter] = None,
+    meter: BandwidthMeter | None = None,
 ) -> int:
     """Periodic pairwise database sync over every registered plane.
 

@@ -10,8 +10,9 @@ agnosticism claim at framework level.
 
 from __future__ import annotations
 
+from collections.abc import Callable, Sequence
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any
 
 import numpy as np
 
@@ -29,18 +30,18 @@ class LifelongTrainer:
     batch_size: int
     mix: Sequence[float] = (0.5, 0.25, 0.25)
     rng: np.random.Generator = field(default_factory=lambda: np.random.default_rng(0))
-    personal: List[ERB] = field(default_factory=list)
+    personal: list[ERB] = field(default_factory=list)
     seen_erb_ids: set = field(default_factory=set)
 
     def __post_init__(self):
         self.sampler = SelectiveReplaySampler(mix=self.mix)
 
     def steps(
-        self, n: int, current: Optional[ERB], incoming: Sequence[ERB] = ()
-    ) -> Dict[str, float]:
+        self, n: int, current: ERB | None, incoming: Sequence[ERB] = ()
+    ) -> dict[str, float]:
         for e in incoming:
             self.seen_erb_ids.add(e.meta.erb_id)
-        metrics: Dict[str, float] = {}
+        metrics: dict[str, float] = {}
         for _ in range(n):
             batch = self.sampler.sample(
                 self.rng,

@@ -29,8 +29,9 @@ liveness, and hub-hub sync apply to all planes uniformly.
 
 from __future__ import annotations
 
+from collections.abc import Iterator
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterator, List, Optional, Set, Tuple
+from typing import Any
 
 import numpy as np
 
@@ -70,7 +71,7 @@ class PullResult:
     ``comm_time`` / ``nbytes`` accounting.
     """
 
-    records: Tuple[Any, ...] = ()
+    records: tuple[Any, ...] = ()
     comm_time: float = 0.0
     nbytes: int = 0
 
@@ -99,22 +100,22 @@ class PullResult:
 
 @dataclass
 class Network:
-    hubs: List[Hub]
-    agent_hub: Dict[int, int] = field(default_factory=dict)
+    hubs: list[Hub]
+    agent_hub: dict[int, int] = field(default_factory=dict)
     dropout: float = 0.0
     rng: np.random.Generator = field(default_factory=lambda: np.random.default_rng(0))
-    planes: Dict[str, SharePlane] = field(default_factory=lambda: {"erb": ERBPlane()})
+    planes: dict[str, SharePlane] = field(default_factory=lambda: {"erb": ERBPlane()})
     topology: str = "hub"  # hub | gossip | hybrid
     link: LinkModel = field(default_factory=LinkModel)
     meter: BandwidthMeter = field(default_factory=BandwidthMeter)
-    gossip: Optional[GossipTopology] = None
+    gossip: GossipTopology | None = None
     # statistics (aggregate and per plane)
     n_pushed: int = 0
     n_dropped: int = 0
     n_synced: int = 0
-    plane_pushed: Dict[str, int] = field(default_factory=dict)
+    plane_pushed: dict[str, int] = field(default_factory=dict)
     # per-link heterogeneous rates (None = every leg uses `link`)
-    site_links: Optional[SiteLinks] = None
+    site_links: SiteLinks | None = None
 
     def __post_init__(self):
         if self.topology not in ("hub", "gossip", "hybrid"):
@@ -125,7 +126,7 @@ class Network:
         self,
         sampler: PeerSampler,
         *,
-        rng: Optional[np.random.Generator] = None,
+        rng: np.random.Generator | None = None,
     ) -> GossipTopology:
         """Attach a gossip overlay sharing this network's planes/meter/link."""
         self.gossip = GossipTopology(
@@ -142,11 +143,11 @@ class Network:
 
     def configure_sites(
         self,
-        agent_site: Dict[int, int],
+        agent_site: dict[int, int],
         *,
-        hub_site: Optional[Dict[int, int]] = None,
-        intra: Optional[LinkModel] = None,
-        inter: Optional[LinkModel] = None,
+        hub_site: dict[int, int] | None = None,
+        intra: LinkModel | None = None,
+        inter: LinkModel | None = None,
     ) -> SiteLinks:
         """Enable per-link heterogeneous rates (fast intra-site, slow
         cross-site).  Endpoints without a site keep the default link;
@@ -172,7 +173,7 @@ class Network:
         self.planes[plane.name] = plane
         return plane
 
-    def attach_agent(self, agent_id: int, hub_id: Optional[int] = None):
+    def attach_agent(self, agent_id: int, hub_id: int | None = None):
         """New agents attach to the least-loaded live hub by default.
 
         Under ``hybrid``, agents attached before :meth:`enable_gossip`
@@ -258,7 +259,7 @@ class Network:
         return PushResult(delivered, comm, nbytes_out)
 
     def agent_pull(
-        self, agent_id: int, seen: Set[str], plane: str = "erb"
+        self, agent_id: int, seen: set[str], plane: str = "erb"
     ) -> PullResult:
         """Every unseen record reachable by the agent on ``plane``.
 
@@ -268,10 +269,10 @@ class Network:
         hold locally.  The result carries the records plus the priced
         link time/bytes of the hub leg."""
         pl = self.planes[plane]
-        local: List[Any] = []
+        local: list[Any] = []
         if self.gossip is not None:
             local = self.gossip.pull_local(agent_id, seen, plane)
-        out: List[Any] = []
+        out: list[Any] = []
         comm, nbytes_total = 0.0, 0
         if self.topology != "gossip" and agent_id in self.agent_hub:
             skip = set(seen) | {pl.key(e) for e in local}
@@ -303,7 +304,7 @@ class Network:
         return n
 
     # -- failures ------------------------------------------------------------
-    def fail_hub(self, hub_id: int) -> List[int]:
+    def fail_hub(self, hub_id: int) -> list[int]:
         """Kill a hub; returns the agents it stranded.
 
         Orphans re-home to the least-loaded surviving hub when one
@@ -318,8 +319,8 @@ class Network:
                 self.attach_agent(a)
         return orphaned
 
-    def all_known(self, plane: str = "erb") -> Set[str]:
-        ids: Set[str] = set()
+    def all_known(self, plane: str = "erb") -> set[str]:
+        ids: set[str] = set()
         for h in self.hubs:
             ids |= set(h.store(plane))
         if self.gossip is not None:

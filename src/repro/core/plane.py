@@ -38,8 +38,9 @@ combination.
 from __future__ import annotations
 
 import itertools
+from collections.abc import Sequence
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any
 
 import jax
 import numpy as np
@@ -89,8 +90,8 @@ class QuantizedLeaf:
 
     q: np.ndarray  # int8 codes, flat
     scale: float
-    shape: Tuple[int, ...]
-    idx: Optional[np.ndarray] = None  # int32 flat coords (top-k deltas)
+    shape: tuple[int, ...]
+    idx: np.ndarray | None = None  # int32 flat coords (top-k deltas)
 
     @property
     def nbytes(self) -> int:
@@ -103,7 +104,7 @@ class QuantizedLeaf:
         return (self.q.astype(np.float32) * self.scale).reshape(self.shape)
 
 
-def _quantize_int8(x: np.ndarray) -> Tuple[np.ndarray, float]:
+def _quantize_int8(x: np.ndarray) -> tuple[np.ndarray, float]:
     """Symmetric per-tensor int8: ``x ~= q * scale`` with |q| <= 127."""
     amax = float(np.max(np.abs(x))) if x.size else 0.0
     if amax <= 0.0:
@@ -136,7 +137,7 @@ class CompressedWeightSnapshot:
     round_idx: int
     sim_time: float
     mode: str
-    leaves: Tuple[QuantizedLeaf, ...]
+    leaves: tuple[QuantizedLeaf, ...]
     treedef: Any
     payload_nbytes: int
     dense_params: Any = None  # delta mode: sender-side reconstruction
@@ -162,7 +163,7 @@ class SharePlane:
     A plane never talks to the network itself; :class:`Network`,
     ``sync_hubs``, and :class:`~repro.core.gossip.GossipTopology`
     consult it when inserting records into a per-plane store
-    (``Dict[record_id, record]``), when encoding records for the wire,
+    (``dict[record_id, record]``), when encoding records for the wire,
     and when pricing them for bandwidth accounting.
     """
 
@@ -171,7 +172,7 @@ class SharePlane:
     def key(self, item: Any) -> str:
         raise NotImplementedError
 
-    def admit(self, store: Dict[str, Any], item: Any) -> bool:
+    def admit(self, store: dict[str, Any], item: Any) -> bool:
         """Insert ``item`` into a hub store. Returns True iff newly kept."""
         k = self.key(item)
         if k in store:
@@ -180,7 +181,7 @@ class SharePlane:
         self.evict(store)
         return k in store
 
-    def evict(self, store: Dict[str, Any]) -> None:
+    def evict(self, store: dict[str, Any]) -> None:
         """Hub-side retention policy; default keeps everything."""
 
     def encode(self, item: Any) -> Any:
@@ -225,7 +226,7 @@ class WeightPlane(SharePlane):
     def key(self, item: WeightSnapshot) -> str:
         return item.snap_id
 
-    def admit(self, store: Dict[str, Any], item: WeightSnapshot) -> bool:
+    def admit(self, store: dict[str, Any], item: WeightSnapshot) -> bool:
         if item.snap_id in store:
             return False
         newest = max(
@@ -238,8 +239,8 @@ class WeightPlane(SharePlane):
         self.evict(store)
         return item.snap_id in store
 
-    def evict(self, store: Dict[str, Any]) -> None:
-        by_agent: Dict[int, List[WeightSnapshot]] = {}
+    def evict(self, store: dict[str, Any]) -> None:
+        by_agent: dict[int, list[WeightSnapshot]] = {}
         for s in store.values():
             by_agent.setdefault(s.agent_id, []).append(s)
         for snaps in by_agent.values():
@@ -284,7 +285,7 @@ class CompressedWeightPlane(WeightPlane):
             raise ValueError(f"unknown compression: {compression!r}")
         self.compression = compression
         self.k_frac = float(k_frac)
-        self._ref: Dict[int, Any] = {}  # per-sender transmitted state
+        self._ref: dict[int, Any] = {}  # per-sender transmitted state
 
     def forget_agent(self, agent_id: int) -> None:
         """Departed senders free their reference pytree (churn runs would
@@ -297,8 +298,8 @@ class CompressedWeightPlane(WeightPlane):
         flat, treedef = jax.tree_util.tree_flatten(item.params)
         flat = [np.asarray(x, np.float32) for x in flat]
         ref = self._ref.get(item.agent_id)
-        leaves: List[QuantizedLeaf] = []
-        recon: List[np.ndarray] = []
+        leaves: list[QuantizedLeaf] = []
+        recon: list[np.ndarray] = []
         if self.compression == "int8" or ref is None:
             mode = "dense"
             for x in flat:

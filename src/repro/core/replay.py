@@ -17,8 +17,8 @@ exactly the same order, so they select bit-identical batches.
 
 from __future__ import annotations
 
+from collections.abc import Sequence
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -31,7 +31,7 @@ class ReplayPlan:
     the final in-batch shuffle. ``picks`` concatenated in order (before
     ``perm``) spell out the batch exactly as the host path stacks it."""
 
-    picks: Tuple[Tuple[ERB, np.ndarray], ...]  # (erb, local row indices)
+    picks: tuple[tuple[ERB, np.ndarray], ...]  # (erb, local row indices)
     perm: np.ndarray = field(repr=False)  # [batch_size] final shuffle
 
     @property
@@ -51,13 +51,13 @@ class SelectiveReplaySampler:
         self,
         rng: np.random.Generator,
         batch_size: int,
-        current: Optional[ERB],
+        current: ERB | None,
         personal: Sequence[ERB] = (),
         incoming: Sequence[ERB] = (),
     ) -> ReplayPlan:
         """Select which rows make up the next minibatch without touching
         the experience data itself."""
-        pools: List[List[ERB]] = [
+        pools: list[list[ERB]] = [
             [e for e in ([current] if current is not None else []) if len(e) > 0],
             [e for e in personal if len(e) > 0],
             [e for e in incoming if len(e) > 0],
@@ -72,7 +72,7 @@ class SelectiveReplaySampler:
         counts = np.floor(weights * batch_size).astype(int)
         counts[int(np.argmax(weights))] += batch_size - counts.sum()
 
-        picks: List[Tuple[ERB, np.ndarray]] = []
+        picks: list[tuple[ERB, np.ndarray]] = []
         for pool, n in zip(pools, counts, strict=True):
             if n == 0 or not pool:
                 continue
@@ -88,14 +88,14 @@ class SelectiveReplaySampler:
         self,
         rng: np.random.Generator,
         batch_size: int,
-        current: Optional[ERB],
+        current: ERB | None,
         personal: Sequence[ERB] = (),
         incoming: Sequence[ERB] = (),
-    ) -> Dict[str, np.ndarray]:
+    ) -> dict[str, np.ndarray]:
         plan = self.plan(rng, batch_size, current, personal=personal, incoming=incoming)
         return self.materialize(plan)
 
-    def materialize(self, plan: ReplayPlan) -> Dict[str, np.ndarray]:
+    def materialize(self, plan: ReplayPlan) -> dict[str, np.ndarray]:
         """Host-side row gather of a plan (the classic path)."""
         batches = [
             erb_take(erb, idx, use_pallas=self.use_pallas) for erb, idx in plan.picks

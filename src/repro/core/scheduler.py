@@ -23,8 +23,10 @@ from __future__ import annotations
 import heapq
 import itertools
 from collections import deque
+from collections.abc import Callable
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+
+from repro.telemetry import NULL, Telemetry
 
 EventFn = Callable[["Scheduler", float], None]
 
@@ -58,7 +60,7 @@ class _Event:
     seq: int
     fn: EventFn = field(compare=False)
     tag: str = field(compare=False, default="")
-    handle: Optional[Handle] = field(compare=False, default=None)
+    handle: Handle | None = field(compare=False, default=None)
 
 
 class Scheduler:
@@ -68,15 +70,27 @@ class Scheduler:
     *newest* entries (``log_dropped`` counts evictions) — opt in for
     long population runs, where logging every tagged event forever would
     grow host memory linearly with simulated time.
+
+    With a :class:`~repro.telemetry.Telemetry` bundle attached, every
+    tagged event additionally lands as an instant on the ``scheduler``
+    sim-clock track and increments the ``sched.events{tag=...}``
+    counter; the ``log``/``log_dropped`` ring stays as-is, so existing
+    consumers keep working unchanged.
     """
 
-    def __init__(self, log_max: Optional[int] = None):
-        self._heap: List[_Event] = []
+    def __init__(
+        self,
+        log_max: int | None = None,
+        *,
+        telemetry: Telemetry | None = None,
+    ):
+        self._heap: list[_Event] = []
         self._seq = itertools.count()
         self.now = 0.0
         self.log_max = log_max
         self.log = deque(maxlen=log_max) if log_max is not None else []
         self.log_dropped = 0
+        self.telemetry = telemetry if telemetry is not None else NULL
 
     def at(self, time: float, fn: EventFn, tag: str = "") -> Handle:
         handle = Handle()
@@ -91,8 +105,8 @@ class Scheduler:
         period: float,
         fn: EventFn,
         tag: str = "",
-        until: Optional[float] = None,
-        phase: Optional[float] = None,
+        until: float | None = None,
+        phase: float | None = None,
     ) -> Handle:
         """Periodic event; first firing after ``phase`` (default: one
         period), so co-periodic timers can be offset from each other.
@@ -134,11 +148,14 @@ class Scheduler:
         if self.log_max is not None and len(self.log) >= self.log_max:
             self.log_dropped += 1
         self.log.append((self.now, tag))
+        if self.telemetry.enabled:
+            self.telemetry.instant(tag, "scheduler", self.now)
+            self.telemetry.count("sched.events", 1, tag=tag)
 
     def run(
         self,
         until: float = float("inf"),
-        stop: Optional[Callable[[], bool]] = None,
+        stop: Callable[[], bool] | None = None,
     ) -> float:
         while self._heap:
             ev = heapq.heappop(self._heap)

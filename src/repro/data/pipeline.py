@@ -10,8 +10,8 @@ Two kinds of streams:
 
 from __future__ import annotations
 
+from collections.abc import Iterator, Sequence
 from dataclasses import dataclass
-from typing import Dict, Iterator, Sequence
 
 import numpy as np
 
@@ -38,7 +38,7 @@ def _style_tokens(rng, vocab, seq, style):
 
 def token_batches(
     cfg: TokenStreamConfig, style: int = 0
-) -> Iterator[Dict[str, np.ndarray]]:
+) -> Iterator[dict[str, np.ndarray]]:
     rng = np.random.default_rng(cfg.seed + 7919 * style)
     while True:
         toks = np.stack(
@@ -81,7 +81,7 @@ def lm_task_erb(
 
 def federated_shards(
     cfg: TokenStreamConfig, n_agents: int
-) -> Sequence[Iterator[Dict[str, np.ndarray]]]:
+) -> Sequence[Iterator[dict[str, np.ndarray]]]:
     """Disjoint per-agent streams (different seeds + style rotation)."""
     return [
         token_batches(

@@ -53,6 +53,17 @@ def main(argv=None) -> int:
         metavar="OUT",
         help="write results as JSON (BENCH_*.json for CI gating)",
     )
+    ap.add_argument(
+        "--trace",
+        type=str,
+        default=None,
+        metavar="PATH",
+        help=(
+            "capture a telemetry trace per scenario (Perfetto JSON; .jsonl "
+            "for the flat format). With several --scenario flags the "
+            "scenario name is inserted before the extension."
+        ),
+    )
     args = ap.parse_args(argv)
 
     if args.list or not args.scenario:
@@ -74,8 +85,14 @@ def main(argv=None) -> int:
         spec = resolve(name, fast=args.fast, seed=args.seed)
         if args.engine is not None:
             spec = replace(spec, sys=replace(spec.sys, engine=args.engine))
-        report = run(spec)
+        trace_path = args.trace
+        if trace_path is not None and len(args.scenario) > 1:
+            stem, dot, ext = trace_path.rpartition(".")
+            trace_path = f"{stem}.{name}.{ext}" if dot else f"{trace_path}.{name}"
+        report = run(spec, trace_path=trace_path)
         reports.append(report)
+        if trace_path is not None:
+            print(f"wrote trace {trace_path}")
         curve = " -> ".join(
             f"{p.mean_err:.2f}@{p.t:.1f}(n={p.n_agents})" for p in report.eval_curve
         )

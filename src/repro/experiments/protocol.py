@@ -18,7 +18,8 @@ churn schedule.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Protocol, Sequence, runtime_checkable
+from collections.abc import Sequence
+from typing import Protocol, runtime_checkable
 
 from repro.core.experiment import ChurnEvent, Report
 
@@ -34,9 +35,9 @@ class System(Protocol):
         tasks: Sequence,
         patients: Sequence[int],
         *,
-        max_patients: Optional[int] = 4,
+        max_patients: int | None = 4,
         n_episodes: int = 4,
-    ) -> Dict[str, Dict[str, float]]: ...
+    ) -> dict[str, dict[str, float]]: ...
 
 
 @runtime_checkable
@@ -47,8 +48,8 @@ class SupportsChurn(Protocol):
         self,
         *,
         speed: float = 1.0,
-        hub_id: Optional[int] = None,
-        at: Optional[float] = None,
+        hub_id: int | None = None,
+        at: float | None = None,
     ) -> int: ...
 
     def remove_agent(self, agent_id: int) -> None: ...

@@ -12,7 +12,6 @@ experiment means registering a spec — not writing a new script.
 from __future__ import annotations
 
 from dataclasses import replace
-from typing import Dict, List
 
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
 from repro.core.experiment import ChurnEvent, HubFailure
@@ -21,7 +20,7 @@ from repro.experiments.spec import ScenarioSpec
 from repro.population import Cohort, Diurnal, PopulationSpec, Sessions
 from repro.serve.traffic import TrafficSpec
 
-_REGISTRY: Dict[str, ScenarioSpec] = {}
+_REGISTRY: dict[str, ScenarioSpec] = {}
 
 
 def register(spec: ScenarioSpec) -> ScenarioSpec:
@@ -40,7 +39,7 @@ def get_scenario(name: str) -> ScenarioSpec:
         raise KeyError(f"unknown scenario {name!r}; registered: {known}") from None
 
 
-def list_scenarios() -> List[ScenarioSpec]:
+def list_scenarios() -> list[ScenarioSpec]:
     return [_REGISTRY[k] for k in sorted(_REGISTRY)]
 
 

@@ -11,8 +11,8 @@ evaluation into the :class:`~repro.core.experiment.Report`.
 from __future__ import annotations
 
 import json
+from collections.abc import Sequence
 from dataclasses import dataclass, replace
-from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -23,12 +23,13 @@ from repro.experiments.registry import get_scenario
 from repro.experiments.spec import ScenarioSpec
 from repro.experiments.systems import BaselineSystem, ServeSystem
 from repro.rl.synth import all_tasks, paper_eight_tasks, patient_split
+from repro.telemetry import Telemetry, write_trace
 
-SpecLike = Union[str, ScenarioSpec]
+SpecLike = str | ScenarioSpec
 
 
 def resolve(
-    spec: SpecLike, *, fast: bool = False, seed: Optional[int] = None
+    spec: SpecLike, *, fast: bool = False, seed: int | None = None
 ) -> ScenarioSpec:
     """Name -> registered spec, plus the seed/fast variants."""
     if isinstance(spec, str):
@@ -48,7 +49,7 @@ class _Built:
     eval_tasks: list
     train_patients: list
     test_patients: list
-    curve: List[EvalPoint]
+    curve: list[EvalPoint]
 
 
 def _tasks_for(spec: ScenarioSpec) -> list:
@@ -58,12 +59,16 @@ def _tasks_for(spec: ScenarioSpec) -> list:
     return tasks
 
 
-def _build(spec: ScenarioSpec, hooks: Sequence[ExperimentHooks]) -> _Built:
+def _build(
+    spec: ScenarioSpec,
+    hooks: Sequence[ExperimentHooks],
+    telemetry: Telemetry | None = None,
+) -> _Built:
     tasks = _tasks_for(spec)
     eval_tasks = tasks if spec.eval_tasks is None else tasks[: spec.eval_tasks]
     train_p, test_p = patient_split(spec.n_patients)
     sys_cfg = replace(spec.sys, seed=spec.seed)  # one seed, every stream
-    curve: List[EvalPoint] = []
+    curve: list[EvalPoint] = []
 
     if spec.system == "adfll":
         if spec.population is not None:
@@ -71,7 +76,7 @@ def _build(spec: ScenarioSpec, hooks: Sequence[ExperimentHooks]) -> _Built:
             # are the incumbents): the system starts empty
             sys_cfg = replace(sys_cfg, n_agents=0, agent_hub=(), agent_speed=())
         system: System = ADFLLSystem(
-            sys_cfg, spec.dqn, tasks, train_p, hooks=tuple(hooks)
+            sys_cfg, spec.dqn, tasks, train_p, hooks=tuple(hooks), telemetry=telemetry
         )
         if spec.agent_sites:
             system.network.configure_sites(
@@ -118,6 +123,7 @@ def _build(spec: ScenarioSpec, hooks: Sequence[ExperimentHooks]) -> _Built:
             n_waves=max(2, sys_cfg.rounds),  # >= one hot swap per session
             train_steps=sys_cfg.train_steps_per_round,
             seed=spec.seed,
+            telemetry=telemetry,
         )
     else:  # single-agent baselines
         if spec.churn or spec.agent_sites or spec.hub_failures:
@@ -141,7 +147,7 @@ def _schedule_probes(
     spec: ScenarioSpec,
     eval_tasks: list,
     test_patients: list,
-    curve: List[EvalPoint],
+    curve: list[EvalPoint],
 ) -> None:
     """Evaluation probes at each churn/hub-failure time (before the
     event applies: scheduler ties break by insertion order, and these
@@ -188,7 +194,7 @@ def build(
     spec: SpecLike,
     *,
     fast: bool = False,
-    seed: Optional[int] = None,
+    seed: int | None = None,
     hooks: Sequence[ExperimentHooks] = (),
 ) -> System:
     """Construct (but do not run) the system a scenario describes."""
@@ -199,13 +205,23 @@ def run(
     spec: SpecLike,
     *,
     fast: bool = False,
-    seed: Optional[int] = None,
+    seed: int | None = None,
     hooks: Sequence[ExperimentHooks] = (),
-    json_path: Optional[str] = None,
+    json_path: str | None = None,
+    trace_path: str | None = None,
+    telemetry: Telemetry | None = None,
 ) -> Report:
-    """Execute one scenario end to end and return its :class:`Report`."""
+    """Execute one scenario end to end and return its :class:`Report`.
+
+    ``trace_path`` captures the run's telemetry (Perfetto JSON, or JSONL
+    when the suffix is ``.jsonl``) — any scenario becomes traceable
+    without code changes.  Telemetry is observe-only: with or without it
+    the run's numbers are bit-identical.
+    """
     rspec = resolve(spec, fast=fast, seed=seed)
-    b = _build(rspec, hooks)
+    if telemetry is None and trace_path is not None:
+        telemetry = Telemetry(enabled=True)
+    b = _build(rspec, hooks, telemetry)
     report = b.system.run()
     report.scenario = rspec.name
     report.seed = rspec.seed
@@ -228,6 +244,9 @@ def run(
         per_agent=means,
     )
     report.eval_curve = [*b.curve, final]
+    if trace_path is not None and telemetry is not None:
+        # after evaluate(): serve scenarios keep emitting through it
+        write_trace(telemetry, trace_path)
     if json_path:
         write_json(json_path, [report], fast=fast)
     return report

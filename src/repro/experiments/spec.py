@@ -16,7 +16,6 @@ the system derives from it.
 from __future__ import annotations
 
 from dataclasses import dataclass, field, replace
-from typing import Optional, Tuple
 
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
 from repro.core.experiment import ChurnEvent, HubFailure
@@ -37,28 +36,28 @@ class ScenarioSpec:
     description: str = ""
     # -- problem -----------------------------------------------------------
     task_set: str = "paper8"  # "paper8" (deployment suite) | "all" (24 envs)
-    n_tasks: Optional[int] = None  # truncate the training task list
+    n_tasks: int | None = None  # truncate the training task list
     n_patients: int = 40  # patient pool size (80:20 split)
     dqn: DQNConfig = field(default_factory=DQNConfig)
     sys: ADFLLConfig = field(default_factory=ADFLLConfig)
     seed: int = 0
     # -- scenario dynamics -------------------------------------------------
-    churn: Tuple[ChurnEvent, ...] = ()  # timed add/remove events
-    hub_failures: Tuple[HubFailure, ...] = ()  # timed hub deaths (Table 2)
-    population: Optional[PopulationSpec] = None  # declarative fleet dynamics
-    agent_sites: Tuple[int, ...] = ()  # per-agent site ids (hetero links)
-    hub_sites: Tuple[int, ...] = ()  # per-hub site ids
-    intra_link: Optional[LinkModel] = None  # fast same-site link
-    inter_link: Optional[LinkModel] = None  # slow cross-site link
-    serve_traffic: Optional[TrafficSpec] = None  # system="serve" workload
+    churn: tuple[ChurnEvent, ...] = ()  # timed add/remove events
+    hub_failures: tuple[HubFailure, ...] = ()  # timed hub deaths (Table 2)
+    population: PopulationSpec | None = None  # declarative fleet dynamics
+    agent_sites: tuple[int, ...] = ()  # per-agent site ids (hetero links)
+    hub_sites: tuple[int, ...] = ()  # per-hub site ids
+    intra_link: LinkModel | None = None  # fast same-site link
+    inter_link: LinkModel | None = None  # slow cross-site link
+    serve_traffic: TrafficSpec | None = None  # system="serve" workload
     # -- evaluation --------------------------------------------------------
-    eval_tasks: Optional[int] = None  # eval on first N tasks (None = all)
-    eval_patients: Optional[int] = 4  # held-out patients per task
+    eval_tasks: int | None = None  # eval on first N tasks (None = all)
+    eval_patients: int | None = 4  # held-out patients per task
     eval_episodes: int = 4  # greedy rollouts per patient
     eval_at_churn: bool = True  # probe the error at each churn event
     # -- fast (CI) variant -------------------------------------------------
     fast_train_steps: int = 10
-    fast_eval_tasks: Optional[int] = None
+    fast_eval_tasks: int | None = None
     fast_population_scale: float = 1.0  # shrink cohorts for CI (1.0 = full)
 
     def __post_init__(self):

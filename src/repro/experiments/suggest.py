@@ -8,10 +8,10 @@ registered names instead of a raw ``KeyError`` traceback.
 from __future__ import annotations
 
 import difflib
-from typing import Iterable, List
+from collections.abc import Iterable
 
 
-def close_matches(name: str, known: Iterable[str], *, n: int = 3) -> List[str]:
+def close_matches(name: str, known: Iterable[str], *, n: int = 3) -> list[str]:
     """The registered names closest to ``name`` (possibly empty)."""
     known = sorted(known)
     matches = difflib.get_close_matches(name, known, n=n, cutoff=0.5)

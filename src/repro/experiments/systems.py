@@ -16,7 +16,7 @@ scenario gates the serving path itself.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence
+from collections.abc import Sequence
 
 import numpy as np
 
@@ -31,6 +31,7 @@ from repro.core.federated import (
 )
 from repro.serve.queue import ServeRequest
 from repro.serve.traffic import TrafficSpec
+from repro.telemetry import Telemetry
 
 _LABELS = {
     "all_knowing": "AgentX",
@@ -109,9 +110,9 @@ class BaselineSystem:
         tasks: Sequence[TaskTag],
         patients: Sequence[int],
         *,
-        max_patients: Optional[int] = 4,
+        max_patients: int | None = 4,
         n_episodes: int = 4,
-    ) -> Dict[str, Dict[str, float]]:
+    ) -> dict[str, dict[str, float]]:
         if self.agent is None:
             raise RuntimeError("evaluate() before run(): the agent is untrained")
         return {
@@ -145,11 +146,12 @@ class ServeSystem:
         tasks: Sequence[TaskTag],
         patients: Sequence[int],
         *,
-        traffic: Optional[TrafficSpec] = None,
+        traffic: TrafficSpec | None = None,
         n_agents: int = 2,
         n_waves: int = 2,
         train_steps: int = 20,
         seed: int = 0,
+        telemetry: Telemetry | None = None,
     ):
         self.dqn_cfg = dqn_cfg
         self.tasks = list(tasks)
@@ -159,6 +161,7 @@ class ServeSystem:
         self.n_waves = n_waves
         self.train_steps = train_steps
         self.seed = seed
+        self.telemetry = telemetry
         self.session = None
 
     def run(self) -> Report:
@@ -171,6 +174,7 @@ class ServeSystem:
             seed=self.seed,
             tasks=self.tasks,
             patients=self.patients,
+            telemetry=self.telemetry,
         )
         serve_report = run_session(
             self.session,
@@ -186,6 +190,8 @@ class ServeSystem:
         # snapshot now: evaluate() keeps serving through the same
         # service, which would otherwise mutate these counters
         report.extra["serve"] = serve_report.summary()
+        if self.telemetry is not None and self.telemetry.enabled:
+            report.extra["telemetry"] = self.telemetry.summary()
         return report
 
     def evaluate(
@@ -193,9 +199,9 @@ class ServeSystem:
         tasks: Sequence[TaskTag],
         patients: Sequence[int],
         *,
-        max_patients: Optional[int] = 4,
+        max_patients: int | None = 4,
         n_episodes: int = 4,
-    ) -> Dict[str, Dict[str, float]]:
+    ) -> dict[str, dict[str, float]]:
         if self.session is None:
             raise RuntimeError("evaluate() before run(): no live service")
         from repro.rl.synth import make_volume
@@ -204,7 +210,7 @@ class ServeSystem:
         n = self.dqn_cfg.volume_shape[0]
         rng = np.random.default_rng(self.seed + 1)
         lo, hi = n // 4, 3 * n // 4
-        errs: Dict[str, float] = {}
+        errs: dict[str, float] = {}
         for task in tasks:
             pats = list(patients)[: max_patients or None]
             requests = []

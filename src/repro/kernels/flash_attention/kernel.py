@@ -99,8 +99,8 @@ def _kernel(
 
     @pl.when(ki == n_kv - 1)
     def _finalize():
-        l = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        l_sum = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l_sum).astype(o_ref.dtype)
 
 
 def flash_attention_bhsd(

@@ -21,7 +21,6 @@ from __future__ import annotations
 import math
 import re
 from collections import defaultdict
-from typing import Dict
 
 import jax
 import numpy as np
@@ -204,11 +203,11 @@ def _shape_bytes(sig: str) -> int:
     return total
 
 
-def parse_collectives(hlo_text: str) -> Dict[str, float]:
+def parse_collectives(hlo_text: str) -> dict[str, float]:
     """Per-device collective bytes by type, while-bodies scaled by trip
     count. Returns {'all-gather': bytes, ..., 'total': bytes}."""
     # split into computations
-    comps: Dict[str, list] = {}
+    comps: dict[str, list] = {}
     entry = None
     cur = None
     for line in hlo_text.splitlines():
@@ -225,10 +224,10 @@ def parse_collectives(hlo_text: str) -> Dict[str, float]:
                 comps[cur].append(line)
 
     # map: computation -> list of (collective_kind, bytes)
-    coll: Dict[str, list] = defaultdict(list)
+    coll: dict[str, list] = defaultdict(list)
     # map: computation -> list of (called_comp, kind) for while/call ops
-    calls: Dict[str, list] = defaultdict(list)
-    trip_hint: Dict[str, int] = {}
+    calls: dict[str, list] = defaultdict(list)
+    trip_hint: dict[str, int] = {}
 
     for cname, lines in comps.items():
         for line in lines:
@@ -263,11 +262,11 @@ def parse_collectives(hlo_text: str) -> Dict[str, float]:
         if consts:
             trip_hint[cname] = max(consts)
 
-    def bytes_of(comp: str, seen) -> Dict[str, float]:
+    def bytes_of(comp: str, seen) -> dict[str, float]:
         if comp in seen or comp not in comps:
             return {}
         seen = seen | {comp}
-        out: Dict[str, float] = defaultdict(float)
+        out: dict[str, float] = defaultdict(float)
         for kind, b in coll.get(comp, []):
             out[kind] += b
         for sub, cond in calls.get(comp, []):
@@ -321,7 +320,7 @@ def analytic_hbm_bytes(
     act_bytes_dev: float,
     cache_bytes_dev: float,
     io_bytes_dev: float,
-) -> Dict[str, float]:
+) -> dict[str, float]:
     """Assumptions (documented in EXPERIMENTS.md §Roofline):
     train : params read fwd + read bwd + write; grads write+read;
             moments read+write; checkpointed activations write+read plus

@@ -10,7 +10,6 @@ import math  # noqa: E402
 import subprocess  # noqa: E402
 import sys  # noqa: E402
 import time  # noqa: E402
-from typing import Optional  # noqa: E402
 
 import jax  # noqa: E402
 
@@ -96,7 +95,7 @@ def run_pair(
     shape_name: str,
     *,
     multi_pod: bool = False,
-    policy_overrides: Optional[dict] = None,
+    policy_overrides: dict | None = None,
     print_analyses: bool = True,
     optimized: bool = False,
 ) -> dict:

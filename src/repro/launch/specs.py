@@ -6,7 +6,7 @@ Everything here is shape-level only: no device allocation ever happens.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -33,16 +33,16 @@ def _sds(tree, shardings=None):
     """eval-shaped pytree -> ShapeDtypeStructs with shardings attached."""
     if shardings is None:
         return jax.tree_util.tree_map(
-            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree
+            lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), tree
         )
     return jax.tree_util.tree_map(
-        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        lambda v, s: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=s),
         tree,
         shardings,
     )
 
 
-def _batch_pspec(mesh: Optional[Mesh], policy: ShardingPolicy, b: int):
+def _batch_pspec(mesh: Mesh | None, policy: ShardingPolicy, b: int):
     if mesh is None:
         return None
     batch = tuple(a for a in policy.batch_axes if a in mesh.axis_names)
@@ -56,7 +56,7 @@ def _batch_pspec(mesh: Optional[Mesh], policy: ShardingPolicy, b: int):
 
 def state_specs(
     cfg: ModelConfig,
-    mesh: Optional[Mesh],
+    mesh: Mesh | None,
     policy: ShardingPolicy,
     opt_cfg: AdamWConfig,
 ):
@@ -76,7 +76,7 @@ def state_specs(
     return _sds({"params": pshape, "opt": oshape}, shardings), shardings
 
 
-def params_specs(cfg: ModelConfig, mesh: Optional[Mesh], policy: ShardingPolicy):
+def params_specs(cfg: ModelConfig, mesh: Mesh | None, policy: ShardingPolicy):
     key = jax.random.PRNGKey(0)
     pshape = jax.eval_shape(lambda: model_lib.init_params(cfg, key))
     if mesh is None:
@@ -89,7 +89,7 @@ def cache_specs(
     cfg: ModelConfig,
     batch: int,
     seq_len: int,
-    mesh: Optional[Mesh],
+    mesh: Mesh | None,
     policy: ShardingPolicy,
 ):
     cshape = jax.eval_shape(lambda: model_lib.init_caches(cfg, batch, seq_len))
@@ -102,9 +102,9 @@ def cache_specs(
 def input_specs(
     cfg: ModelConfig,
     shape: InputShape,
-    mesh: Optional[Mesh],
+    mesh: Mesh | None,
     policy: ShardingPolicy,
-) -> Dict[str, Any]:
+) -> dict[str, Any]:
     """Model-input ShapeDtypeStructs for one (arch x input-shape) pair."""
     b = shape.global_batch
     s = shape.seq_len

@@ -12,8 +12,6 @@ k_rope) and uses the absorbed-matmul decode path from DeepSeek-V2.
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -40,7 +38,7 @@ def chunked_attention(
     v,
     *,
     causal: bool,
-    window: Optional[int],
+    window: int | None,
     scale: float,
     q_chunk: int = 512,
     kv_chunk: int = 1024,
@@ -61,8 +59,11 @@ def chunked_attention(
     hkv = k.shape[2]
     dv = v.shape[-1]
     g = hq // hkv
+    def _id_wsc(x, kind):
+        return x
+
     if wsc is None:
-        wsc = lambda x, kind: x
+        wsc = _id_wsc
     import os
 
     inner_wsc = (lambda x, kind: x) if os.environ.get("REPRO_NO_INNER_WSC") else wsc
@@ -128,7 +129,7 @@ def chunked_attention(
 
 
 def decode_attention(
-    q, k, v, *, scale: float, kpos, pos, window: Optional[int], softcap: float = 0.0
+    q, k, v, *, scale: float, kpos, pos, window: int | None, softcap: float = 0.0
 ):
     """Single-token attention against a cache.
 

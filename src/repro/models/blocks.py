@@ -2,8 +2,6 @@
 
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 
@@ -30,7 +28,7 @@ _MIXER_INIT = {
 }
 
 
-def block_init(key, cfg: ModelConfig, mixer: str, ffn: str, d_ff: Optional[int] = None):
+def block_init(key, cfg: ModelConfig, mixer: str, ffn: str, d_ff: int | None = None):
     ks = jax.random.split(key, 4)
     p = {
         "norm1": norm_init(cfg, cfg.d_model),

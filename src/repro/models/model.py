@@ -8,7 +8,7 @@ closures are jit-compatible and carry explicit sharding constraints so the
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,9 +27,9 @@ F32 = jnp.float32
 # ---------------------------------------------------------------------------
 # init
 # ---------------------------------------------------------------------------
-def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+def init_params(cfg: ModelConfig, key) -> dict[str, Any]:
     keys = jax.random.split(key, 4)
-    params: Dict[str, Any] = {
+    params: dict[str, Any] = {
         "embed": embed_init(keys[0], cfg),
         "final_norm": norm_init(cfg, cfg.d_model),
     }
@@ -64,7 +64,7 @@ def init_caches(cfg: ModelConfig, batch: int, seq_len: int):
     """Decode caches (ring-buffer length for SWA models)."""
     dtype = jnp.dtype(cfg.dtype)
     clen = cache_len_for(cfg, seq_len)
-    caches: Dict[str, Any] = {}
+    caches: dict[str, Any] = {}
     if cfg.first_k_dense:
         caches["prefix"] = {
             f"l{i}": block_cache_init(cfg, ATTN, batch, clen, dtype)
@@ -106,7 +106,7 @@ def forward(
     x = constrain(x, mesh, bspec)
     batch_axes = policy.batch_axes
     aux = jnp.zeros((), F32)
-    new_caches: Dict[str, Any] = {}
+    new_caches: dict[str, Any] = {}
 
     blk = partial(
         block_apply,
@@ -341,7 +341,9 @@ def make_train_step(
                 m_acc = jax.tree_util.tree_map(jnp.add, m_acc, metrics)
                 return (g_acc, t_acc + total, m_acc), None
 
-            zeros_like = lambda p: jnp.zeros(p.shape, p.dtype)
+            def zeros_like(p):
+                return jnp.zeros(p.shape, p.dtype)
+
             g0 = cg(jax.tree_util.tree_map(zeros_like, state["params"]))
             m0 = {
                 "loss": jnp.zeros((), jnp.float32),

@@ -21,8 +21,6 @@ Design (TPU-native, DeepSeek/GShard lineage):
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
@@ -95,7 +93,7 @@ def _expert_ffn(w1, w3, w2, buf):
 
 def _moe_local(
     cfg: ModelConfig,
-    model_axis: Optional[str],
+    model_axis: str | None,
     n_shards: int,
     x_flat,
     router_w,
@@ -179,7 +177,7 @@ def moe_apply(
     batch_axes=("data",),
     mode: str = "train",
     tp: bool = True,
-) -> Tuple[jnp.ndarray, jnp.ndarray]:
+) -> tuple[jnp.ndarray, jnp.ndarray]:
     """x [B, S, D] -> (y [B, S, D], aux loss scalar).
 
     With a mesh: expert-parallel over the "model" axis via shard_map.

@@ -11,7 +11,6 @@ from __future__ import annotations
 import fnmatch
 import math
 from dataclasses import dataclass
-from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding
@@ -25,9 +24,9 @@ HEADKV = "__headkv__"  # model axis iff cfg.n_kv_heads divides it
 
 @dataclass(frozen=True)
 class ShardingPolicy:
-    batch_axes: Tuple[str, ...] = ("data",)
+    batch_axes: tuple[str, ...] = ("data",)
     model_axis: str = "model"
-    fsdp_axes: Tuple[str, ...] = ("data",)
+    fsdp_axes: tuple[str, ...] = ("data",)
     seq_shard: bool = True  # sequence-parallel activations at boundaries
     remat: bool = True  # per-layer-group activation checkpointing
     tensor_parallel: bool = True  # False: model axis carries batch (pure DP)
@@ -178,7 +177,7 @@ def hoist_constrain(params, mesh: Mesh, policy: ShardingPolicy, cfg=None):
 
 
 def act_spec(
-    policy: ShardingPolicy, mesh: Optional[Mesh], *, seq_len: int, mode: str
+    policy: ShardingPolicy, mesh: Mesh | None, *, seq_len: int, mode: str
 ) -> P:
     """Boundary activation spec [B, S, D]."""
     if mesh is None:
@@ -196,7 +195,7 @@ def act_spec(
     return P(b_ax, s_ax, None)
 
 
-def constrain(x, mesh: Optional[Mesh], spec: P):
+def constrain(x, mesh: Mesh | None, spec: P):
     if mesh is None:
         return x
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

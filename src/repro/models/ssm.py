@@ -121,8 +121,11 @@ def _selective_scan_chunked(dt, b_seq, c_seq, xf, a, chunk: int, wsc=None):
     nc = s_len // chunk
     import os
 
+    def _id_wsc(x, ch_dim=-1):
+        return x
+
     if wsc is None or os.environ.get("REPRO_NO_SCAN_WSC"):
-        wsc = lambda x, ch_dim=-1: x
+        wsc = _id_wsc
 
     def to_c(t):
         return jnp.moveaxis(t.reshape(b, nc, chunk, *t.shape[2:]), 1, 0)
@@ -133,9 +136,9 @@ def _selective_scan_chunked(dt, b_seq, c_seq, xf, a, chunk: int, wsc=None):
         da_k = wsc(jnp.exp(dt_k[..., None] * a), 2)  # [B,chunk,di,N]
         dbx_k = wsc((dt_k * x_k)[..., None] * b_k[:, :, None, :], 2)
 
-        def op(l, r):
-            al, bl = l
-            ar, br = r
+        def op(left, right):
+            al, bl = left
+            ar, br = right
             return al * ar, bl * ar + br
 
         a_cum, b_cum = jax.lax.associative_scan(op, (da_k, dbx_k), axis=1)
@@ -397,8 +400,10 @@ def slstm_apply(
     else:
         carry = (state["h"], state["c"], state["n"], state["m"])
 
+    def step(c, xp):
+        return _slstm_step(p, c, xp)
+
     if mode in ("train", "prefill"):
-        step = lambda c, xp: _slstm_step(p, c, xp)
         carry, ys = jax.lax.scan(step, carry, jnp.moveaxis(x_pre, 1, 0))
         y = jnp.moveaxis(ys, 0, 1).reshape(b, s_len, d)
         new_state = None

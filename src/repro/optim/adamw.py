@@ -39,7 +39,10 @@ def cosine_schedule(cfg: AdamWConfig, step):
 
 def adamw_init(cfg: AdamWConfig, params):
     dt = jnp.dtype(cfg.opt_dtype)
-    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+
+    def zeros(p):
+        return jnp.zeros(p.shape, dt)
+
     return {
         "m": jax.tree_util.tree_map(zeros, params),
         "v": jax.tree_util.tree_map(zeros, params),

@@ -25,7 +25,6 @@ bit-reproducible across processes.
 from __future__ import annotations
 
 import hashlib
-from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -49,14 +48,14 @@ class PopulationState:
     """
 
     def __init__(self):
-        self.joined: Dict[int, float] = {}
-        self.departed: Dict[int, float] = {}
-        self.speed: Dict[int, float] = {}
-        self.online_since: Dict[int, float] = {}  # present iff online
-        self.online_time: Dict[int, float] = {}
+        self.joined: dict[int, float] = {}
+        self.departed: dict[int, float] = {}
+        self.speed: dict[int, float] = {}
+        self.online_since: dict[int, float] = {}  # present iff online
+        self.online_time: dict[int, float] = {}
         self.n_toggles = 0
-        self.events: List[Tuple[float, int, str]] = []
-        self._processes: Dict[int, AvailabilityProcess] = {}
+        self.events: list[tuple[float, int, str]] = []
+        self._processes: dict[int, AvailabilityProcess] = {}
 
     # -- observers wired into the system ------------------------------------
     def note_join(self, agent_id: int, t: float, speed: float) -> None:
@@ -108,7 +107,7 @@ class PopulationState:
         text = "\n".join(f"{t!r} {aid} {kind}" for t, aid, kind in self.events)
         return hashlib.sha256(text.encode()).hexdigest()[:16]
 
-    def summary(self, makespan: float) -> Dict[str, object]:
+    def summary(self, makespan: float) -> dict[str, object]:
         online = dict(self.online_time)
         for aid, since in self.online_since.items():
             online[aid] = online.get(aid, 0.0) + max(0.0, makespan - since)

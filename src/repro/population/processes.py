@@ -10,21 +10,21 @@ scheduler driver (:class:`AvailabilityProcess`) only walks it.
 from __future__ import annotations
 
 import math
-from typing import Callable, Iterator, Optional, Tuple
+from collections.abc import Callable, Iterator
 
 import numpy as np
 
 from repro.core.scheduler import Handle, Scheduler
 from repro.population.spec import Availability, Diurnal, Sessions, Trace
 
-Segment = Tuple[float, float]  # (duration, online) with online in {0.0, 1.0}
+Segment = tuple[float, float]  # (duration, online) with online in {0.0, 1.0}
 
 
 def availability_segments(
     avail: Availability,
     rng: np.random.Generator,
     member_idx: int = 0,
-) -> Iterator[Tuple[float, bool]]:
+) -> Iterator[tuple[float, bool]]:
     """Yield ``(duration, online)`` segments from the agent's join time.
 
     The generator is infinite for cyclic processes; a *finite* generator
@@ -114,7 +114,7 @@ class AvailabilityProcess:
         self,
         sched: Scheduler,
         agent_id: int,
-        segments: Iterator[Tuple[float, bool]],
+        segments: Iterator[tuple[float, bool]],
         set_online: Callable[[int, bool], None],
         tag: str = "",
     ):
@@ -123,7 +123,7 @@ class AvailabilityProcess:
         self._segments = segments
         self._set_online = set_online
         self._tag = tag or f"A{agent_id}_avail"
-        self._handle: Optional[Handle] = None
+        self._handle: Handle | None = None
         self.stopped = False
 
     def start(self) -> None:

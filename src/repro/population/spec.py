@@ -28,8 +28,8 @@ running system by :func:`repro.population.compile.compile_onto`.
 
 from __future__ import annotations
 
+from collections.abc import Sequence
 from dataclasses import dataclass, replace
-from typing import Optional, Sequence, Tuple, Union
 
 from repro.core.experiment import ChurnEvent, HubFailure
 
@@ -95,9 +95,9 @@ class Trace:
     with :func:`repro.population.trace.load_windows`.
     """
 
-    windows: Tuple[Tuple[float, float], ...] = ()
+    windows: tuple[tuple[float, float], ...] = ()
     stagger: float = 0.0
-    repeat: Optional[float] = None
+    repeat: float | None = None
 
     def __post_init__(self):
         last = 0.0
@@ -109,7 +109,7 @@ class Trace:
             raise ValueError(f"repeat {self.repeat} shorter than the windows")
 
 
-Availability = Union[Diurnal, Sessions, Trace]
+Availability = Diurnal | Sessions | Trace
 
 
 # ---------------------------------------------------------------------------
@@ -135,11 +135,11 @@ class Cohort:
     name: str = ""
     arrive_at: float = 0.0
     arrive_spread: float = 0.0
-    depart_at: Optional[float] = None
+    depart_at: float | None = None
     speed: float = 1.0
     speed_sigma: float = 0.0
-    hub: Optional[int] = None
-    availability: Optional[Availability] = None
+    hub: int | None = None
+    availability: Availability | None = None
 
     def __post_init__(self):
         if self.n_agents < 1:
@@ -159,7 +159,7 @@ class Departure:
 
     at: float
     count: int = 1
-    agent_id: Optional[int] = None
+    agent_id: int | None = None
 
     def __post_init__(self):
         if self.agent_id is not None and self.count != 1:
@@ -190,9 +190,9 @@ class PopulationSpec:
     independent of construction order.
     """
 
-    cohorts: Tuple[Cohort, ...] = ()
-    departures: Tuple[Departure, ...] = ()
-    hub_outages: Tuple[HubOutage, ...] = ()
+    cohorts: tuple[Cohort, ...] = ()
+    departures: tuple[Departure, ...] = ()
+    hub_outages: tuple[HubOutage, ...] = ()
 
     def __post_init__(self):
         if not (self.cohorts or self.departures or self.hub_outages):
@@ -203,7 +203,7 @@ class PopulationSpec:
         """Total agents ever joining (not live at any one time)."""
         return sum(c.n_agents for c in self.cohorts)
 
-    def event_times(self) -> Tuple[float, ...]:
+    def event_times(self) -> tuple[float, ...]:
         """Sorted distinct times of the discrete membership events
         (cohort arrivals/departures, timed departures, hub outages) —
         what the runner probes evaluation at.  Availability toggles are

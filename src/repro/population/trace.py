@@ -10,13 +10,13 @@ recorded availability timeline replays bit-identically.
 from __future__ import annotations
 
 import json
+from collections.abc import Sequence
 from pathlib import Path
-from typing import Sequence, Tuple, Union
 
-PathLike = Union[str, Path]
+PathLike = str | Path
 
 
-def load_windows(path: PathLike) -> Tuple[Tuple[float, float], ...]:
+def load_windows(path: PathLike) -> tuple[tuple[float, float], ...]:
     """Read ``(on, off)`` windows from a JSONL trace file."""
     windows = []
     for i, line in enumerate(Path(path).read_text().splitlines()):
@@ -31,7 +31,7 @@ def load_windows(path: PathLike) -> Tuple[Tuple[float, float], ...]:
     return tuple(windows)
 
 
-def save_windows(path: PathLike, windows: Sequence[Tuple[float, float]]) -> None:
+def save_windows(path: PathLike, windows: Sequence[tuple[float, float]]) -> None:
     """Write ``(on, off)`` windows as a JSONL trace file."""
     lines = [json.dumps({"on": on, "off": off}) for on, off in windows]
     Path(path).write_text("\n".join(lines) + ("\n" if lines else ""))

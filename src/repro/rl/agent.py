@@ -16,8 +16,8 @@ ULPs of the fused program).
 from __future__ import annotations
 
 from collections import Counter
+from collections.abc import Sequence
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +37,7 @@ from repro.rl.fleet import (
     make_dqn_opt_cfg,
 )
 
-_DQN_STEPS_CACHE: Dict[Tuple[DQNConfig, bool], tuple] = {}
+_DQN_STEPS_CACHE: dict[tuple[DQNConfig, bool], tuple] = {}
 _DQN_TRACES: Counter = Counter()
 
 
@@ -92,7 +92,7 @@ class DQNAgent:
     speed: float = 1.0  # relative hardware speed (sim time)
     use_pallas: bool = False
     backend: str = "fleet"  # "fleet" | "stepwise"
-    engine: Optional[FleetEngine] = None
+    engine: FleetEngine | None = None
 
     def __post_init__(self):
         if self.backend not in ("fleet", "stepwise"):
@@ -114,7 +114,7 @@ class DQNAgent:
             self._opt_state = adamw_init(opt_cfg, self._params)
         self.rng = np.random.default_rng(abs(self.seed + 1000 * self.agent_id))
         self.step_count = 0
-        self.personal_erbs: List[ERB] = []
+        self.personal_erbs: list[ERB] = []
         self.seen_erb_ids: set = set()
         self.seen_snap_ids: set = set()
         self.rounds_done = 0
@@ -203,7 +203,7 @@ class DQNAgent:
 
     # -- learning ------------------------------------------------------------
     def _submit_steps(
-        self, n_steps: int, current: Optional[ERB], incoming: Sequence[ERB]
+        self, n_steps: int, current: ERB | None, incoming: Sequence[ERB]
     ) -> TrainFuture:
         """Plan n minibatches (host index selection, same rng stream as
         the stepwise path) and queue them as one scan-fused fleet job."""
@@ -221,7 +221,7 @@ class DQNAgent:
         return self.engine.submit(self.slot, plans)
 
     def train_steps(
-        self, n_steps: int, current: Optional[ERB], incoming: Sequence[ERB] = ()
+        self, n_steps: int, current: ERB | None, incoming: Sequence[ERB] = ()
     ) -> float:
         if self.engine is not None:
             future = self._submit_steps(n_steps, current, incoming)
@@ -290,7 +290,7 @@ class DQNAgent:
         train_steps: int,
         collect_episodes: int = 24,
         share_strategy: str = "uniform",
-    ) -> Tuple[ERB, TrainFuture]:
+    ) -> tuple[ERB, TrainFuture]:
         """Collect on the round's task and *submit* the round's training
         (current + personal + incoming replay) to the fleet engine
         without forcing execution. Returns (shared ERB, loss future) —
@@ -329,7 +329,7 @@ class DQNAgent:
         train_steps: int,
         collect_episodes: int = 24,
         share_strategy: str = "uniform",
-    ) -> Tuple[ERB, float]:
+    ) -> tuple[ERB, float]:
         """Collect on the round's task, then train on
         current + personal + incoming replay. Returns (shared ERB, loss)."""
         shared, future = self.begin_round(
@@ -348,7 +348,7 @@ class DQNAgent:
 
     # -- evaluation ------------------------------------------------------------
     def evaluate(
-        self, env: LandmarkEnv, n_episodes: int = 8, max_steps: Optional[int] = None
+        self, env: LandmarkEnv, n_episodes: int = 8, max_steps: int | None = None
     ) -> float:
         """Greedy rollout from deterministic starts; mean final distance."""
         rng = np.random.default_rng(1234)

@@ -2,8 +2,6 @@
 
 from __future__ import annotations
 
-from typing import Dict
-
 import jax
 import jax.numpy as jnp
 
@@ -18,7 +16,7 @@ def _conv_init(key, cin, cout, k=3):
     return truncated_normal(key, (k, k, k, cin, cout), scale, F32)
 
 
-def dqn_init(key, cfg: DQNConfig) -> Dict:
+def dqn_init(key, cfg: DQNConfig) -> dict:
     ks = jax.random.split(key, 8)
     p = {}
     cin = 1
@@ -48,7 +46,7 @@ def dqn_init(key, cfg: DQNConfig) -> Dict:
     return p
 
 
-def dqn_apply(cfg: DQNConfig, p: Dict, obs, loc):
+def dqn_apply(cfg: DQNConfig, p: dict, obs, loc):
     """obs [B, bx,by,bz], loc [B,3] normalized -> q [B, n_actions]."""
     x = obs[..., None]  # NDHWC
     for i in range(len(cfg.conv_features)):
@@ -62,8 +60,8 @@ def dqn_apply(cfg: DQNConfig, p: Dict, obs, loc):
         )
         x = jax.nn.relu(x + b)
     x = x.reshape(x.shape[0], -1)
-    l = jax.nn.relu(loc @ p["loc"]["w"] + p["loc"]["b"])
-    x = jnp.concatenate([x, l], -1)
+    lh = jax.nn.relu(loc @ p["loc"]["w"] + p["loc"]["b"])
+    x = jnp.concatenate([x, lh], -1)
     n_fc = sum(1 for k in p if k.startswith("fc"))
     for i in range(n_fc):
         x = x @ p[f"fc{i}"]["w"] + p[f"fc{i}"]["b"]

@@ -8,8 +8,8 @@ side; the Q-network forward is the jitted part).
 
 from __future__ import annotations
 
+from collections.abc import Sequence
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -39,7 +39,7 @@ def apply_actions(
 
 def observe_many(
     envs: Sequence["LandmarkEnv"], locs: np.ndarray
-) -> Tuple[np.ndarray, np.ndarray]:
+) -> tuple[np.ndarray, np.ndarray]:
     """Per-request observation batch over *heterogeneous* environments.
 
     ``envs[i]`` supplies row ``i``'s crop and normalized location —
@@ -63,7 +63,7 @@ class LandmarkEnv:
     cfg: DQNConfig
     # pad-once cache: np.pad of the full volume on *every* observe call
     # dominated the host-side round cost before the batched gather below
-    _padded: Optional[np.ndarray] = field(default=None, repr=False, compare=False)
+    _padded: np.ndarray | None = field(default=None, repr=False, compare=False)
 
     @property
     def n(self) -> int:
@@ -99,7 +99,7 @@ class LandmarkEnv:
 
     def step(
         self, locs: np.ndarray, actions: np.ndarray
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """-> (new_locs, reward, done)."""
         new = apply_actions(locs, actions, self.n, self.cfg.step_size)
         r = self.dist(locs) - self.dist(new)

@@ -39,8 +39,9 @@ benchmarking.
 from __future__ import annotations
 
 from collections import OrderedDict
+from collections.abc import Callable, Sequence
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -52,6 +53,7 @@ from repro.kernels.fused_td.ops import td_loss
 from repro.kernels.replay_gather.ops import replay_gather
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.rl.dqn import dqn_apply, dqn_init
+from repro.telemetry import NULL
 
 
 @jax.tree_util.register_pytree_node_class
@@ -197,7 +199,10 @@ class FleetSteps:
         key = jax.random.PRNGKey(seed)
         params = dqn_init(key, self.cfg)
         opt = adamw_init(self.opt_cfg, params)
-        one = lambda x: jax.tree_util.tree_map(lambda v: jnp.asarray(v)[None], x)
+
+        def one(x):
+            return jax.tree_util.tree_map(lambda v: jnp.asarray(v)[None], x)
+
         return FleetState(
             params=one(params),
             target=one(params),
@@ -207,7 +212,7 @@ class FleetSteps:
         )
 
 
-_FLEET_STEPS_CACHE: Dict[Tuple[DQNConfig, bool], FleetSteps] = {}
+_FLEET_STEPS_CACHE: dict[tuple[DQNConfig, bool], FleetSteps] = {}
 
 
 def make_fleet_steps(cfg: DQNConfig, *, use_pallas: bool = False) -> FleetSteps:
@@ -267,7 +272,7 @@ class ActSteps:
             jax.block_until_ready(self.act(stacked, slot, obs, loc))
 
 
-_ACT_STEPS_CACHE: Dict[DQNConfig, ActSteps] = {}
+_ACT_STEPS_CACHE: dict[DQNConfig, ActSteps] = {}
 
 
 def make_act_steps(cfg: DQNConfig) -> ActSteps:
@@ -288,8 +293,8 @@ class TrainFuture:
 
     def __init__(self):
         self.done = False
-        self.loss: Optional[float] = None
-        self._cbs: List[Callable[[float], None]] = []
+        self.loss: float | None = None
+        self._cbs: list[Callable[[float], None]] = []
 
     def on_done(self, cb: Callable[[float], None]) -> None:
         if self.done:
@@ -314,7 +319,7 @@ class _Job:
     def __init__(self, slot, n_steps, erbs, eidx, rows, future):
         self.slot = slot
         self.n_steps = n_steps
-        self.erbs: List[ERB] = erbs
+        self.erbs: list[ERB] = erbs
         self.eidx: np.ndarray = eidx  # [K, B] int32 position into self.erbs
         self.rows: np.ndarray = rows  # [K, B] int32 local row index
         self.future: TrainFuture = future
@@ -347,21 +352,25 @@ class FleetEngine:
         self.cfg = cfg
         self.use_pallas = bool(use_pallas)
         self.steps = make_fleet_steps(cfg, use_pallas=use_pallas)
-        self.state: Optional[FleetState] = None
+        self.state: FleetState | None = None
         self.n_slots = 0
         self.erb_cache_size = erb_cache_size
         self.erb_cache_bytes = erb_cache_bytes
         self.pool_bucket_floor = pool_bucket_floor
         self._feat = flat_width(cfg.box_size)
-        self._pending: List[_Job] = []
+        self._pending: list[_Job] = []
         self._pending_slots: set = set()
-        self._erb_cache: OrderedDict[Tuple[str, int], jax.Array] = OrderedDict()
+        self._erb_cache: OrderedDict[tuple[str, int], jax.Array] = OrderedDict()
         self._erb_cache_nbytes = 0
-        self._views: Dict[int, FleetState] = {}
+        self._views: dict[int, FleetState] = {}
         # flush statistics (fleet_throughput reports these)
         self.n_flushes = 0
         self.n_steps_trained = 0
-        self.flush_sizes: List[int] = []
+        self.flush_sizes: list[int] = []
+        # observability: the owning system replaces these after
+        # construction (ADFLLSystem / ServeSession) — NULL costs nothing
+        self.telemetry = NULL
+        self.sim_clock: Callable[[], float] | None = None
 
     # -- slots ---------------------------------------------------------------
     def add_slot(self, seed: int) -> int:
@@ -378,7 +387,7 @@ class FleetEngine:
         return slot
 
     # -- state access (flush-on-read/write) -----------------------------------
-    def ensure_flushed(self, slot: Optional[int] = None) -> None:
+    def ensure_flushed(self, slot: int | None = None) -> None:
         """Flush all pending jobs iff ``slot`` has one (or any, if None)."""
         if slot is None:
             if self._pending:
@@ -446,7 +455,9 @@ class FleetEngine:
         hit = self._erb_cache.get(key)
         if hit is not None:
             self._erb_cache.move_to_end(key)
+            self.telemetry.count("fleet.erb_cache.hits", 1)
             return hit
+        self.telemetry.count("fleet.erb_cache.misses", 1)
         flat = jnp.asarray(erb_flatten(erb))
         self._erb_cache[key] = flat
         self._erb_cache_nbytes += flat.nbytes
@@ -456,6 +467,7 @@ class FleetEngine:
         ):
             _, evicted = self._erb_cache.popitem(last=False)
             self._erb_cache_nbytes -= evicted.nbytes
+            self.telemetry.count("fleet.erb_cache.evictions", 1)
         return flat
 
     # -- job queue ------------------------------------------------------------
@@ -470,8 +482,8 @@ class FleetEngine:
             future.resolve(0.0)
             return future
         batch = plans[0].batch_size
-        erbs: List[ERB] = []
-        positions: Dict[str, int] = {}
+        erbs: list[ERB] = []
+        positions: dict[str, int] = {}
         eidx = np.empty((n_steps, batch), np.int32)
         rows = np.empty((n_steps, batch), np.int32)
         for k, plan in enumerate(plans):
@@ -507,13 +519,16 @@ class FleetEngine:
             self._flush_group(jobs[i:j])
             i = j
 
-    def _flush_group(self, jobs: List[_Job]) -> None:
+    def _flush_group(self, jobs: list[_Job]) -> None:
+        tel = self.telemetry
+        wall0 = tel.wall() if tel.enabled else 0.0
+        traces0 = self.steps.n_traces
         n_real = len(jobs)
         k_steps = jobs[0].n_steps
         batch = jobs[0].eidx.shape[1]
         # one shared device pool: the union of every job's ERBs
-        offsets: Dict[str, int] = {}
-        parts: List[jax.Array] = []
+        offsets: dict[str, int] = {}
+        parts: list[jax.Array] = []
         total = 0
         for job in jobs:
             for erb in job.erbs:
@@ -546,6 +561,32 @@ class FleetEngine:
         self.n_flushes += 1
         self.n_steps_trained += n_real * k_steps
         self.flush_sizes.append(n_real)
+        if tel.enabled:
+            wall1 = tel.wall()
+            compiled = self.steps.n_traces - traces0
+            tel.span(
+                "fleet.flush",
+                "fleet",
+                wall0,
+                wall1,
+                clock="wall",
+                jobs=n_real,
+                k_steps=k_steps,
+                batch=batch,
+                pool_rows=int(r_pad),
+                compiled=compiled,
+            )
+            if compiled:
+                tel.instant("fleet.compile", "fleet", wall1, clock="wall")
+                tel.count("fleet.compiles", compiled)
+            if self.sim_clock is not None:
+                # the same flush pinned to simulated time, so trace views
+                # can correlate host cost with scheduler progress
+                tel.instant("fleet.flush", "fleet", self.sim_clock(), jobs=n_real)
+            tel.count("fleet.flushes", 1)
+            tel.count("fleet.steps_trained", n_real * k_steps)
+            tel.observe("fleet.flush.jobs", n_real)
+            tel.observe("fleet.flush.wall_s", wall1 - wall0)
         for jpos, job in enumerate(jobs):
             job.future.resolve(float(losses_np[-1, jpos]))
 

@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import zlib
 from functools import lru_cache
-from typing import Tuple
 
 import numpy as np
 
@@ -27,13 +26,13 @@ ORIENTATIONS = ("axial", "coronal", "sagittal")
 PATHOLOGIES = ("HGG", "LGG")
 
 
-def all_tasks() -> Tuple[TaskTag, ...]:
+def all_tasks() -> tuple[TaskTag, ...]:
     return tuple(
         TaskTag(m, o, p) for o in ORIENTATIONS for p in PATHOLOGIES for m in MODALITIES
     )
 
 
-def paper_eight_tasks() -> Tuple[TaskTag, ...]:
+def paper_eight_tasks() -> tuple[TaskTag, ...]:
     """The 8 task-environment pairs sampled for the deployment experiment
     (paper §2.2)."""
     names = [
@@ -61,7 +60,9 @@ def _canonical(patient: int, pathology: str, n: int):
     Returns (tissue maps dict, landmark zyx float array)."""
     rng = np.random.default_rng(10_000 + patient)
     z, y, x = _grid(n)
-    jit = lambda s: rng.uniform(-s, s)
+
+    def jit(s):
+        return rng.uniform(-s, s)
 
     # head: ellipsoid
     head = ((z / 0.95) ** 2 + (y / 0.85) ** 2 + (x / 0.8) ** 2) < 1.0
@@ -114,7 +115,7 @@ _ORIENT_PERM = {"axial": (0, 1, 2), "coronal": (1, 0, 2), "sagittal": (2, 1, 0)}
 
 def make_volume(
     task: TaskTag, patient: int, n: int = 24, noise: float = 0.03
-) -> Tuple[np.ndarray, np.ndarray]:
+) -> tuple[np.ndarray, np.ndarray]:
     """-> (volume f32 [n,n,n] in [0,1], landmark float [3] in volume idx)."""
     tissue, landmark = _canonical(patient, task.pathology, n)
     wh, wv, wl, we = _MODALITY_MIX[task.modality]

@@ -10,8 +10,8 @@ session exercises the continuous-batching and hot-swap paths together.
 
 from __future__ import annotations
 
+from collections.abc import Sequence
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -24,6 +24,7 @@ from repro.serve.publisher import ParamPublisher
 from repro.serve.report import ServeReport
 from repro.serve.service import LocalizationService
 from repro.serve.traffic import TrafficSpec, synthetic_requests
+from repro.telemetry import Telemetry
 
 
 @dataclass
@@ -32,7 +33,7 @@ class ServeSession:
 
     cfg: DQNConfig
     engine: FleetEngine
-    agents: List[DQNAgent]
+    agents: list[DQNAgent]
     publisher: ParamPublisher
     service: LocalizationService
     tasks: list
@@ -65,12 +66,15 @@ def build_session(
     n_agents: int,
     traffic: TrafficSpec,
     seed: int = 0,
-    tasks: Optional[Sequence] = None,
-    patients: Optional[Sequence[int]] = None,
+    tasks: Sequence | None = None,
+    patients: Sequence[int] | None = None,
     warmup: bool = True,
+    telemetry: Telemetry | None = None,
 ) -> ServeSession:
     """Fleet + publisher + service, params published once (version 0)."""
     engine = FleetEngine(cfg)
+    if telemetry is not None:
+        engine.telemetry = telemetry
     agents = [
         DQNAgent(i, cfg, seed=seed + i, engine=engine) for i in range(n_agents)
     ]
@@ -86,6 +90,7 @@ def build_session(
         n_version_slots=traffic.n_version_slots,
         max_staleness=traffic.max_staleness,
         warmup=warmup,
+        telemetry=telemetry,
     )
     return ServeSession(
         cfg=cfg,

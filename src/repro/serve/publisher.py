@@ -15,8 +15,9 @@ PAPERS.md, applied to the inference plane).
 from __future__ import annotations
 
 import time
+from collections.abc import Callable
 from dataclasses import dataclass
-from typing import Any, Callable, Optional, Union
+from typing import Any
 
 import jax
 
@@ -42,14 +43,14 @@ class ParamPublisher:
     params pytree (tests publish hand-built pytrees this way).
     """
 
-    def __init__(self, source: Union[FleetEngine, Callable[[], Any]]):
+    def __init__(self, source: FleetEngine | Callable[[], Any]):
         self._engine = source if isinstance(source, FleetEngine) else None
         self._fn = None if self._engine is not None else source
-        self._latest: Optional[ParamVersion] = None
+        self._latest: ParamVersion | None = None
         self._next_version = 0
 
     @property
-    def latest(self) -> Optional[ParamVersion]:
+    def latest(self) -> ParamVersion | None:
         """Most recently published version (None before first publish)."""
         return self._latest
 

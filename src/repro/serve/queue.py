@@ -18,7 +18,6 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Deque, Optional
 
 import numpy as np
 
@@ -35,8 +34,8 @@ class ServeRequest:
     volume: np.ndarray  # [n,n,n] f32
     start: np.ndarray  # [3] int voxel
     agent_id: int = 0  # which fleet slot answers
-    max_steps: Optional[int] = None  # None -> cfg.max_episode_steps
-    landmark: Optional[np.ndarray] = None  # ground truth (reporting only)
+    max_steps: int | None = None  # None -> cfg.max_episode_steps
+    landmark: np.ndarray | None = None  # ground truth (reporting only)
 
 
 @dataclass
@@ -47,7 +46,7 @@ class ServeResult:
     final_loc: np.ndarray  # [3] int voxel
     version: int  # param version of the whole rollout
     n_ticks: int
-    dist_err: Optional[float] = None
+    dist_err: float | None = None
 
 
 class _Ticket:
@@ -86,7 +85,7 @@ class _Ticket:
         )
         self.submitted_at = time.perf_counter()
         self.admitted_at: float = 0.0
-        self.result: Optional[ServeResult] = None
+        self.result: ServeResult | None = None
 
     def advance(self, new_loc: np.ndarray) -> bool:
         """Record one greedy move; True when the rollout terminated
@@ -100,7 +99,7 @@ class _Ticket:
         self.loc = np.asarray(new_loc, np.int32)
         return False
 
-    def dist_err(self) -> Optional[float]:
+    def dist_err(self) -> float | None:
         lm = self.request.landmark
         if lm is None:
             return None
@@ -117,12 +116,12 @@ class RequestQueue:
     not-yet-arrived head (FIFO is part of the determinism contract).
     """
 
-    _items: Deque = field(default_factory=deque)
+    _items: deque = field(default_factory=deque)
 
     def push(self, ticket: _Ticket, not_before: float = 0.0) -> None:
         self._items.append((not_before, ticket))
 
-    def pop_ready(self, now: float) -> Optional[_Ticket]:
+    def pop_ready(self, now: float) -> _Ticket | None:
         if not self._items:
             return None
         not_before, ticket = self._items[0]

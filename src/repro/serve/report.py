@@ -11,7 +11,7 @@ every tick; ``summary()`` flattens everything into the
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any
 
 import numpy as np
 
@@ -27,22 +27,22 @@ class RequestRecord:
     latency_s: float  # submit -> completion wall time
     queued_s: float  # submit -> admission wall time
     final_loc: Any = None  # [3] int voxel location
-    dist_err: Optional[float] = None  # vs known landmark (synthetic only)
+    dist_err: float | None = None  # vs known landmark (synthetic only)
 
 
 @dataclass
 class ServeReport:
     """What ``LocalizationService.drain()`` returns."""
 
-    requests: List[RequestRecord] = field(default_factory=list)
+    requests: list[RequestRecord] = field(default_factory=list)
     n_ticks: int = 0
     wall_time_s: float = 0.0
-    queue_depth: List[int] = field(default_factory=list)  # sampled per tick
-    batch_sizes: List[int] = field(default_factory=list)  # bucket per tick
+    queue_depth: list[int] = field(default_factory=list)  # sampled per tick
+    batch_sizes: list[int] = field(default_factory=list)  # bucket per tick
     n_swaps: int = 0  # param versions hot-swapped in
     n_deferred_swaps: int = 0  # installs blocked by in-flight requests
     n_stall_ticks: int = 0  # admission paused by the staleness bound
-    versions_served: Dict[int, int] = field(default_factory=dict)
+    versions_served: dict[int, int] = field(default_factory=dict)
     act_traces_start: int = 0  # compiled-bucket counter before serving
     act_traces_end: int = 0  # ... and after (equal => no recompiles)
 
@@ -62,7 +62,7 @@ class ServeReport:
         lat = self._latencies_ms()
         return float(np.percentile(lat, q)) if len(lat) else float("nan")
 
-    def summary(self) -> Dict[str, Any]:
+    def summary(self) -> dict[str, Any]:
         """Flat JSON-able metrics (the ``configs`` entry CI gates on)."""
         lat = self._latencies_ms()
         ticks = np.array([r.n_ticks for r in self.requests], np.float64)

@@ -32,7 +32,7 @@ makes continuous batching safe to enable everywhere.
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -44,6 +44,7 @@ from repro.rl.fleet import _pow2, make_act_steps
 from repro.serve.publisher import ParamPublisher, ParamVersion
 from repro.serve.queue import RequestQueue, ServeRequest, ServeResult, _Ticket
 from repro.serve.report import RequestRecord, ServeReport
+from repro.telemetry import NULL, Telemetry
 
 
 class LocalizationService:
@@ -53,13 +54,15 @@ class LocalizationService:
         self,
         cfg: DQNConfig,
         *,
-        publisher: Optional[ParamPublisher] = None,
+        publisher: ParamPublisher | None = None,
         params=None,
         max_batch: int = 16,
         n_version_slots: int = 2,
         max_staleness: int = 0,
         warmup: bool = True,
+        telemetry: Telemetry | None = None,
     ):
+        self.telemetry = telemetry if telemetry is not None else NULL
         if (publisher is None) == (params is None):
             raise ValueError("exactly one of publisher= or params= is required")
         if publisher is None:
@@ -80,7 +83,7 @@ class LocalizationService:
         self.n_agents = pv.n_agents
         # pow2 batch buckets: one compiled entrypoint each, fixed after
         # warmup (admission never exceeds max_batch)
-        self.buckets: List[int] = []
+        self.buckets: list[int] = []
         b = 1
         while b < self.max_batch:
             self.buckets.append(b)
@@ -93,14 +96,14 @@ class LocalizationService:
         self._vparams = jax.tree_util.tree_map(
             lambda x: jnp.tile(x, (v,) + (1,) * (x.ndim - 1)), pv.params
         )
-        self._slot_version: List[Optional[int]] = [None] * v
+        self._slot_version: list[int | None] = [None] * v
         self._slot_active = [0] * v
         self._newest_slot = 0
         self._slot_version[0] = pv.version
         # request plane
         self.queue = RequestQueue()
-        self.active: List[_Ticket] = []
-        self.results: Dict[int, ServeResult] = {}
+        self.active: list[_Ticket] = []
+        self.results: dict[int, ServeResult] = {}
         self._next_request_id = 0
         self.report = ServeReport()
         if warmup:
@@ -128,6 +131,15 @@ class LocalizationService:
         target = (self._newest_slot + 1) % self.n_version_slots
         if self._slot_active[target] > 0:
             self.report.n_deferred_swaps += 1
+            if self.telemetry.enabled:
+                self.telemetry.instant(
+                    "serve.swap.deferred",
+                    "serve",
+                    self.telemetry.wall(),
+                    clock="wall",
+                    version=pv.version,
+                )
+                self.telemetry.count("serve.swaps.deferred", 1)
             return False
         n = self.n_agents
         self._vparams = jax.tree_util.tree_map(
@@ -138,6 +150,16 @@ class LocalizationService:
         self._slot_version[target] = pv.version
         self._newest_slot = target
         self.report.n_swaps += 1
+        if self.telemetry.enabled:
+            self.telemetry.instant(
+                "serve.swap",
+                "serve",
+                self.telemetry.wall(),
+                clock="wall",
+                version=pv.version,
+                slot=target,
+            )
+            self.telemetry.count("serve.swaps", 1)
         return True
 
     def sync_params(self) -> bool:
@@ -198,15 +220,43 @@ class LocalizationService:
         )
         v = self.report.versions_served
         v[ticket.version] = v.get(ticket.version, 0) + 1
+        if self.telemetry.enabled:
+            tel = self.telemetry
+            # the request's life on its agent's wall-clock track
+            tel.span(
+                "request",
+                f"agent{ticket.request.agent_id}",
+                tel.to_wall(ticket.submitted_at),
+                tel.to_wall(now),
+                clock="wall",
+                request_id=ticket.request_id,
+                version=ticket.version,
+                n_ticks=ticket.n_ticks,
+            )
+            tel.count("serve.requests.completed", 1)
+            tel.observe("serve.latency_s", now - ticket.submitted_at)
+            tel.observe("serve.queued_s", ticket.admitted_at - ticket.submitted_at)
 
     def tick(self) -> int:
         """One serving tick; returns how many requests completed."""
         now = time.perf_counter()
+        tel = self.telemetry
+        tick_t0 = tel.wall() if tel.enabled else 0.0
+        traces0 = self.steps.n_traces
         self.sync_params()
         if self.staleness > self.max_staleness:
             # staleness bound: the swap is blocked by in-flight rollouts
             # on the oldest slot — pause admission until it lands
             self.report.n_stall_ticks += 1
+            if tel.enabled:
+                tel.instant(
+                    "serve.stall",
+                    "serve",
+                    tel.wall(),
+                    clock="wall",
+                    staleness=self.staleness,
+                )
+                tel.count("serve.stall_ticks", 1)
         else:
             self._admit(now)
         self.report.queue_depth.append(len(self.queue))
@@ -245,6 +295,25 @@ class LocalizationService:
         self.report.n_ticks += 1
         self.report.batch_sizes.append(bucket)
         self.report.act_traces_end = self.steps.n_traces
+        if tel.enabled:
+            tick_t1 = tel.wall()
+            compiled = self.steps.n_traces - traces0
+            tel.span(
+                "serve.tick",
+                "serve",
+                tick_t0,
+                tick_t1,
+                clock="wall",
+                n_active=n_active,
+                bucket=bucket,
+                done=done,
+                compiled=compiled,
+            )
+            if compiled:
+                tel.instant("serve.compile", "serve", tick_t1, clock="wall")
+                tel.count("serve.compiles", compiled)
+            tel.count("serve.ticks", 1)
+            tel.observe("serve.tick.batch", n_active)
         return done
 
     def drain(self) -> ServeReport:
@@ -258,7 +327,7 @@ class LocalizationService:
         return self.report
 
     def serve(
-        self, requests: Sequence[ServeRequest], *, rate: Optional[float] = None
+        self, requests: Sequence[ServeRequest], *, rate: float | None = None
     ) -> ServeReport:
         """Submit a batch of requests and drain the service.
 

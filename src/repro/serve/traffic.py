@@ -10,8 +10,8 @@ so served accuracy is measurable alongside latency.
 
 from __future__ import annotations
 
+from collections.abc import Sequence
 from dataclasses import dataclass
-from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -28,8 +28,8 @@ class TrafficSpec:
     max_batch: int = 8  # service admission limit (pow2-bucketed)
     n_version_slots: int = 2  # live param versions the ring can hold
     max_staleness: int = 1  # versions the service may lag the publisher
-    max_steps: Optional[int] = None  # per-request budget (None -> cfg)
-    rate: Optional[float] = None  # req/s open-loop; None = all at once
+    max_steps: int | None = None  # per-request budget (None -> cfg)
+    rate: float | None = None  # req/s open-loop; None = all at once
     n_tasks: int = 4  # distinct task volumes in the stream
     n_patients: int = 8  # distinct patients per task
     seed: int = 0
@@ -40,8 +40,8 @@ def synthetic_requests(
     cfg: DQNConfig,
     *,
     n_agents: int = 1,
-    tasks: Optional[Sequence] = None,
-) -> List[ServeRequest]:
+    tasks: Sequence | None = None,
+) -> list[ServeRequest]:
     """Expand a spec into a seeded, deterministic request list.
 
     Requests cycle round-robin over tasks x patients x agents; start
@@ -53,7 +53,7 @@ def synthetic_requests(
     rng = np.random.default_rng(spec.seed)
     n = cfg.volume_shape[0]
     lo, hi = n // 4, 3 * n // 4
-    out: List[ServeRequest] = []
+    out: list[ServeRequest] = []
     for i in range(spec.n_requests):
         task = task_list[i % len(task_list)]
         patient = int(rng.integers(0, spec.n_patients))

@@ -38,6 +38,13 @@ def _fmt(x, width=10, prec=3):
     return f"{x:>{width}}"
 
 
+def _fmt_ci(ci) -> str:
+    """``[lo, hi]`` bootstrap interval -> ``[lo, hi]`` cell (or ``-``)."""
+    if not ci or ci[0] is None or ci[1] is None:
+        return "-"
+    return f"[{ci[0]:.3f}, {ci[1]:.3f}]"
+
+
 def _print_summary(summary: dict) -> None:
     print(f"\nsweep {summary['sweep']} (seeds={summary['seeds']})")
     metrics = None
@@ -60,14 +67,15 @@ def _print_summary(summary: dict) -> None:
     if summary["comparisons"]:
         print(f"\npaired vs {summary['baseline']!r}:")
         print(
-            f"{'variant':<22} {'metric':<14} {'delta':>10} "
-            f"{'t':>8} {'p(t)':>8} {'p(perm)':>8}"
+            f"{'variant':<22} {'metric':<14} {'delta':>10} {'d95%':>21} "
+            f"{'d':>7} {'t':>8} {'p(t)':>8} {'p(perm)':>8}"
         )
         for c in summary["comparisons"]:
             print(
                 f"{c['variant']:<22} {c['metric']:<14} {_fmt(c['delta'])} "
-                f"{_fmt(c['t'], 8)} {_fmt(c['p_ttest'], 8, 4)} "
-                f"{_fmt(c['p_permutation'], 8, 4)}"
+                f"{_fmt_ci(c.get('delta_ci95')):>21} "
+                f"{_fmt(c.get('cohens_d'), 7, 2)} {_fmt(c['t'], 8)} "
+                f"{_fmt(c['p_ttest'], 8, 4)} {_fmt(c['p_permutation'], 8, 4)}"
             )
 
 
@@ -84,13 +92,15 @@ def _cmd_compare(args) -> int:
         return 2
     print(
         f"{'variant':<22} {'metric':<14} {'A':>10} {'B':>10} {'delta':>10} "
-        f"{'p(t)':>8} {'p(perm)':>8}  flag"
+        f"{'d95%':>21} {'d':>7} {'p(t)':>8} {'p(perm)':>8}  flag"
     )
     for r in rows:
         flag = "REGRESSION" if r["regression"] else ("*" if r["significant"] else "")
         print(
             f"{r['variant']:<22} {r['metric']:<14} {_fmt(r['mean_a'])} "
-            f"{_fmt(r['mean_b'])} {_fmt(r['delta'])} {_fmt(r['p_ttest'], 8, 4)} "
+            f"{_fmt(r['mean_b'])} {_fmt(r['delta'])} "
+            f"{_fmt_ci(r.get('delta_ci95')):>21} "
+            f"{_fmt(r.get('cohens_d'), 7, 2)} {_fmt(r['p_ttest'], 8, 4)} "
             f"{_fmt(r['p_permutation'], 8, 4)}  {flag}"
         )
     for r in regressions:

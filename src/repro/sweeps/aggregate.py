@@ -19,17 +19,24 @@ regressions* (worse mean on a gated metric with p below alpha).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from collections.abc import Sequence
+from typing import Any
 
 from repro.sweeps.spec import SweepSpec
-from repro.sweeps.stats import mean_ci, paired_permutation_test, paired_ttest
+from repro.sweeps.stats import (
+    bootstrap_ci,
+    cohens_d,
+    mean_ci,
+    paired_permutation_test,
+    paired_ttest,
+)
 from repro.sweeps.store import STATUS_OK, Row
 
 #: metrics whose significant increase fails a comparison gate
 GATE_METRICS = ("mean_dist_err", "forgetting")
 
 
-def _finite(x: Any) -> Optional[float]:
+def _finite(x: Any) -> float | None:
     """float(x) if it is a finite number, else None (JSON-safe)."""
     if x is None:
         return None
@@ -40,7 +47,7 @@ def _finite(x: Any) -> Optional[float]:
     return v if math.isfinite(v) else None
 
 
-def forgetting_of(summary: Dict[str, Any]) -> Optional[float]:
+def forgetting_of(summary: dict[str, Any]) -> float | None:
     """Error increase from the best probe to the final evaluation.
 
     ``max(0, final - min_over_curve)`` over the report's eval curve: 0
@@ -55,9 +62,9 @@ def forgetting_of(summary: Dict[str, Any]) -> Optional[float]:
     return max(0.0, errs[-1] - min(errs))
 
 
-def _metric_values(rows: Sequence[Row], metric: str) -> Dict[str, float]:
+def _metric_values(rows: Sequence[Row], metric: str) -> dict[str, float]:
     """seed (as str, JSON-stable) -> finite metric value."""
-    out: Dict[str, float] = {}
+    out: dict[str, float] = {}
     for r in rows:
         v = _finite((r.get("summary") or {}).get(metric))
         if v is not None:
@@ -66,13 +73,13 @@ def _metric_values(rows: Sequence[Row], metric: str) -> Dict[str, float]:
 
 
 def _pair(
-    a: Dict[str, float], b: Dict[str, float]
-) -> Tuple[List[float], List[float], List[str]]:
+    a: dict[str, float], b: dict[str, float]
+) -> tuple[list[float], list[float], list[str]]:
     seeds = sorted(set(a) & set(b), key=lambda s: (len(s), s))
     return [a[s] for s in seeds], [b[s] for s in seeds], seeds
 
 
-def _stats_entry(values: Dict[str, float]) -> Dict[str, Any]:
+def _stats_entry(values: dict[str, float]) -> dict[str, Any]:
     xs = [values[s] for s in sorted(values, key=lambda s: (len(s), s))]
     mean, half = mean_ci(xs)
     std = None
@@ -90,16 +97,16 @@ def _stats_entry(values: Dict[str, float]) -> Dict[str, Any]:
 
 def summarize(
     sweep: SweepSpec, rows: Sequence[Row], *, fast: bool = False
-) -> Dict[str, Any]:
+) -> dict[str, Any]:
     """The sweep summary document (what ``--json`` writes)."""
-    by_label: Dict[str, List[Row]] = {v.label: [] for v in sweep.variants}
+    by_label: dict[str, list[Row]] = {v.label: [] for v in sweep.variants}
     for r in rows:
         if r.get("label") in by_label and r.get("status") == STATUS_OK:
             by_label[r["label"]].append(r)
     for vrows in by_label.values():
         vrows.sort(key=lambda r: int(r["seed"]))
 
-    variants: Dict[str, Any] = {}
+    variants: dict[str, Any] = {}
     for v in sweep.variants:
         vrows = by_label[v.label]
         variants[v.label] = {
@@ -111,7 +118,7 @@ def summarize(
             },
         }
 
-    comparisons: List[Dict[str, Any]] = []
+    comparisons: list[dict[str, Any]] = []
     if sweep.baseline is not None:
         base_rows = by_label[sweep.baseline]
         for v in sweep.variants:
@@ -125,6 +132,8 @@ def summarize(
                 if not seeds:
                     continue
                 t, p_t = paired_ttest(b, a)
+                deltas = [y - x for x, y in zip(a, b, strict=True)]
+                ci_lo, ci_hi = bootstrap_ci(deltas)
                 comparisons.append(
                     {
                         "baseline": sweep.baseline,
@@ -134,6 +143,8 @@ def summarize(
                         "mean_baseline": _finite(sum(a) / len(a)),
                         "mean_variant": _finite(sum(b) / len(b)),
                         "delta": _finite(sum(b) / len(b) - sum(a) / len(a)),
+                        "delta_ci95": [_finite(ci_lo), _finite(ci_hi)],
+                        "cohens_d": _finite(cohens_d(b, a)),
                         "t": _finite(t),
                         "p_ttest": _finite(p_t),
                         "p_permutation": _finite(paired_permutation_test(b, a)),
@@ -167,19 +178,19 @@ def summarize(
 
 
 def compare(
-    a: Dict[str, Any],
-    b: Dict[str, Any],
+    a: dict[str, Any],
+    b: dict[str, Any],
     *,
     alpha: float = 0.05,
     gate_metrics: Sequence[str] = GATE_METRICS,
-) -> Tuple[List[Dict[str, Any]], List[Dict[str, Any]]]:
+) -> tuple[list[dict[str, Any]], list[dict[str, Any]]]:
     """Diff two sweep summaries; returns (delta rows, regressions).
 
     Rows pair per-seed values variant-by-variant and metric-by-metric.
     A *regression* is a gated metric that got significantly worse
     (higher mean, paired-t p < alpha); callers exit nonzero when the
     regression list is non-empty."""
-    rows: List[Dict[str, Any]] = []
+    rows: list[dict[str, Any]] = []
     va, vb = a.get("variants", {}), b.get("variants", {})
     for label in sorted(set(va) & set(vb)):
         ma, mb = va[label].get("metrics", {}), vb[label].get("metrics", {})
@@ -192,6 +203,8 @@ def compare(
             mean_a, mean_b = sum(xs) / len(xs), sum(ys) / len(ys)
             t, p_t = paired_ttest(ys, xs)
             p_perm = paired_permutation_test(ys, xs)
+            deltas = [y - x for x, y in zip(xs, ys, strict=True)]
+            ci_lo, ci_hi = bootstrap_ci(deltas)
             p = p_t if p_t == p_t else None  # nan -> None (n < 2)
             significant = p is not None and p < alpha
             rows.append(
@@ -202,6 +215,8 @@ def compare(
                     "mean_a": _finite(mean_a),
                     "mean_b": _finite(mean_b),
                     "delta": _finite(mean_b - mean_a),
+                    "delta_ci95": [_finite(ci_lo), _finite(ci_hi)],
+                    "cohens_d": _finite(cohens_d(ys, xs)),
                     "pct": _finite(
                         100.0 * (mean_b - mean_a) / abs(mean_a) if mean_a else None
                     ),

@@ -28,7 +28,7 @@ import time
 import traceback
 from concurrent.futures import FIRST_COMPLETED, ProcessPoolExecutor, wait
 from contextlib import contextmanager
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any
 
 from repro.experiments import runner
 from repro.sweeps.aggregate import forgetting_of, summarize
@@ -51,7 +51,7 @@ class _BudgetExceeded(Exception):
 
 
 @contextmanager
-def _budget_alarm(budget_s: Optional[float]):
+def _budget_alarm(budget_s: float | None):
     """Interrupt the cell when its wall-time budget elapses.
 
     Uses ``SIGALRM``/``setitimer``, so it only arms on platforms that
@@ -79,7 +79,7 @@ def _budget_alarm(budget_s: Optional[float]):
         signal.signal(signal.SIGALRM, prev)
 
 
-def _run_cell(payload: Tuple[SweepCell, Optional[float]]) -> Row:
+def _run_cell(payload: tuple[SweepCell, float | None]) -> Row:
     """Execute one cell (top-level so the spawn pool can pickle it)."""
     cell, budget_s = payload
     t0 = time.monotonic()
@@ -121,11 +121,11 @@ def run_sweep(
     sweep: SweepSpec,
     *,
     fast: bool = False,
-    workers: Optional[int] = None,
-    store: Optional[ReportStore] = None,
-    budget_s: Optional[float] = None,
+    workers: int | None = None,
+    store: ReportStore | None = None,
+    budget_s: float | None = None,
     echo=None,
-) -> Dict[str, Any]:
+) -> dict[str, Any]:
     """Expand, execute (resuming from ``store``), aggregate.
 
     Returns the summary document from
@@ -134,7 +134,7 @@ def run_sweep(
     say = echo or (lambda *_: None)
     cells = sweep.expand(fast=fast)
     budget = sweep.cell_budget_s if budget_s is None else budget_s
-    cached: Dict[str, Row] = {}
+    cached: dict[str, Row] = {}
     if store is not None:
         done = store.completed()
         cached = {c.key: dict(done[c.key], cached=True) for c in cells if c.key in done}
@@ -144,7 +144,7 @@ def run_sweep(
         f"({len(cached)} cached, {len(pending)} to run)"
     )
 
-    fresh: Dict[str, Row] = {}
+    fresh: dict[str, Row] = {}
 
     def record(row: Row) -> None:
         fresh[row["key"]] = row
@@ -192,7 +192,7 @@ def run_sweep(
                             }
                         )
 
-    rows: List[Row] = [
+    rows: list[Row] = [
         cached[c.key] if c.key in cached else fresh[c.key]
         for c in cells
         if c.key in cached or c.key in fresh
@@ -200,7 +200,7 @@ def run_sweep(
     return summarize(sweep, rows, fast=fast)
 
 
-def failed_cells(summary: Dict[str, Any]) -> List[Dict[str, Any]]:
+def failed_cells(summary: dict[str, Any]) -> list[dict[str, Any]]:
     """The summary's non-ok cells (empty list = clean sweep)."""
     return [c for c in summary.get("cells", []) if c.get("status") != STATUS_OK]
 

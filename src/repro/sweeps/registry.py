@@ -15,11 +15,9 @@ Like scenarios, adding a sweep means registering a frozen spec.
 
 from __future__ import annotations
 
-from typing import Dict, List
-
 from repro.sweeps.spec import SweepSpec, SweepVariant
 
-_REGISTRY: Dict[str, SweepSpec] = {}
+_REGISTRY: dict[str, SweepSpec] = {}
 
 
 def register_sweep(sweep: SweepSpec) -> SweepSpec:
@@ -38,7 +36,7 @@ def get_sweep(name: str) -> SweepSpec:
         raise KeyError(f"unknown sweep {name!r}; registered: {known}") from None
 
 
-def list_sweeps() -> List[SweepSpec]:
+def list_sweeps() -> list[SweepSpec]:
     return [_REGISTRY[k] for k in sorted(_REGISTRY)]
 
 

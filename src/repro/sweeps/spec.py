@@ -21,7 +21,7 @@ import dataclasses
 import hashlib
 import json
 from dataclasses import dataclass, replace
-from typing import Any, Dict, Optional, Tuple
+from typing import Any
 
 from repro.experiments.registry import get_scenario
 from repro.experiments.spec import ScenarioSpec
@@ -58,7 +58,7 @@ def spec_hash(spec: ScenarioSpec) -> str:
 
 
 def apply_overrides(
-    spec: ScenarioSpec, overrides: Tuple[Tuple[str, Any], ...]
+    spec: ScenarioSpec, overrides: tuple[tuple[str, Any], ...]
 ) -> ScenarioSpec:
     """Apply dotted-path field overrides to a frozen spec.
 
@@ -86,7 +86,7 @@ class SweepVariant:
 
     label: str
     scenario: str  # registered ScenarioSpec name
-    overrides: Tuple[Tuple[str, Any], ...] = ()
+    overrides: tuple[tuple[str, Any], ...] = ()
 
     def derive(self, seed: int, *, fast: bool = False) -> ScenarioSpec:
         """The fully resolved ScenarioSpec for one cell."""
@@ -119,14 +119,14 @@ class SweepSpec:
 
     name: str
     description: str = ""
-    variants: Tuple[SweepVariant, ...] = ()
-    seeds: Tuple[int, ...] = (0, 1, 2, 3, 4)
+    variants: tuple[SweepVariant, ...] = ()
+    seeds: tuple[int, ...] = (0, 1, 2, 3, 4)
     # paired significance anchors on this variant label (None = no pairs)
-    baseline: Optional[str] = None
-    metrics: Tuple[str, ...] = DEFAULT_METRICS
+    baseline: str | None = None
+    metrics: tuple[str, ...] = DEFAULT_METRICS
     # wall-clock budget per cell in seconds (None = unlimited); the
     # executor marks over-budget cells failed, which fails the sweep
-    cell_budget_s: Optional[float] = None
+    cell_budget_s: float | None = None
 
     def __post_init__(self):
         if not self.variants:
@@ -141,10 +141,10 @@ class SweepSpec:
                 f"sweep {self.name!r}: baseline {self.baseline!r} is not a variant"
             )
 
-    def with_seeds(self, seeds: Tuple[int, ...]) -> "SweepSpec":
+    def with_seeds(self, seeds: tuple[int, ...]) -> "SweepSpec":
         return dataclasses.replace(self, seeds=tuple(seeds))
 
-    def expand(self, *, fast: bool = False) -> Tuple[SweepCell, ...]:
+    def expand(self, *, fast: bool = False) -> tuple[SweepCell, ...]:
         """The deterministic grid: variants outer, seeds inner.
 
         Expansion is pure derivation from frozen specs — two expansions
@@ -155,7 +155,7 @@ class SweepSpec:
             for s in self.seeds
         )
 
-    def grid_index(self, *, fast: bool = False) -> Dict[str, SweepCell]:
+    def grid_index(self, *, fast: bool = False) -> dict[str, SweepCell]:
         return {c.key: c for c in self.expand(fast=fast)}
 
 

@@ -17,9 +17,10 @@ from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Iterable, List, Optional
+from collections.abc import Iterable
+from typing import Any
 
-Row = Dict[str, Any]
+Row = dict[str, Any]
 
 STATUS_OK = "ok"
 STATUS_ERROR = "error"
@@ -33,9 +34,9 @@ class ReportStore:
         self.path = str(path)
 
     # -- reading -----------------------------------------------------------
-    def load(self) -> Dict[str, Row]:
+    def load(self) -> dict[str, Row]:
         """key -> newest row (malformed/truncated lines are skipped)."""
-        rows: Dict[str, Row] = {}
+        rows: dict[str, Row] = {}
         if not os.path.exists(self.path):
             return rows
         with open(self.path) as f:
@@ -52,11 +53,11 @@ class ReportStore:
                     rows[key] = row
         return rows
 
-    def completed(self) -> Dict[str, Row]:
+    def completed(self) -> dict[str, Row]:
         """key -> row for cells that finished successfully."""
         return {k: r for k, r in self.load().items() if r.get("status") == STATUS_OK}
 
-    def get(self, key: str) -> Optional[Row]:
+    def get(self, key: str) -> Row | None:
         return self.load().get(key)
 
     # -- writing -----------------------------------------------------------
@@ -80,7 +81,7 @@ class ReportStore:
         changed and stale cells would otherwise accumulate forever."""
         keep = set(keep_keys)
         rows = self.load()
-        kept: List[Row] = [r for k, r in sorted(rows.items()) if k in keep]
+        kept: list[Row] = [r for k, r in sorted(rows.items()) if k in keep]
         dropped = len(rows) - len(kept)
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:

@@ -1,0 +1,34 @@
+"""Unified observability: metrics registry + span tracing + exporters.
+
+One :class:`Telemetry` bundle per run, threaded through the scheduler,
+federated rounds, gossip, fleet engine, serve plane, and population
+simulator.  Telemetry off (the ``NULL`` bundle) is the default
+everywhere and is contractually free: bit-identical run outputs and
+<2% overhead (gated in ``benchmarks/fleet_throughput.py``).  Telemetry
+on is observe-only — it never mutates run numerics.
+
+Capture a trace from the CLI with ``--trace PATH`` on
+``python -m repro.experiments`` or any benchmark; inspect it with
+``python -m repro.telemetry summarize PATH`` or load the JSON in
+https://ui.perfetto.dev.
+"""
+
+from __future__ import annotations
+
+from .export import load_trace, to_perfetto, write_jsonl, write_perfetto, write_trace
+from .registry import MetricsRegistry, NullRegistry
+from .trace import NULL, NullTracer, Telemetry, Tracer
+
+__all__ = [
+    "NULL",
+    "MetricsRegistry",
+    "NullRegistry",
+    "NullTracer",
+    "Telemetry",
+    "Tracer",
+    "load_trace",
+    "to_perfetto",
+    "write_jsonl",
+    "write_perfetto",
+    "write_trace",
+]

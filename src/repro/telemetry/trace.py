@@ -1,0 +1,244 @@
+"""Structured span tracing over simulated and host clocks.
+
+A :class:`Tracer` records a flat list of events.  Every event carries a
+``clock`` field naming which timeline it lives on:
+
+- ``"sim"``   — simulated scheduler seconds (:class:`repro.core.scheduler.
+  Scheduler` time).  Round phases, gossip exchanges, availability windows.
+- ``"wall"``  — host ``perf_counter`` seconds.  Fleet flushes, serve
+  ticks, XLA compiles — things that cost real time regardless of the
+  simulated clock.
+
+Event kinds mirror the Chrome ``trace_event`` phases they export to:
+
+- ``span``    — a complete event (``ph: "X"``): name, track, t0, t1.
+- ``instant`` — a point event (``ph: "i"``).
+- ``counter`` — a sampled counter value (``ph: "C"``).
+
+``track`` is a free-form string ("agent3", "gossip", "fleet", "serve")
+that becomes a Perfetto thread row; sim-clock and wall-clock tracks are
+grouped into separate Perfetto processes so the two timelines never
+visually interleave.
+
+The :class:`Telemetry` bundle ties one tracer to one
+:class:`~repro.telemetry.registry.MetricsRegistry` and is the single
+object threaded through the system ctors.  ``NULL`` is the shared
+disabled bundle: every record method is a no-op and ``enabled`` is
+False, so instrumented call sites can guard hot paths with one
+attribute check and pay nothing when telemetry is off.
+"""
+
+from __future__ import annotations
+
+import time
+from collections.abc import Iterator
+from contextlib import contextmanager
+from typing import Any
+
+from .registry import MetricsRegistry, NullRegistry
+
+
+class Tracer:
+    """Append-only event buffer with a bounded size.
+
+    ``max_events`` bounds memory: once full, new events are dropped and
+    tallied in ``n_dropped`` (telemetry never takes down a run).
+    """
+
+    enabled = True
+
+    def __init__(self, *, max_events: int = 200_000):
+        self.max_events = int(max_events)
+        self.events: list[dict[str, Any]] = []
+        self.n_dropped = 0
+        self._wall0 = time.perf_counter()
+
+    # -- clocks --------------------------------------------------------------
+    def wall(self) -> float:
+        """Host seconds since tracer creation (zero-based wall clock)."""
+        return time.perf_counter() - self._wall0
+
+    def to_wall(self, perf_t: float) -> float:
+        """Rebase an absolute ``time.perf_counter()`` stamp onto the
+        tracer's zero-based wall clock (for call sites that already hold
+        perf_counter timestamps, e.g. the serve request plane)."""
+        return perf_t - self._wall0
+
+    # -- record --------------------------------------------------------------
+    def _emit(self, ev: dict[str, Any]) -> None:
+        if len(self.events) >= self.max_events:
+            self.n_dropped += 1
+            return
+        self.events.append(ev)
+
+    def span(
+        self,
+        name: str,
+        track: str,
+        t0: float,
+        t1: float,
+        *,
+        clock: str = "sim",
+        **args,
+    ) -> None:
+        """Record a complete span ``[t0, t1]`` on ``track``."""
+        self._emit(
+            {
+                "kind": "span",
+                "name": name,
+                "track": track,
+                "clock": clock,
+                "t0": float(t0),
+                "t1": float(t1),
+                "args": args,
+            }
+        )
+
+    def instant(
+        self, name: str, track: str, t: float, *, clock: str = "sim", **args
+    ) -> None:
+        """Record a point event at ``t`` on ``track``."""
+        self._emit(
+            {
+                "kind": "instant",
+                "name": name,
+                "track": track,
+                "clock": clock,
+                "t0": float(t),
+                "t1": float(t),
+                "args": args,
+            }
+        )
+
+    def counter(
+        self, name: str, track: str, t: float, value: float, *, clock: str = "sim"
+    ) -> None:
+        """Record a sampled counter value at ``t`` (Perfetto ``ph: "C"``)."""
+        self._emit(
+            {
+                "kind": "counter",
+                "name": name,
+                "track": track,
+                "clock": clock,
+                "t0": float(t),
+                "t1": float(t),
+                "args": {"value": float(value)},
+            }
+        )
+
+    @contextmanager
+    def wall_span(self, name: str, track: str, **args) -> Iterator[None]:
+        """Context manager recording a wall-clock span around its body."""
+        t0 = self.wall()
+        try:
+            yield
+        finally:
+            self.span(name, track, t0, self.wall(), clock="wall", **args)
+
+    # -- reads ---------------------------------------------------------------
+    def spans(self, name: str | None = None) -> list[dict[str, Any]]:
+        return [
+            e
+            for e in self.events
+            if e["kind"] == "span" and (name is None or e["name"] == name)
+        ]
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+class NullTracer(Tracer):
+    """Disabled tracer: records nothing, yields immediately."""
+
+    enabled = False
+
+    def __init__(self):
+        super().__init__(max_events=0)
+
+    def _emit(self, ev: dict[str, Any]) -> None:
+        pass
+
+    def span(self, name, track, t0, t1, *, clock="sim", **args) -> None:
+        pass
+
+    def instant(self, name, track, t, *, clock="sim", **args) -> None:
+        pass
+
+    def counter(self, name, track, t, value, *, clock="sim") -> None:
+        pass
+
+    @contextmanager
+    def wall_span(self, name: str, track: str, **args) -> Iterator[None]:
+        yield
+
+
+class Telemetry:
+    """One tracer + one metrics registry, threaded through system ctors.
+
+    ``Telemetry(enabled=False)`` (or the shared ``NULL`` singleton) is
+    the no-op bundle; call sites may check ``tel.enabled`` to skip even
+    argument construction on hot paths.
+    """
+
+    def __init__(
+        self,
+        *,
+        enabled: bool = True,
+        max_events: int = 200_000,
+        max_series: int = 1024,
+    ):
+        self.enabled = bool(enabled)
+        if self.enabled:
+            self.tracer: Tracer = Tracer(max_events=max_events)
+            self.registry: MetricsRegistry = MetricsRegistry(max_series=max_series)
+        else:
+            self.tracer = NullTracer()
+            self.registry = NullRegistry()
+
+    # convenience passthroughs so call sites read `tel.span(...)`
+    def span(self, name, track, t0, t1, *, clock="sim", **args) -> None:
+        self.tracer.span(name, track, t0, t1, clock=clock, **args)
+
+    def instant(self, name, track, t, *, clock="sim", **args) -> None:
+        self.tracer.instant(name, track, t, clock=clock, **args)
+
+    def counter(self, name, track, t, value, *, clock="sim") -> None:
+        self.tracer.counter(name, track, t, value, clock=clock)
+
+    def count(self, name: str, value: float = 1.0, **labels) -> None:
+        self.registry.count(name, value, **labels)
+
+    def observe(self, name: str, value: float, **labels) -> None:
+        self.registry.observe(name, value, **labels)
+
+    def gauge(self, name: str, value: float, **labels) -> None:
+        self.registry.gauge(name, value, **labels)
+
+    def wall_span(self, name: str, track: str, **args):
+        return self.tracer.wall_span(name, track, **args)
+
+    def wall(self) -> float:
+        return self.tracer.wall()
+
+    def to_wall(self, perf_t: float) -> float:
+        return self.tracer.to_wall(perf_t)
+
+    def summary(self) -> dict[str, Any]:
+        """Compact digest: event counts by name plus metric rows."""
+        by_name: dict[str, int] = {}
+        for e in self.tracer.events:
+            key = f"{e['kind']}:{e['name']}"
+            by_name[key] = by_name.get(key, 0) + 1
+        return {
+            "n_events": len(self.tracer.events),
+            "n_dropped_events": self.tracer.n_dropped,
+            "events_by_name": dict(sorted(by_name.items())),
+            "metrics": self.registry.summary(),
+        }
+
+
+#: shared disabled bundle — the default at every instrumented call site
+NULL = Telemetry(enabled=False)
+
+
+__all__ = ["NULL", "NullTracer", "Telemetry", "Tracer"]

@@ -27,7 +27,8 @@ import inspect
 import random
 import sys
 import types
-from typing import Any, Callable, List, Sequence
+from collections.abc import Callable, Sequence
+from typing import Any
 
 _DEFAULT_MAX_EXAMPLES = 50
 
@@ -81,7 +82,7 @@ class _Lists(SearchStrategy):
         self.elements = elements
         self.min_size, self.max_size = int(min_size), int(max_size)
 
-    def example(self, rng: random.Random, i: int) -> List[Any]:
+    def example(self, rng: random.Random, i: int) -> list[Any]:
         n = self.min_size if i == 0 else rng.randint(self.min_size, self.max_size)
         return [
             self.elements.example(rng, 2 + rng.randrange(1 << 16)) for _ in range(n)
