@@ -71,7 +71,24 @@ def build_parser(
         "JSON; .jsonl for the flat format); ignored by benchmarks that "
         "do not support tracing",
     )
+    ap.add_argument(
+        "--dashboard",
+        type=str,
+        default=None,
+        metavar="PATH",
+        help="render the run's observatory dashboard (self-contained "
+        "HTML); ignored by benchmarks that do not support it",
+    )
     return ap
+
+
+def per_config_path(path: str | None, name: str) -> str | None:
+    """``out.jsonl`` + ``hub`` -> ``out.hub.jsonl`` — one artifact per
+    benchmark row (mirrors the experiments CLI's multi-scenario rule)."""
+    if path is None:
+        return None
+    stem, dot, ext = path.rpartition(".")
+    return f"{stem}.{name}.{ext}" if dot else f"{path}.{name}"
 
 
 def check_gates(
@@ -118,10 +135,15 @@ def bench_main(
     kwargs = dict(fast=args.fast, json_path=args.json)
     if seed:
         kwargs["seed"] = args.seed
-    if "trace_path" in inspect.signature(run).parameters:
+    params = inspect.signature(run).parameters
+    if "trace_path" in params:
         kwargs["trace_path"] = args.trace
     elif args.trace:
         print(f"--trace ignored: {benchmark} does not capture traces")
+    if "dashboard_path" in params:
+        kwargs["dashboard_path"] = args.dashboard
+    elif args.dashboard:
+        print(f"--dashboard ignored: {benchmark} does not render dashboards")
     results = run(**kwargs)
     if args.check:
         current = {
@@ -133,4 +155,4 @@ def bench_main(
     return 0
 
 
-__all__ = ["Gate", "bench_main", "build_parser", "check_gates"]
+__all__ = ["Gate", "bench_main", "build_parser", "check_gates", "per_config_path"]

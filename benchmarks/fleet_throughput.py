@@ -23,10 +23,11 @@ Gated in CI via ``check_regression --metric speedup --higher-better``
 against ``benchmarks/baselines/BENCH_fleet.json``.
 
 A ``telemetry`` row additionally times the fleet path with an enabled
-:class:`~repro.telemetry.Telemetry` bundle against the default disabled
-path and reports ``telemetry_overhead`` (enabled/disabled wall-time
-ratio, ~1.0) — gated so instrumentation on the flush hot path stays
-observe-only in cost as well as in semantics.  The *disabled* path's
+:class:`~repro.telemetry.Telemetry` bundle *plus the full observatory*
+(the stats-carrying train chunk) against the default disabled path and
+reports ``telemetry_overhead`` (enabled/disabled wall-time ratio, ~1.0)
+— gated so instrumentation on the flush hot path stays observe-only in
+cost as well as in semantics.  The *disabled* path's
 cost is covered by the ``speedup`` gate itself: its baseline numbers
 predate the telemetry subsystem, so any disabled-mode overhead would
 show up there as a speedup regression.
@@ -44,6 +45,7 @@ from repro.configs.adfll_dqn import DQNConfig
 from repro.core.erb import ERB, TaskTag, erb_add, erb_init
 from repro.rl.agent import DQNAgent
 from repro.rl.fleet import FleetEngine
+from repro.observatory import Observatory
 from repro.telemetry import Telemetry, write_trace
 
 # Sized so the per-step *overhead* the engine eliminates (host batch
@@ -133,6 +135,10 @@ def _bench_telemetry(
     engine_off = FleetEngine(CFG)  # default NULL telemetry
     engine_on = FleetEngine(CFG)
     engine_on.telemetry = tel
+    # the enabled path carries the full observatory too: the gate bounds
+    # the cost of the stats-carrying train chunk, not just the spans
+    obs = Observatory(tel)
+    engine_on.observatory = obs
     fleets = {
         "off": (
             engine_off,
@@ -143,6 +149,8 @@ def _bench_telemetry(
             [DQNAgent(i, CFG, seed=i, engine=engine_on) for i in range(n_agents)],
         ),
     }
+    for i, a in enumerate(fleets["on"][1]):
+        obs.register_slot(a.slot, i)
     erbs = [_filled_erb(rng, capacity) for _ in range(n_agents)]
 
     def fleet_round(which: str):

@@ -58,14 +58,24 @@ def _row(report):
     return out
 
 
-def run(seed=0, fast=False, json_path=None):
+def run(seed=0, fast=False, json_path=None, trace_path=None, dashboard_path=None):
+    from benchmarks.cli import per_config_path
+
     results = {}
     print(
         "config,mean_dist_err,best_agent_err,sim_makespan,"
         "erb_bytes,weight_bytes,n_mixed,n_foreign_erbs"
     )
     for name, scenario in TOPOLOGY_SCENARIOS.items():
-        r = _row(experiments.run(scenario, fast=fast, seed=seed))
+        r = _row(
+            experiments.run(
+                scenario,
+                fast=fast,
+                seed=seed,
+                trace_path=per_config_path(trace_path, name),
+                dashboard_path=per_config_path(dashboard_path, name),
+            )
+        )
         results[name] = r
         print(
             f"{name},{r['mean_dist_err']:.3f},{r['best_agent_err']:.3f},"

@@ -50,11 +50,22 @@ def summary_row(report, keys=ROW_KEYS):
     return {k: summary[k] for k in keys}
 
 
-def run(seed: int = 0, fast: bool = False, json_path=None):
+def run(seed: int = 0, fast: bool = False, json_path=None, trace_path=None,
+        dashboard_path=None):
+    from benchmarks.cli import per_config_path
+
     results = {}
     print("config,mean_dist_err,best_agent_err,sim_makespan,n_mixed,n_foreign_erbs")
     for name, scenario in PLANE_SCENARIOS.items():
-        r = summary_row(experiments.run(scenario, fast=fast, seed=seed))
+        r = summary_row(
+            experiments.run(
+                scenario,
+                fast=fast,
+                seed=seed,
+                trace_path=per_config_path(trace_path, name),
+                dashboard_path=per_config_path(dashboard_path, name),
+            )
+        )
         results[name] = r
         print(
             f"{name},{r['mean_dist_err']:.3f},{r['best_agent_err']:.3f},"

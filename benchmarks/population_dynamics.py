@@ -29,8 +29,16 @@ from repro import experiments
 SCENARIOS = ("hospital_diurnal", "flash_crowd", "long_tail_stragglers")
 
 
-def _row(name: str, seed: int, fast: bool) -> dict:
-    report = experiments.run(name, fast=fast, seed=seed)
+def _row(
+    name: str, seed: int, fast: bool, trace_path=None, dashboard_path=None
+) -> dict:
+    report = experiments.run(
+        name,
+        fast=fast,
+        seed=seed,
+        trace_path=trace_path,
+        dashboard_path=dashboard_path,
+    )
     pop = report.extra["population"]
     online_time = float(pop["online_time"])
     return {
@@ -48,11 +56,20 @@ def _row(name: str, seed: int, fast: bool) -> dict:
     }
 
 
-def run(seed: int = 0, fast: bool = False, json_path=None):
+def run(seed: int = 0, fast: bool = False, json_path=None, trace_path=None,
+        dashboard_path=None):
+    from benchmarks.cli import per_config_path
+
     results = {}
     print("config,mean_dist_err,makespan,rounds,agents,avail,aw_rounds_per_time")
     for name in SCENARIOS:
-        row = _row(name, seed, fast)
+        row = _row(
+            name,
+            seed,
+            fast,
+            trace_path=per_config_path(trace_path, name),
+            dashboard_path=per_config_path(dashboard_path, name),
+        )
         results[name] = row
         print(
             f"{name},{row['mean_dist_err']:.3f},{row['makespan']:.2f},"

@@ -95,6 +95,19 @@ def run(seed: int = 0, fast: bool = False, json_path=None, trace_path=None):
         / results["single"]["requests_per_sec"]
     )
     print(f"derived,batch_speedup={results['batched']['batch_speedup']:.2f}")
+    # telemetry+observatory overhead on the batched row: rerun it with an
+    # enabled bundle (build_session auto-attaches the observatory) and
+    # compare requests/sec.  >1.0 means the observed run was slower; the
+    # CI gate bounds the ratio (enabled observability must stay cheap).
+    row_on = _serve_row(8, seed, fast, Telemetry(enabled=True))
+    overhead = (
+        results["batched"]["requests_per_sec"] / row_on["requests_per_sec"]
+    )
+    results["telemetry"] = {
+        "requests_per_sec_observed": row_on["requests_per_sec"],
+        "telemetry_overhead": overhead,
+    }
+    print(f"derived,telemetry_overhead={overhead:.3f}")
     if trace_path:
         write_trace(telemetry, trace_path)
         print(f"wrote trace {trace_path}")
@@ -125,6 +138,9 @@ if __name__ == "__main__":
                 # generous bounds: CI machines vary widely in speed
                 Gate("requests_per_sec", higher_better=True, tol=0.60, abs_floor=5.0),
                 Gate("p99_latency_ms", tol=1.50, abs_floor=20.0),
+                # enabled telemetry+observatory must stay cheap on the
+                # serve path (ratio vs the plain batched row, baseline 1.0)
+                Gate("telemetry_overhead", tol=0.30, abs_floor=0.25),
             ),
         )
     )

@@ -43,6 +43,10 @@ class ERBMeta:
     source_agent: int
     round_idx: int
     size: int
+    #: observatory-stamped provenance: sorted (agent_id, round_idx) pairs
+    #: of the sender's peer-progress view at share time; never read by
+    #: the numeric path (default stays empty when telemetry is off).
+    version_vector: tuple = ()
 
 
 def new_erb_id(prefix: str = "ERB") -> str:

@@ -24,6 +24,7 @@ wrapped as single-agent systems in ``repro.experiments.systems``.
 from __future__ import annotations
 
 from collections.abc import Sequence
+from dataclasses import replace
 
 import jax
 import numpy as np
@@ -43,6 +44,7 @@ from repro.core.hub import Hub
 from repro.core.network import Network
 from repro.core.plane import CompressedWeightPlane, WeightPlane, staleness_alphas
 from repro.core.scheduler import Scheduler
+from repro.observatory import Observatory
 from repro.rl.agent import DQNAgent
 from repro.rl.env import LandmarkEnv
 from repro.rl.fleet import FleetEngine
@@ -151,6 +153,17 @@ class ADFLLSystem:
         )
         if self.engine is not None:
             self.engine.telemetry = self.telemetry
+        # the observatory rides the telemetry bundle: enabled telemetry
+        # means per-agent learning dynamics, propagation tracking, and
+        # health detection — all observe-only, like telemetry itself
+        self.observatory: Observatory | None = (
+            Observatory(self.telemetry) if self.telemetry.enabled else None
+        )
+        if self.observatory is not None and self.engine is not None:
+            self.engine.observatory = self.observatory
+        if self.observatory is not None and self.network.gossip is not None:
+            prop = self.observatory.propagation
+            self.network.gossip.on_deliver = prop.on_gossip_deliver
         self.use_erb = "erb" in sys_cfg.share_planes
         self.use_weights = "weights" in sys_cfg.share_planes
         if self.use_weights:
@@ -222,6 +235,10 @@ class ADFLLSystem:
             engine=self.engine,
         )
         self.agents[aid] = agent
+        if self.observatory is not None:
+            if self.engine is not None:
+                self.observatory.register_slot(agent.slot, aid)
+            self.observatory.propagation.note_round(aid, 0)
         self.network.attach_agent(aid, hub_id)
         t = self.sched.now if at is None else at
         if self.population is not None:
@@ -416,6 +433,10 @@ class ADFLLSystem:
             pulled = self.network.agent_pull(agent_id, agent.seen_erb_ids)
             incoming = list(pulled.records)
             comm += pulled.comm_time
+            if self.observatory is not None and incoming:
+                self.observatory.propagation.note_erb_consumed(
+                    agent_id, incoming, self.sched.now
+                )
         else:
             incoming = []
         if self.use_weights:
@@ -487,8 +508,16 @@ class ADFLLSystem:
             a = self.agents.get(aid)
             if a is None or getattr(a, "active", True) is False:
                 return
+            obs = self.observatory
             comm_out = 0.0
             if self.use_erb:
+                if obs is not None:
+                    # stamp BrainTorrent-style provenance (observe-only:
+                    # the default empty vector is never read numerically)
+                    erb.meta = replace(
+                        erb.meta, version_vector=obs.propagation.version_vector()
+                    )
+                    obs.propagation.note_erb_push(aid, erb, t)
                 res = self.network.agent_push(aid, erb)
                 comm_out += res.comm_time
                 if self.telemetry.enabled and res.comm_time > 0.0:
@@ -497,9 +526,13 @@ class ADFLLSystem:
                     )
                 self._emit("on_push", aid, "erb", res, t)
             if self.use_weights:
-                res = self.network.agent_push(
-                    aid, a.snapshot_params(t), plane="weights"
-                )
+                snap = a.snapshot_params(t)
+                if obs is not None:
+                    snap = replace(
+                        snap, version_vector=obs.propagation.version_vector()
+                    )
+                    obs.propagation.note_snapshot_push(aid, snap, t)
+                res = self.network.agent_push(aid, snap, plane="weights")
                 comm_out += res.comm_time
                 if self.telemetry.enabled and res.comm_time > 0.0:
                     self.telemetry.span(
@@ -541,6 +574,10 @@ class ADFLLSystem:
             poly_a=cfg.staleness_poly_a,
             clock=cfg.staleness_clock,
         )
+        if self.observatory is not None:
+            self.observatory.propagation.note_mix(
+                agent_id, snaps, alphas, now, cfg.staleness_clock
+            )
         return agent.mix_params(snaps, alphas), res.comm_time
 
     def _maybe_continue(self, agent_id: int):
@@ -592,6 +629,8 @@ class ADFLLSystem:
             extra["population"] = self.population.summary(float(makespan))
         if self.telemetry.enabled:
             extra["telemetry"] = self.telemetry.summary()
+        if self.observatory is not None:
+            extra.update(self.observatory.report_extra(makespan=float(makespan)))
         return Report(
             system="adfll",
             seed=self.seed,

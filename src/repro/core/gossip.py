@@ -301,6 +301,10 @@ class GossipTopology:
         # sampled nor initiates an exchange.  Its local store stays put (a
         # mailbox for in-flight deliveries); None = everyone reachable.
         self.online = online
+        # observe-only delivery hook (the observatory's coverage curves):
+        # called as on_deliver(dst, rec, plane_name, arrival_time) after
+        # every *admitted* delivery.  None costs one attribute check.
+        self.on_deliver: Callable[[int, Any, str, float], None] | None = None
 
     # -- membership ---------------------------------------------------------
     def add_agent(self, agent_id: int) -> None:
@@ -393,14 +397,14 @@ class GossipTopology:
                     pair_bytes += nbytes
                     self.meter.account(name, nbytes)
                     if sched is None:
-                        self._deliver(dst, rec, name)
+                        self._deliver(dst, rec, name, t)
                     else:
                         arrival = t + link.transfer_time(nbytes)
                         t_last = max(t_last, arrival)
                         sched.at(
                             arrival,
                             lambda s, tt, d=dst, r=rec, p=name: self._deliver(
-                                d, r, p
+                                d, r, p, tt
                             ),
                             tag=f"gossip_deliver_{name}",
                         )
@@ -420,12 +424,14 @@ class GossipTopology:
             self.telemetry.observe("gossip.exchange.records", sent)
         return sent
 
-    def _deliver(self, dst: int, rec: Any, plane_name: str) -> bool:
+    def _deliver(self, dst: int, rec: Any, plane_name: str, t: float = 0.0) -> bool:
         if dst not in self.stores:  # agent left while the record was in flight
             return False
         plane = self.planes[plane_name]
         if plane.admit(self.local_store(dst, plane_name), rec):
             self.stats.n_delivered += 1
+            if self.on_deliver is not None:
+                self.on_deliver(dst, rec, plane_name, t)
             return True
         return False
 

@@ -62,6 +62,12 @@ class WeightSnapshot:
     was taken (the FedAsync ``tau``); ``sim_time`` is scheduler time at
     the push, kept for analysis/debugging.  ``params`` is a JAX pytree
     (immutable arrays — safe to share by reference).
+
+    ``version_vector`` is BrainTorrent-style provenance the observatory
+    stamps when enabled: a sorted tuple of ``(agent_id, round_idx)``
+    pairs recording the sender's view of every peer's progress at push
+    time.  Purely observational — the default empty tuple is never read
+    by the numeric mixing path.
     """
 
     snap_id: str
@@ -69,6 +75,7 @@ class WeightSnapshot:
     round_idx: int
     sim_time: float
     params: Any
+    version_vector: tuple = ()
 
     @property
     def record_id(self) -> str:
@@ -141,6 +148,7 @@ class CompressedWeightSnapshot:
     treedef: Any
     payload_nbytes: int
     dense_params: Any = None  # delta mode: sender-side reconstruction
+    version_vector: tuple = ()  # observational provenance, carried verbatim
 
     @property
     def record_id(self) -> str:
@@ -335,6 +343,7 @@ class CompressedWeightPlane(WeightPlane):
             treedef,
             payload,
             dense_params=recon_tree if mode == "delta" else None,
+            version_vector=item.version_vector,
         )
 
 

@@ -22,6 +22,14 @@ from repro.experiments.runner import resolve, run, write_json
 from repro.experiments.suggest import unknown_name_message
 
 
+def _per_scenario(path: str | None, name: str, n_scenarios: int) -> str | None:
+    """Insert the scenario name before the extension for multi-scenario runs."""
+    if path is None or n_scenarios <= 1:
+        return path
+    stem, dot, ext = path.rpartition(".")
+    return f"{stem}.{name}.{ext}" if dot else f"{path}.{name}"
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.experiments")
     ap.add_argument(
@@ -64,6 +72,16 @@ def main(argv=None) -> int:
             "scenario name is inserted before the extension."
         ),
     )
+    ap.add_argument(
+        "--dashboard",
+        type=str,
+        default=None,
+        metavar="PATH",
+        help=(
+            "render the run's observatory dashboard (self-contained HTML) "
+            "per scenario; multi-scenario name insertion as for --trace"
+        ),
+    )
     args = ap.parse_args(argv)
 
     if args.list or not args.scenario:
@@ -85,14 +103,14 @@ def main(argv=None) -> int:
         spec = resolve(name, fast=args.fast, seed=args.seed)
         if args.engine is not None:
             spec = replace(spec, sys=replace(spec.sys, engine=args.engine))
-        trace_path = args.trace
-        if trace_path is not None and len(args.scenario) > 1:
-            stem, dot, ext = trace_path.rpartition(".")
-            trace_path = f"{stem}.{name}.{ext}" if dot else f"{trace_path}.{name}"
-        report = run(spec, trace_path=trace_path)
+        trace_path = _per_scenario(args.trace, name, len(args.scenario))
+        dashboard_path = _per_scenario(args.dashboard, name, len(args.scenario))
+        report = run(spec, trace_path=trace_path, dashboard_path=dashboard_path)
         reports.append(report)
         if trace_path is not None:
             print(f"wrote trace {trace_path}")
+        if dashboard_path is not None:
+            print(f"wrote dashboard {dashboard_path}")
         curve = " -> ".join(
             f"{p.mean_err:.2f}@{p.t:.1f}(n={p.n_agents})" for p in report.eval_curve
         )

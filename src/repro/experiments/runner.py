@@ -23,7 +23,7 @@ from repro.experiments.registry import get_scenario
 from repro.experiments.spec import ScenarioSpec
 from repro.experiments.systems import BaselineSystem, ServeSystem
 from repro.rl.synth import all_tasks, paper_eight_tasks, patient_split
-from repro.telemetry import Telemetry, write_trace
+from repro.telemetry import Telemetry, write_dashboard, write_trace
 
 SpecLike = str | ScenarioSpec
 
@@ -209,17 +209,20 @@ def run(
     hooks: Sequence[ExperimentHooks] = (),
     json_path: str | None = None,
     trace_path: str | None = None,
+    dashboard_path: str | None = None,
     telemetry: Telemetry | None = None,
 ) -> Report:
     """Execute one scenario end to end and return its :class:`Report`.
 
     ``trace_path`` captures the run's telemetry (Perfetto JSON, or JSONL
     when the suffix is ``.jsonl``) — any scenario becomes traceable
-    without code changes.  Telemetry is observe-only: with or without it
-    the run's numbers are bit-identical.
+    without code changes.  ``dashboard_path`` renders the same telemetry
+    (plus the observatory's learning / propagation / health series) into
+    a self-contained HTML page.  Telemetry is observe-only: with or
+    without it the run's numbers are bit-identical.
     """
     rspec = resolve(spec, fast=fast, seed=seed)
-    if telemetry is None and trace_path is not None:
+    if telemetry is None and (trace_path is not None or dashboard_path is not None):
         telemetry = Telemetry(enabled=True)
     b = _build(rspec, hooks, telemetry)
     report = b.system.run()
@@ -247,6 +250,14 @@ def run(
     if trace_path is not None and telemetry is not None:
         # after evaluate(): serve scenarios keep emitting through it
         write_trace(telemetry, trace_path)
+    if dashboard_path is not None and telemetry is not None:
+        trace = {
+            "events": list(telemetry.tracer.events),
+            "metrics": telemetry.registry.summary(),
+        }
+        write_dashboard(
+            dashboard_path, trace, title=f"Fleet observatory — {rspec.name}"
+        )
     if json_path:
         write_json(json_path, [report], fast=fast)
     return report

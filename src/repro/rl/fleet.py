@@ -119,6 +119,14 @@ class FleetSteps:
     (the one host->device transfer of a flush). ``n_traces`` counts
     retraces — the no-recompilation tests assert it stays at 1 across
     same-config agents.
+
+    ``train_chunk_stats`` is the observatory variant: the same scan with
+    the same update math, additionally carrying a small stacked stats
+    pytree (per-step per-slot loss / mean |TD error| / max |Q| / grad
+    global-norm, plus a per-slot params-finite flag) through the scan —
+    accumulated device-side and drained only at the flush boundary, so
+    enabling the observatory adds no extra host syncs.  It is compiled
+    lazily on first use: engines without an observatory never trace it.
     """
 
     def __init__(self, cfg: DQNConfig, use_pallas: bool):
@@ -167,6 +175,44 @@ class FleetSteps:
             )
             return params, target, opt, count, loss
 
+        def loss_fn_stats(params, target_params, batch):
+            # the same primal graph as loss_fn, with observational
+            # scalars as a non-differentiated aux output
+            q = dqn_apply(cfg, params, batch["obs"], batch["loc"])
+            q_sel = jnp.take_along_axis(q, batch["action"][:, None], 1)
+            q_next = dqn_apply(cfg, target_params, batch["next_obs"], batch["next_loc"])
+            q_next = jax.lax.stop_gradient(q_next)
+            loss = td_loss(
+                q_sel,
+                q_next,
+                batch["reward"][:, None],
+                batch["done"][:, None],
+                cfg.gamma,
+                use_pallas,
+            )
+            td_target = batch["reward"][:, None] + cfg.gamma * (
+                1.0 - batch["done"][:, None]
+            ) * jnp.max(q_next, axis=-1, keepdims=True)
+            td_abs = jnp.mean(jnp.abs(jax.lax.stop_gradient(q_sel) - td_target))
+            q_max = jnp.max(jnp.abs(jax.lax.stop_gradient(q)))
+            return loss, (td_abs, q_max)
+
+        def slot_step_stats(params, target, opt, count, batch):
+            (loss, aux), grads = jax.value_and_grad(loss_fn_stats, has_aux=True)(
+                params, target, batch
+            )
+            params, opt, _ = adamw_update(self.opt_cfg, params, grads, opt)
+            count = count + 1
+            sync = (count % cfg.target_update) == 0
+            target = jax.tree_util.tree_map(
+                lambda t, p: jnp.where(sync, p, t), target, params
+            )
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(g * g) for g in jax.tree_util.tree_leaves(grads))
+            )
+            td_abs, q_max = aux
+            return params, target, opt, count, loss, td_abs, q_max, gnorm
+
         def chunk(state: FleetState, pool, idx):
             self.n_traces += 1  # trace-time side effect: counts retraces
 
@@ -188,10 +234,58 @@ class FleetSteps:
             rng = jax.vmap(jax.random.fold_in)(state.rng, c)
             return FleetState(p, t, o, rng, c), losses
 
+        def chunk_stats(state: FleetState, pool, idx):
+            self.n_traces += 1  # trace-time side effect: counts retraces
+
+            def body(carry, idx_k):
+                p, t, o, c = carry
+                n, b = idx_k.shape
+                rows = replay_gather(
+                    pool,
+                    idx_k.reshape(-1),
+                    jnp.ones((n * b,), jnp.float32),
+                    mode="auto",
+                )
+                batch = jax.vmap(split_rows)(rows.reshape(n, b, feat))
+                p, t, o, c, loss, td, qm, gn = jax.vmap(slot_step_stats)(
+                    p, t, o, c, batch
+                )
+                return (p, t, o, c), (loss, td, qm, gn)
+
+            carry = (state.params, state.target, state.opt, state.count)
+            (p, t, o, c), (losses, td, qm, gn) = jax.lax.scan(body, carry, idx)
+            rng = jax.vmap(jax.random.fold_in)(state.rng, c)
+            finite = jnp.ones((c.shape[0],), bool)
+            for leaf in jax.tree_util.tree_leaves(p):
+                finite = finite & jnp.all(
+                    jnp.isfinite(leaf.reshape(leaf.shape[0], -1)), axis=1
+                )
+            stats = {
+                "loss": losses,  # [K, N]
+                "td_abs": td,  # [K, N]
+                "q_max": qm,  # [K, N]
+                "grad_norm": gn,  # [K, N]
+                "params_finite": finite,  # [N]
+            }
+            return FleetState(p, t, o, rng, c), stats
+
         # donated stacked buffers: in-place update on accelerators
         # (donation is unimplemented on CPU; avoid the warning spam there)
         donate = () if jax.default_backend() == "cpu" else (0,)
         self.train_chunk: Callable = jax.jit(chunk, donate_argnums=donate)
+        self._chunk_stats_fn = chunk_stats
+        self._donate = donate
+        self._train_chunk_stats: Callable | None = None
+
+    @property
+    def train_chunk_stats(self) -> Callable:
+        """The stats-carrying chunk, jitted on first use (engines without
+        an observatory never pay its trace/compile)."""
+        if self._train_chunk_stats is None:
+            self._train_chunk_stats = jax.jit(
+                self._chunk_stats_fn, donate_argnums=self._donate
+            )
+        return self._train_chunk_stats
 
     def init_slot(self, seed: int) -> FleetState:
         """A 1-slot :class:`FleetState` seeded exactly like the legacy
@@ -368,9 +462,13 @@ class FleetEngine:
         self.n_steps_trained = 0
         self.flush_sizes: list[int] = []
         # observability: the owning system replaces these after
-        # construction (ADFLLSystem / ServeSession) — NULL costs nothing
+        # construction (ADFLLSystem / ServeSession) — NULL costs nothing.
+        # With an observatory attached, flushes run the stats-carrying
+        # chunk and drain per-agent learning dynamics at the same
+        # boundary as the loss sync.
         self.telemetry = NULL
         self.sim_clock: Callable[[], float] | None = None
+        self.observatory = None
 
     # -- slots ---------------------------------------------------------------
     def add_slot(self, seed: int) -> int:
@@ -551,13 +649,25 @@ class FleetEngine:
         padded = slots + [slots[0]] * (n_pad - n_real)  # inert duplicates
         gather = jnp.asarray(padded)
         sub = jax.tree_util.tree_map(lambda x: jnp.take(x, gather, axis=0), self.state)
-        new, losses = self.steps.train_chunk(sub, pool, jnp.asarray(idx))
+        obs = self.observatory
+        stats = None
+        if obs is None:
+            new, losses = self.steps.train_chunk(sub, pool, jnp.asarray(idx))
+        else:
+            new, stats = self.steps.train_chunk_stats(sub, pool, jnp.asarray(idx))
+            losses = stats["loss"]
         real = jnp.asarray(slots)
         self.state = jax.tree_util.tree_map(
             lambda s, ns: s.at[real].set(ns[:n_real]), self.state, new
         )
         self._views.clear()
         losses_np = np.asarray(losses)  # the flush's one host sync
+        if obs is not None and stats is not None:
+            # drained at the same boundary — no extra mid-scan syncs,
+            # just more values riding the flush's host transfer
+            stats_np = {k: np.asarray(v) for k, v in stats.items()}
+            sim_t = self.sim_clock() if self.sim_clock is not None else 0.0
+            obs.on_flush(slots, stats_np, n_real, sim_t)
         self.n_flushes += 1
         self.n_steps_trained += n_real * k_steps
         self.flush_sizes.append(n_real)

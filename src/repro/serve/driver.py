@@ -78,6 +78,15 @@ def build_session(
     agents = [
         DQNAgent(i, cfg, seed=seed + i, engine=engine) for i in range(n_agents)
     ]
+    if telemetry is not None and telemetry.enabled:
+        # same contract as ADFLLSystem: enabled telemetry brings the
+        # observatory (observe-only; bit-identical serve results)
+        from repro.observatory import Observatory
+
+        obs = Observatory(telemetry)
+        engine.observatory = obs
+        for i, a in enumerate(agents):
+            obs.register_slot(a.slot, i)
     task_list = list(tasks if tasks is not None else paper_eight_tasks())
     if patients is None:
         patients, _ = patient_split(16)

@@ -68,14 +68,15 @@ def _print_summary(summary: dict) -> None:
         print(f"\npaired vs {summary['baseline']!r}:")
         print(
             f"{'variant':<22} {'metric':<14} {'delta':>10} {'d95%':>21} "
-            f"{'d':>7} {'t':>8} {'p(t)':>8} {'p(perm)':>8}"
+            f"{'d':>7} {'t':>8} {'p(t)':>8} {'p(adj)':>8} {'p(perm)':>8}"
         )
         for c in summary["comparisons"]:
             print(
                 f"{c['variant']:<22} {c['metric']:<14} {_fmt(c['delta'])} "
                 f"{_fmt_ci(c.get('delta_ci95')):>21} "
                 f"{_fmt(c.get('cohens_d'), 7, 2)} {_fmt(c['t'], 8)} "
-                f"{_fmt(c['p_ttest'], 8, 4)} {_fmt(c['p_permutation'], 8, 4)}"
+                f"{_fmt(c['p_ttest'], 8, 4)} {_fmt(c.get('p_ttest_adj'), 8, 4)} "
+                f"{_fmt(c['p_permutation'], 8, 4)}"
             )
 
 
@@ -92,7 +93,7 @@ def _cmd_compare(args) -> int:
         return 2
     print(
         f"{'variant':<22} {'metric':<14} {'A':>10} {'B':>10} {'delta':>10} "
-        f"{'d95%':>21} {'d':>7} {'p(t)':>8} {'p(perm)':>8}  flag"
+        f"{'d95%':>21} {'d':>7} {'p(t)':>8} {'p(adj)':>8} {'p(perm)':>8}  flag"
     )
     for r in rows:
         flag = "REGRESSION" if r["regression"] else ("*" if r["significant"] else "")
@@ -101,12 +102,14 @@ def _cmd_compare(args) -> int:
             f"{_fmt(r['mean_b'])} {_fmt(r['delta'])} "
             f"{_fmt_ci(r.get('delta_ci95')):>21} "
             f"{_fmt(r.get('cohens_d'), 7, 2)} {_fmt(r['p_ttest'], 8, 4)} "
+            f"{_fmt(r.get('p_ttest_adj'), 8, 4)} "
             f"{_fmt(r['p_permutation'], 8, 4)}  {flag}"
         )
     for r in regressions:
         print(
             f"REGRESSION {r['variant']}.{r['metric']}: "
-            f"{r['mean_a']:.3f} -> {r['mean_b']:.3f} (p={r['p_ttest']:.4f})",
+            f"{r['mean_a']:.3f} -> {r['mean_b']:.3f} "
+            f"(Holm-adjusted p={r['p_ttest_adj']:.4f})",
             file=sys.stderr,
         )
     return 1 if regressions else 0

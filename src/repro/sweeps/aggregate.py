@@ -26,6 +26,7 @@ from repro.sweeps.spec import SweepSpec
 from repro.sweeps.stats import (
     bootstrap_ci,
     cohens_d,
+    holm_bonferroni,
     mean_ci,
     paired_permutation_test,
     paired_ttest,
@@ -150,6 +151,13 @@ def summarize(
                         "p_permutation": _finite(paired_permutation_test(b, a)),
                     }
                 )
+        # Holm–Bonferroni across the whole comparison family: every
+        # (variant, metric) pair tested against the baseline is one
+        # hypothesis, so gate-worthy significance must survive the
+        # step-down adjustment, not just the raw paired t.
+        adj = holm_bonferroni([c["p_ttest"] for c in comparisons])
+        for c, p_adj in zip(comparisons, adj, strict=True):
+            c["p_ttest_adj"] = _finite(p_adj)
 
     cells = [
         {
@@ -188,8 +196,9 @@ def compare(
 
     Rows pair per-seed values variant-by-variant and metric-by-metric.
     A *regression* is a gated metric that got significantly worse
-    (higher mean, paired-t p < alpha); callers exit nonzero when the
-    regression list is non-empty."""
+    (higher mean, Holm-adjusted paired-t p < alpha across the whole
+    comparison family); callers exit nonzero when the regression list
+    is non-empty."""
     rows: list[dict[str, Any]] = []
     va, vb = a.get("variants", {}), b.get("variants", {})
     for label in sorted(set(va) & set(vb)):
@@ -205,8 +214,6 @@ def compare(
             p_perm = paired_permutation_test(ys, xs)
             deltas = [y - x for x, y in zip(xs, ys, strict=True)]
             ci_lo, ci_hi = bootstrap_ci(deltas)
-            p = p_t if p_t == p_t else None  # nan -> None (n < 2)
-            significant = p is not None and p < alpha
             rows.append(
                 {
                     "variant": label,
@@ -223,12 +230,23 @@ def compare(
                     "t": _finite(t),
                     "p_ttest": _finite(p_t),
                     "p_permutation": _finite(p_perm),
-                    "significant": significant,
-                    "regression": bool(
-                        significant and metric in gate_metrics and mean_b > mean_a
-                    ),
                 }
             )
+    # Significance is decided on the Holm-adjusted p across the whole
+    # table — a 20-row diff should not flag a regression because one
+    # raw p dipped below alpha by multiplicity alone.
+    adj = holm_bonferroni([r["p_ttest"] for r in rows])
+    for r, p_adj in zip(rows, adj, strict=True):
+        r["p_ttest_adj"] = _finite(p_adj)
+        significant = r["p_ttest_adj"] is not None and r["p_ttest_adj"] < alpha
+        r["significant"] = significant
+        r["regression"] = bool(
+            significant
+            and r["metric"] in gate_metrics
+            and r["mean_b"] is not None
+            and r["mean_a"] is not None
+            and r["mean_b"] > r["mean_a"]
+        )
     return rows, [r for r in rows if r["regression"]]
 
 

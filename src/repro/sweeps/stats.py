@@ -198,6 +198,39 @@ def bootstrap_ci(
     return float(lo), float(hi)
 
 
+def holm_bonferroni(pvalues: Sequence[float | None]) -> list[float | None]:
+    """Holm's step-down adjusted p-values for a family of comparisons.
+
+    The sweep summary tests every (variant, metric) pair against the
+    baseline — m hypotheses, so the chance of at least one spurious
+    p < alpha grows with m.  Holm's procedure controls the family-wise
+    error rate uniformly better than plain Bonferroni: sort the valid
+    p-values ascending, multiply the k-th smallest by ``m - k`` (1-based:
+    ``m, m-1, ...``), enforce monotonicity with a running max, and clip
+    to 1.  Gating on the adjusted p keeps a 20-comparison table from
+    flagging one of them at raw p = 0.03 by luck alone.
+
+    ``None`` and NaN entries (n < 2 pairs) are passed through unchanged
+    in their original positions and do not count toward the family size
+    m."""
+    valid: dict[int, float] = {}
+    for i, p in enumerate(pvalues):
+        if p is None:
+            continue
+        v = float(p)
+        if v == v:  # drop NaN
+            valid[i] = v
+    m = len(valid)
+    out: list[float | None] = list(pvalues)
+    if m == 0:
+        return out
+    running = 0.0
+    for k, i in enumerate(sorted(valid, key=valid.__getitem__)):
+        running = max(running, (m - k) * valid[i])
+        out[i] = min(1.0, running)
+    return out
+
+
 def mean_ci(
     values: Sequence[float], *, confidence: float = 0.95
 ) -> tuple[float, float]:
@@ -222,6 +255,7 @@ def mean_ci(
 __all__ = [
     "bootstrap_ci",
     "cohens_d",
+    "holm_bonferroni",
     "mean_ci",
     "paired_permutation_test",
     "paired_ttest",

@@ -15,19 +15,24 @@ https://ui.perfetto.dev.
 
 from __future__ import annotations
 
+from .dashboard import dashboard_from_telemetry, render_dashboard, write_dashboard
 from .export import load_trace, to_perfetto, write_jsonl, write_perfetto, write_trace
 from .registry import MetricsRegistry, NullRegistry
-from .trace import NULL, NullTracer, Telemetry, Tracer
+from .trace import NULL, JsonlTraceSink, NullTracer, Telemetry, Tracer
 
 __all__ = [
     "NULL",
+    "JsonlTraceSink",
     "MetricsRegistry",
     "NullRegistry",
     "NullTracer",
     "Telemetry",
     "Tracer",
+    "dashboard_from_telemetry",
     "load_trace",
+    "render_dashboard",
     "to_perfetto",
+    "write_dashboard",
     "write_jsonl",
     "write_perfetto",
     "write_trace",

@@ -5,6 +5,14 @@ Usage::
     python -m repro.telemetry summarize out.json
     python -m repro.telemetry export run.jsonl run.perfetto.json
     python -m repro.telemetry diff before.json after.json
+    python -m repro.telemetry dashboard run.jsonl -o dashboard.html
+
+Long runs can capture traces with a bounded streaming writer
+(``Telemetry(stream_path=...)``): events go straight to a size-capped
+JSONL file (64 MiB by default) instead of accumulating in memory;
+events past the cap are dropped and tallied in the ``trace.dropped``
+counter, which every subcommand here reads back like any other
+counter row.
 """
 
 from __future__ import annotations
@@ -102,6 +110,20 @@ def _cmd_export(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_dashboard(args: argparse.Namespace) -> int:
+    from .dashboard import write_dashboard
+
+    trace = load_trace(args.trace)
+    sweep = None
+    if args.sweep is not None:
+        sweep = json.loads(Path(args.sweep).read_text())
+    out = write_dashboard(
+        args.out, trace, sweep_summary=sweep, title=args.title
+    )
+    print(f"wrote {out}")
+    return 0
+
+
 def _cmd_diff(args: argparse.Namespace) -> int:
     a = _span_stats(load_trace(args.a)["events"])
     b = _span_stats(load_trace(args.b)["events"])
@@ -141,6 +163,17 @@ def build_parser() -> argparse.ArgumentParser:
     e.add_argument("trace", type=Path)
     e.add_argument("out", type=Path)
     e.set_defaults(fn=_cmd_export)
+
+    h = sub.add_parser(
+        "dashboard", help="render a saved trace into a self-contained HTML page"
+    )
+    h.add_argument("trace", type=Path)
+    h.add_argument("-o", "--out", type=Path, default=Path("dashboard.html"))
+    h.add_argument(
+        "--sweep", type=Path, default=None, help="sweep summary JSON to embed"
+    )
+    h.add_argument("--title", default="Fleet observatory")
+    h.set_defaults(fn=_cmd_dashboard)
 
     d = sub.add_parser("diff", help="compare span aggregates of two traces")
     d.add_argument("a", type=Path)

@@ -30,12 +30,72 @@ attribute check and pay nothing when telemetry is off.
 
 from __future__ import annotations
 
+import json
 import time
 from collections.abc import Iterator
 from contextlib import contextmanager
+from pathlib import Path
 from typing import Any
 
 from .registry import MetricsRegistry, NullRegistry
+
+#: default byte cap for streaming JSONL sinks (64 MiB)
+DEFAULT_STREAM_MAX_BYTES = 64 * 1024 * 1024
+
+
+class JsonlTraceSink:
+    """Size-capped streaming JSONL writer for long soaks.
+
+    Events are written through to disk as they are emitted instead of
+    accumulating in the tracer's in-memory list, so a multi-hour soak
+    has O(1) memory for tracing.  The file is the same
+    ``repro.telemetry/v1`` JSONL layout ``load_trace`` reads back:
+    header row first, one event per line, metric rows appended at
+    :meth:`close`.
+
+    ``max_bytes`` caps the event portion of the file; past the cap,
+    events are dropped and tallied (``n_dropped``) — the registry rows
+    at close are small (bounded series cardinality) and always written,
+    so the capped file still carries the final ``trace.dropped``
+    counter.
+    """
+
+    def __init__(
+        self, path: str | Path, *, max_bytes: int = DEFAULT_STREAM_MAX_BYTES
+    ):
+        self.path = Path(path)
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        self.max_bytes = int(max_bytes)
+        self.n_written = 0
+        self.n_dropped = 0
+        self._f = self.path.open("w")
+        header = {"kind": "header", "format": "repro.telemetry/v1", "streaming": True}
+        line = json.dumps(header) + "\n"
+        self._f.write(line)
+        self._nbytes = len(line)
+
+    def write(self, ev: dict[str, Any]) -> bool:
+        """Stream one event row; False once closed or past the byte cap."""
+        if self._f.closed:
+            return False
+        line = json.dumps(ev) + "\n"
+        if self._nbytes + len(line) > self.max_bytes:
+            self.n_dropped += 1
+            return False
+        self._f.write(line)
+        self._nbytes += len(line)
+        self.n_written += 1
+        return True
+
+    def write_metric_row(self, row: dict[str, Any]) -> None:
+        """Append a registry row (exempt from the event byte cap)."""
+        if self._f.closed:
+            return
+        self._f.write(json.dumps({**row, "kind": f"metric.{row['kind']}"}) + "\n")
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
 
 
 class Tracer:
@@ -43,14 +103,22 @@ class Tracer:
 
     ``max_events`` bounds memory: once full, new events are dropped and
     tallied in ``n_dropped`` (telemetry never takes down a run).
+
+    With a ``sink`` (see :class:`JsonlTraceSink`), events stream to disk
+    instead of accumulating in ``events`` — memory stays O(1) and the
+    sink's byte cap replaces ``max_events`` as the bound; sink-refused
+    events are tallied in the same ``n_dropped``.
     """
 
     enabled = True
 
-    def __init__(self, *, max_events: int = 200_000):
+    def __init__(
+        self, *, max_events: int = 200_000, sink: JsonlTraceSink | None = None
+    ):
         self.max_events = int(max_events)
         self.events: list[dict[str, Any]] = []
         self.n_dropped = 0
+        self.sink = sink
         self._wall0 = time.perf_counter()
 
     # -- clocks --------------------------------------------------------------
@@ -66,6 +134,10 @@ class Tracer:
 
     # -- record --------------------------------------------------------------
     def _emit(self, ev: dict[str, Any]) -> None:
+        if self.sink is not None:
+            if not self.sink.write(ev):
+                self.n_dropped += 1
+            return
         if len(self.events) >= self.max_events:
             self.n_dropped += 1
             return
@@ -186,10 +258,15 @@ class Telemetry:
         enabled: bool = True,
         max_events: int = 200_000,
         max_series: int = 1024,
+        stream_path: str | Path | None = None,
+        stream_max_bytes: int = DEFAULT_STREAM_MAX_BYTES,
     ):
         self.enabled = bool(enabled)
+        self.sink: JsonlTraceSink | None = None
         if self.enabled:
-            self.tracer: Tracer = Tracer(max_events=max_events)
+            if stream_path is not None:
+                self.sink = JsonlTraceSink(stream_path, max_bytes=stream_max_bytes)
+            self.tracer: Tracer = Tracer(max_events=max_events, sink=self.sink)
             self.registry: MetricsRegistry = MetricsRegistry(max_series=max_series)
         else:
             self.tracer = NullTracer()
@@ -229,16 +306,42 @@ class Telemetry:
         for e in self.tracer.events:
             key = f"{e['kind']}:{e['name']}"
             by_name[key] = by_name.get(key, 0) + 1
-        return {
+        out = {
             "n_events": len(self.tracer.events),
             "n_dropped_events": self.tracer.n_dropped,
             "events_by_name": dict(sorted(by_name.items())),
             "metrics": self.registry.summary(),
         }
+        if self.sink is not None:
+            out["n_streamed_events"] = self.sink.n_written
+            out["stream_path"] = str(self.sink.path)
+        return out
+
+    def close(self) -> None:
+        """Finalize the streaming sink (no-op without one).
+
+        Records the final ``trace.dropped`` counter, appends every
+        registry row to the JSONL file (so the on-disk trace is a
+        complete ``load_trace``-compatible document), and closes the
+        file.  Safe to call more than once.
+        """
+        if self.sink is None or self.sink._f.closed:
+            return
+        self.registry.count("trace.dropped", float(self.tracer.n_dropped))
+        for row in self.registry.rows():
+            self.sink.write_metric_row(row)
+        self.sink.close()
 
 
 #: shared disabled bundle — the default at every instrumented call site
 NULL = Telemetry(enabled=False)
 
 
-__all__ = ["NULL", "NullTracer", "Telemetry", "Tracer"]
+__all__ = [
+    "DEFAULT_STREAM_MAX_BYTES",
+    "NULL",
+    "JsonlTraceSink",
+    "NullTracer",
+    "Telemetry",
+    "Tracer",
+]

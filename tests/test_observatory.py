@@ -1,0 +1,380 @@
+"""Fleet observatory: the observe-only contract (bit-identity with the
+observatory disabled AND enabled), per-agent learning-dynamics series,
+knowledge-propagation / health report documents, Holm–Bonferroni
+adjustment, the bounded streaming trace writer, and the rendered
+dashboard (live run and saved trace)."""
+
+import json
+import math
+
+import pytest
+
+from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
+from repro.experiments import ScenarioSpec
+from repro.experiments.runner import run
+from repro.sweeps.stats import holm_bonferroni
+from repro.telemetry import (
+    JsonlTraceSink,
+    Telemetry,
+    load_trace,
+    render_dashboard,
+    write_dashboard,
+)
+from repro.telemetry.__main__ import main as tel_main
+
+TINY_DQN = DQNConfig(
+    volume_shape=(12, 12, 12),
+    box_size=(4, 4, 4),
+    conv_features=(2,),
+    hidden=(8,),
+    batch_size=4,
+    max_episode_steps=4,
+    eps_decay_steps=20,
+)
+TINY_SYS = ADFLLConfig(
+    n_agents=2,
+    n_hubs=1,
+    agent_hub=(0, 0),
+    agent_speed=(1.0, 2.0),
+    rounds=2,
+    erb_capacity=128,
+    erb_share_size=16,
+    train_steps_per_round=2,
+    hub_sync_period=0.5,
+    share_planes=("erb", "weights"),  # exercise mixes + snapshot stamping
+)
+
+
+def _tiny_spec(**kw):
+    base = dict(
+        name="tiny",
+        system="adfll",
+        task_set="paper8",
+        n_tasks=2,
+        n_patients=8,
+        dqn=TINY_DQN,
+        sys=TINY_SYS,
+        eval_patients=2,
+        eval_episodes=2,
+    )
+    base.update(kw)
+    return ScenarioSpec(**base)
+
+
+def _fingerprint(report):
+    s = dict(report.summary())
+    s.pop("extra", None)
+    curve = [
+        (p.t, p.mean_err, tuple(sorted(p.per_agent.items())))
+        for p in report.eval_curve
+    ]
+    hist = [
+        (r.agent_id, r.task, r.start, r.end, r.n_incoming, r.loss)
+        for r in report.history
+    ]
+    return json.dumps(s, sort_keys=True, default=str), curve, hist
+
+
+@pytest.fixture(scope="module")
+def observed():
+    """One observed tiny run shared by the read-only assertions."""
+    tel = Telemetry(enabled=True)
+    report = run(_tiny_spec(), telemetry=tel)
+    return tel, report
+
+
+# ---------------------------------------------------------------------------
+# observe-only contract: enabled observatory changes nothing
+# ---------------------------------------------------------------------------
+def test_enabled_observatory_is_bit_identical(observed):
+    _, traced = observed
+    base = run(_tiny_spec())
+    assert _fingerprint(base) == _fingerprint(traced)
+
+
+# ---------------------------------------------------------------------------
+# learning dynamics
+# ---------------------------------------------------------------------------
+def test_per_agent_learning_series_and_summary(observed):
+    tel, report = observed
+    learning = report.extra["learning"]
+    assert sorted(learning) == ["0", "1"]
+    for label, doc in learning.items():
+        assert doc["n_chunks"] >= 1
+        assert doc["n_steps"] == doc["n_chunks"] * TINY_SYS.train_steps_per_round
+        assert doc["last_loss"] is not None and math.isfinite(doc["last_loss"])
+        assert doc["min_loss"] is not None and math.isfinite(doc["min_loss"])
+        assert len(doc["loss_curve"]) == doc["n_chunks"]
+        # the registry carries the same series, labeled by agent
+        h = tel.registry.histogram("agent.loss", agent=label)
+        assert h is not None and h["count"] == doc["n_chunks"]
+        steps = tel.registry.counter_value("agent.steps_trained", agent=label)
+        assert steps == doc["n_steps"]
+    # loss is also a per-agent counter *event* timeline for the dashboard
+    tracks = {
+        e["track"]
+        for e in tel.tracer.events
+        if e["kind"] == "counter" and e["name"] == "agent.loss"
+    }
+    assert tracks == {"agent0", "agent1"}
+
+
+# ---------------------------------------------------------------------------
+# knowledge propagation
+# ---------------------------------------------------------------------------
+def test_propagation_document(observed):
+    _, report = observed
+    prop = report.extra["propagation"]
+    # both agents pushed at least one round -> full version vector
+    assert sorted(prop["version_vector"]) == ["0", "1"]
+    assert all(r >= 1 for r in prop["version_vector"].values())
+    assert prop["erb"]["n_pushed"] == 4  # 2 agents x 2 rounds
+    assert prop["mix"]["n_mixes"] >= 1
+    assert prop["mix"]["staleness"] is not None
+    assert prop["mix"]["staleness"]["n"] == prop["mix"]["n_snapshots"]
+    # influence re-weights sum over sources, one weight per folded snap
+    assert all(v > 0 for v in prop["mix"]["influence_by_source"].values())
+    assert prop["n_dropped_tracked"] == 0
+
+
+def test_version_vectors_stamped_on_outgoing_records():
+    from repro.core.federated import ADFLLSystem
+    from repro.rl.synth import paper_eight_tasks, patient_split
+
+    tasks = list(paper_eight_tasks())[:2]
+    train_p, _ = patient_split(8)
+    tel = Telemetry(enabled=True)
+    system = ADFLLSystem(TINY_SYS, TINY_DQN, tasks, train_p, telemetry=tel)
+    system.run()
+    hub = system.network.hubs[0]
+    erbs = list(hub.store("erb").values())
+    snaps = list(hub.store("weights").values())
+    assert erbs and snaps
+    assert all(isinstance(e.meta.version_vector, tuple) for e in erbs)
+    # at least the later records carry a non-empty vector
+    assert any(e.meta.version_vector for e in erbs)
+    assert any(s.version_vector for s in snaps)
+    for s in snaps:
+        for aid, rnd in s.version_vector:
+            assert 0 <= aid < TINY_SYS.n_agents
+            assert 0 <= rnd <= TINY_SYS.rounds
+
+
+def test_default_records_carry_empty_version_vector():
+    from repro.core.erb import TaskTag, erb_init
+    from repro.core.plane import WeightSnapshot
+
+    erb = erb_init(8, (4, 4, 4), task=TaskTag("t", "axial", "HGG"))
+    assert erb.meta.version_vector == ()
+    snap = WeightSnapshot(
+        snap_id="s0", agent_id=0, round_idx=0, sim_time=0.0, params={}
+    )
+    assert snap.version_vector == ()
+
+
+# ---------------------------------------------------------------------------
+# health
+# ---------------------------------------------------------------------------
+def test_health_verdict_shape(observed):
+    _, report = observed
+    health = report.extra["health"]
+    assert health["status"] in ("ok", "warn", "alert")
+    assert set(health["counts"]) == {i["kind"] for i in health["incidents"]}
+    # a healthy tiny run never alerts
+    kinds = set(health["counts"])
+    assert not kinds & {"nonfinite_params", "nonfinite_loss", "loss_divergence"}
+
+
+def test_health_detectors_fire_on_bad_stats():
+    import numpy as np
+
+    from repro.observatory import Observatory
+
+    tel = Telemetry(enabled=True)
+    obs = Observatory(tel)
+    obs.register_slot(0, 0)
+    good = {
+        "loss": np.full((2, 1), 1.0),
+        "td_abs": np.zeros((2, 1)),
+        "q_max": np.zeros((2, 1)),
+        "grad_norm": np.zeros((2, 1)),
+        "params_finite": np.array([True]),
+    }
+    for t in range(3):
+        obs.on_flush([0], good, 1, float(t))
+    diverged = dict(good, loss=np.full((2, 1), 100.0))
+    obs.on_flush([0], diverged, 1, 3.0)
+    nan = dict(good, loss=np.full((2, 1), np.nan), params_finite=np.array([False]))
+    obs.on_flush([0], nan, 1, 4.0)
+    verdict = obs.health.verdict(makespan=5.0)
+    assert verdict["status"] == "alert"
+    assert verdict["counts"]["loss_divergence"] == 1
+    assert verdict["counts"]["nonfinite_params"] == 1
+    # detectors fire once per agent, and each incident is a trace instant
+    obs.on_flush([0], nan, 1, 5.0)
+    assert obs.health.verdict(makespan=5.0)["counts"]["nonfinite_params"] == 1
+    names = {e["name"] for e in tel.tracer.events if e["kind"] == "instant"}
+    assert {"health.loss_divergence", "health.nonfinite_params"} <= names
+
+
+def test_straggler_detection():
+    import numpy as np
+
+    from repro.observatory import Observatory
+
+    obs = Observatory(Telemetry(enabled=True))
+    stats = {
+        "loss": np.full((1, 2), 1.0),
+        "td_abs": np.zeros((1, 2)),
+        "q_max": np.zeros((1, 2)),
+        "grad_norm": np.zeros((1, 2)),
+        "params_finite": np.array([True, True]),
+    }
+    obs.register_slot(0, 0)
+    obs.register_slot(1, 1)
+    obs.on_flush([0, 1], stats, 2, 1.0)  # both active early
+    only0 = {
+        k: (v[:, :1] if v.ndim == 2 else v[:1]) for k, v in stats.items()
+    }
+    obs.on_flush([0], only0, 1, 99.0)  # agent 0 keeps training
+    verdict = obs.health.verdict(makespan=100.0)
+    assert verdict["stragglers"] == [1]
+    assert verdict["status"] == "warn"
+
+
+# ---------------------------------------------------------------------------
+# Holm–Bonferroni
+# ---------------------------------------------------------------------------
+def test_holm_bonferroni_adjustment():
+    assert holm_bonferroni([]) == []
+    assert holm_bonferroni([None]) == [None]
+    # classic step-down: sorted p x (m - rank), running max, clipped
+    adj = holm_bonferroni([0.01, 0.04, 0.03])
+    assert adj == pytest.approx([0.03, 0.06, 0.06])
+    # None / NaN positions pass through and do not count toward m
+    adj = holm_bonferroni([0.01, None, float("nan"), 0.04])
+    assert adj[1] is None and math.isnan(adj[2])
+    assert adj[0] == pytest.approx(0.02)
+    assert adj[3] == pytest.approx(0.04)
+    # monotone in the input order of the sorted p's, never above 1
+    assert holm_bonferroni([0.9, 0.8]) == [1.0, 1.0]
+
+
+def test_compare_gates_on_adjusted_p():
+    from repro.sweeps.aggregate import compare
+
+    def _summary(vals_by_variant):
+        return {
+            "variants": {
+                label: {
+                    "metrics": {
+                        m: {"values": {str(i): x for i, x in enumerate(vals)}}
+                        for m, vals in ms.items()
+                    }
+                }
+                for label, ms in vals_by_variant.items()
+            }
+        }
+
+    a = _summary({"x": {"mean_dist_err": [1.0, 1.01, 0.99, 1.0, 1.02]}})
+    b = _summary({"x": {"mean_dist_err": [1.5, 1.53, 1.47, 1.51, 1.54]}})
+    rows, regressions = compare(a, b, alpha=0.05)
+    (row,) = rows
+    assert row["p_ttest_adj"] is not None
+    assert row["p_ttest_adj"] >= row["p_ttest"]
+    assert row["significant"] and row["regression"]
+    assert regressions == [row]
+
+
+# ---------------------------------------------------------------------------
+# streaming trace writer
+# ---------------------------------------------------------------------------
+def test_streaming_sink_roundtrip(tmp_path):
+    path = tmp_path / "stream.jsonl"
+    tel = Telemetry(enabled=True, stream_path=path)
+    for i in range(10):
+        tel.instant("tick", "t", float(i))
+    tel.count("comm.bytes", 42, plane="erb")
+    assert len(tel.tracer.events) == 0  # streamed, not buffered
+    tel.close()
+    tel.close()  # idempotent
+    doc = load_trace(path)
+    assert len(doc["events"]) == 10
+    counters = {m["name"]: m["value"] for m in doc["metrics"]}
+    assert counters["comm.bytes"] == 42
+    assert counters["trace.dropped"] == 0
+
+
+def test_streaming_sink_byte_cap_drops_and_counts(tmp_path):
+    path = tmp_path / "capped.jsonl"
+    tel = Telemetry(enabled=True, stream_path=path, stream_max_bytes=600)
+    for i in range(100):
+        tel.instant("tick", "t", float(i))
+    assert tel.sink.n_written < 100
+    assert tel.tracer.n_dropped == 100 - tel.sink.n_written
+    tel.close()
+    doc = load_trace(path)
+    assert len(doc["events"]) == tel.sink.n_written
+    # metric rows are exempt from the cap: the dropped tally survives
+    dropped = {
+        m["value"] for m in doc["metrics"] if m["name"] == "trace.dropped"
+    }
+    assert dropped == {float(tel.tracer.n_dropped)}
+
+
+def test_sink_refuses_after_close(tmp_path):
+    sink = JsonlTraceSink(tmp_path / "s.jsonl")
+    assert sink.write({"kind": "instant", "name": "a"})
+    sink.close()
+    assert not sink.write({"kind": "instant", "name": "b"})
+
+
+# ---------------------------------------------------------------------------
+# dashboard
+# ---------------------------------------------------------------------------
+def test_dashboard_from_live_run(tmp_path, observed):
+    tel, _ = observed
+    trace = {"events": list(tel.tracer.events), "metrics": tel.registry.summary()}
+    out = write_dashboard(tmp_path / "dash.html", trace)
+    html = out.read_text()
+    assert html.startswith("<!doctype html>")
+    for panel in (
+        "Learning dynamics",
+        "Staleness heatmap",
+        "Health",
+        "Span aggregates",
+        "<svg",
+        "<polyline",
+    ):
+        assert panel in html
+    # self-contained: no external fetches (the SVG xmlns URI is a
+    # namespace identifier, never dereferenced)
+    for needle in ("src=", "href=", "<link", "@import", "url("):
+        assert needle not in html
+
+
+def test_dashboard_cli_from_saved_trace(tmp_path, capsys):
+    trace_path = tmp_path / "t.jsonl"
+    tel = Telemetry(enabled=True, stream_path=trace_path)
+    tel.span("round", "agent0", 0.0, 1.0)
+    tel.counter("agent.loss", "agent0", 0.5, 1.25)
+    tel.close()
+    out = tmp_path / "d.html"
+    assert tel_main(["dashboard", str(trace_path), "-o", str(out)]) == 0
+    assert "wrote" in capsys.readouterr().out
+    html = out.read_text()
+    assert "Learning dynamics" in html and "Span aggregates" in html
+
+
+def test_dashboard_tolerates_empty_trace_and_embeds_sweep():
+    html = render_dashboard(
+        {"events": [], "metrics": []},
+        sweep_summary={
+            "comparisons": [
+                {"arm": "x", "metric": "m", "p_ttest": 0.2, "p_ttest_adj": 0.4}
+            ]
+        },
+        title="empty",
+    )
+    assert "Sweep comparison" in html
+    assert "0.4" in html

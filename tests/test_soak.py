@@ -1,0 +1,146 @@
+"""Tier-2 soak: a longer observed federation run with span-level trace
+validation.  Opt in with ``REPRO_SOAK=1`` (CI runs it on a schedule and
+on manual dispatch, not per-push):
+
+    REPRO_SOAK=1 PYTHONPATH=src python -m pytest tests/test_soak.py -q
+
+Assertions are structural, over the whole captured trace: every span is
+closed (finite ``t0 <= t1``), per-agent round spans are disjoint and
+ordered, the two clock domains stay inside their run's bounds, flush
+spans reconcile with the flush counter, nothing is dropped, and the
+streamed JSONL trace round-trips completely."""
+
+import math
+import os
+
+import pytest
+
+from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
+from repro.experiments import ScenarioSpec
+from repro.experiments.runner import run
+from repro.telemetry import Telemetry, load_trace
+
+pytestmark = [
+    pytest.mark.soak,
+    pytest.mark.skipif(
+        os.environ.get("REPRO_SOAK") != "1",
+        reason="soak tests are opt-in: set REPRO_SOAK=1",
+    ),
+]
+
+SOAK_DQN = DQNConfig(
+    volume_shape=(12, 12, 12),
+    box_size=(4, 4, 4),
+    conv_features=(2,),
+    hidden=(8,),
+    batch_size=4,
+    max_episode_steps=6,
+    eps_decay_steps=40,
+)
+SOAK_SYS = ADFLLConfig(
+    n_agents=3,
+    n_hubs=1,
+    agent_hub=(0, 0, 0),
+    agent_speed=(1.0, 1.5, 2.0),
+    rounds=6,
+    erb_capacity=256,
+    erb_share_size=16,
+    train_steps_per_round=4,
+    hub_sync_period=0.5,
+    share_planes=("erb", "weights"),
+)
+
+
+@pytest.fixture(scope="module")
+def soak_run(tmp_path_factory):
+    trace_path = tmp_path_factory.mktemp("soak") / "soak.jsonl"
+    tel = Telemetry(enabled=True, stream_path=trace_path)
+    spec = ScenarioSpec(
+        name="soak",
+        system="adfll",
+        task_set="paper8",
+        n_tasks=3,
+        n_patients=8,
+        dqn=SOAK_DQN,
+        sys=SOAK_SYS,
+        eval_patients=2,
+        eval_episodes=2,
+    )
+    report = run(spec, telemetry=tel)
+    wall_end = tel.wall()
+    tel.close()
+    return report, tel, load_trace(trace_path), wall_end
+
+
+def _spans(events, name=None, clock=None):
+    return [
+        e
+        for e in events
+        if e["kind"] == "span"
+        and (name is None or e["name"] == name)
+        and (clock is None or e["clock"] == clock)
+    ]
+
+
+def test_no_unclosed_spans(soak_run):
+    _, _, trace, _ = soak_run
+    spans = _spans(trace["events"])
+    assert spans
+    for e in spans:
+        assert math.isfinite(e["t0"]) and math.isfinite(e["t1"])
+        assert e["t1"] >= e["t0"], f"unclosed/negative span: {e}"
+
+
+def test_round_spans_nest_per_agent(soak_run):
+    report, _, trace, _ = soak_run
+    rounds = _spans(trace["events"], name="round", clock="sim")
+    assert len(rounds) == report.n_rounds
+    by_track = {}
+    for e in rounds:
+        by_track.setdefault(e["track"], []).append(e)
+    assert len(by_track) == SOAK_SYS.n_agents
+    for track, spans in by_track.items():
+        spans.sort(key=lambda e: e["t0"])
+        for prev, cur in zip(spans, spans[1:], strict=False):
+            # one agent trains sequentially: its rounds never overlap
+            assert cur["t0"] >= prev["t1"], f"overlapping rounds on {track}"
+
+
+def test_dual_clocks_stay_in_bounds(soak_run):
+    report, _, trace, wall_end = soak_run
+    eps = 1e-9
+    for e in trace["events"]:
+        assert e["clock"] in ("sim", "wall")
+        if e["clock"] == "sim":
+            assert -eps <= e["t0"] and e["t1"] <= report.makespan + eps
+        else:
+            assert -eps <= e["t0"] and e["t1"] <= wall_end + eps
+
+
+def test_flush_spans_reconcile_with_counters(soak_run):
+    _, tel, trace, _ = soak_run
+    flushes = _spans(trace["events"], name="fleet.flush", clock="wall")
+    assert flushes
+    assert len(flushes) == tel.registry.counter_value("fleet.flushes")
+    # every flush span wraps at least the chunk dispatch: nonzero width
+    assert all(e["t1"] > e["t0"] for e in flushes)
+
+
+def test_nothing_dropped_and_stream_complete(soak_run):
+    _, tel, trace, _ = soak_run
+    assert tel.tracer.n_dropped == 0
+    assert tel.registry.n_dropped_series == 0
+    assert len(trace["events"]) == tel.sink.n_written
+    dropped = [
+        m["value"] for m in trace["metrics"] if m["name"] == "trace.dropped"
+    ]
+    assert dropped == [0.0]
+
+
+def test_observatory_consistent_with_engine_counters(soak_run):
+    report, tel, _, _ = soak_run
+    learning = report.extra["learning"]
+    assert len(learning) == SOAK_SYS.n_agents
+    total_steps = sum(doc["n_steps"] for doc in learning.values())
+    assert total_steps == tel.registry.counter_value("fleet.steps_trained")
+    assert report.extra["health"]["status"] in ("ok", "warn")
