@@ -63,6 +63,16 @@ def build_parser(
         "using the benchmark's declared metrics",
     )
     ap.add_argument(
+        "--devices",
+        type=int,
+        default=0,
+        metavar="N",
+        help="shard the benchmark's fleet axis across a device mesh of "
+        "up to N local devices (-1 = all; 0 = single-device); ignored by "
+        "benchmarks without a mesh mode. On CPU combine with "
+        "XLA_FLAGS=--xla_force_host_platform_device_count=N",
+    )
+    ap.add_argument(
         "--trace",
         type=str,
         default=None,
@@ -136,6 +146,10 @@ def bench_main(
     if seed:
         kwargs["seed"] = args.seed
     params = inspect.signature(run).parameters
+    if "devices" in params:
+        kwargs["devices"] = args.devices
+    elif args.devices:
+        print(f"--devices ignored: {benchmark} has no mesh mode")
     if "trace_path" in params:
         kwargs["trace_path"] = args.trace
     elif args.trace:

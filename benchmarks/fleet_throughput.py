@@ -22,6 +22,17 @@ raw steps/sec):
 Gated in CI via ``check_regression --metric speedup --higher-better``
 against ``benchmarks/baselines/BENCH_fleet.json``.
 
+With ``--devices N`` the benchmark switches to **mesh mode**: each size
+is run twice with identical seeds and plan streams — single-device vs
+sharded across an N-device fleet mesh — and the ``mesh_n{A}`` rows
+report both throughputs, ``agents_per_device``, the CI-gated
+``mesh_speedup`` ratio, and ``bit_identical`` (the run *fails* if the
+sharded params are not bitwise equal to single-device).  On CPU combine
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the
+``bench-smoke`` job gates this against
+``benchmarks/baselines/BENCH_fleet_mesh.json``); see
+``docs/scaling.md``.
+
 A ``telemetry`` row additionally times the fleet path with an enabled
 :class:`~repro.telemetry.Telemetry` bundle *plus the full observatory*
 (the stats-carrying train chunk) against the default disabled path and
@@ -40,9 +51,12 @@ import time
 
 import numpy as np
 
+import jax
+
 import repro.core  # noqa: F401  (resolve the core<->rl import cycle first)
 from repro.configs.adfll_dqn import DQNConfig
 from repro.core.erb import ERB, TaskTag, erb_add, erb_init
+from repro.models.sharding import make_fleet_mesh
 from repro.rl.agent import DQNAgent
 from repro.rl.fleet import FleetEngine
 from repro.observatory import Observatory
@@ -176,11 +190,118 @@ def _bench_telemetry(
     return t_off, t_on, tel
 
 
+def _bench_mesh(
+    n_agents: int, steps: int, repeats: int, capacity: int, mesh
+) -> tuple[float, float, bool]:
+    """(single-device, sharded) seconds per round of N x K updates, plus
+    whether the two engines' final stacked params are *bitwise* equal.
+
+    Both fleets are seeded identically and submit identical plan streams,
+    so after equal rounds their states must match bit for bit — the
+    sharded engine's per-slot math is mesh-invariant (the acceptance
+    property the mesh subprocess test asserts; checked here on every
+    benchmark run too). Interleaved min-of-repeats as in
+    :func:`_bench_pair`."""
+    rng = np.random.default_rng(0)
+    single = FleetEngine(CFG)
+    sharded = FleetEngine(CFG, mesh=mesh)
+    flat = [DQNAgent(i, CFG, seed=i, engine=single) for i in range(n_agents)]
+    shard = [DQNAgent(i, CFG, seed=i, engine=sharded) for i in range(n_agents)]
+    erbs = [_filled_erb(rng, capacity) for _ in range(n_agents)]
+
+    def round_of(engine, fleet):
+        for a, e in zip(fleet, erbs, strict=True):
+            plans = [a.sampler.plan(a.rng, CFG.batch_size, e) for _ in range(steps)]
+            engine.submit(a.slot, plans)
+        engine.flush()
+
+    round_of(single, flat)  # warm both chunk compiles
+    round_of(sharded, shard)
+    t_single = t_shard = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        round_of(single, flat)
+        t_single = min(t_single, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        round_of(sharded, shard)
+        t_shard = min(t_shard, time.perf_counter() - t0)
+    identical = all(
+        np.array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(
+            jax.tree_util.tree_leaves(single.stacked_params()),
+            jax.tree_util.tree_leaves(sharded.stacked_params()),
+            strict=True,
+        )
+    )
+    return t_single, t_shard, identical
+
+
+def _run_mesh(fast: bool, devices: int) -> dict:
+    """The mesh scaling rows (``--devices``): sharded vs single-device
+    engine at large N — ``mesh_speedup`` is the CI-gated column, checked
+    against ``BENCH_fleet_mesh.json`` (a separate baseline: the plain
+    smoke's rows and these never appear in the same run)."""
+    mesh = make_fleet_mesh(devices)
+    if mesh is None:
+        raise SystemExit(
+            f"--devices {devices}: only {len(jax.devices())} device(s) "
+            "visible; set XLA_FLAGS=--xla_force_host_platform_device_count=N "
+            "for a CPU host-platform mesh"
+        )
+    sizes = (32,) if fast else (64, 256)
+    steps = 20 if fast else 40
+    repeats = 2 if fast else 3
+    capacity = 512
+    results = {}
+    print(
+        "config,n_agents,devices,agents_per_device,single_sps,mesh_sps,"
+        "mesh_speedup,bit_identical"
+    )
+    for n in sizes:
+        t_single, t_shard, identical = _bench_mesh(n, steps, repeats, capacity, mesh)
+        total = n * steps
+        row = {
+            "n_agents": n,
+            "train_steps": steps,
+            "devices": mesh.size,
+            "agents_per_device": n / mesh.size,
+            "single_steps_per_sec": total / t_single,
+            "mesh_steps_per_sec": total / t_shard,
+            "mesh_speedup": t_single / t_shard,
+            "bit_identical": identical,
+        }
+        results[f"mesh_n{n}"] = row
+        print(
+            f"mesh_n{n},{n},{mesh.size},{row['agents_per_device']:.0f},"
+            f"{row['single_steps_per_sec']:.1f},{row['mesh_steps_per_sec']:.1f},"
+            f"{row['mesh_speedup']:.2f},{identical}"
+        )
+        if not identical:
+            raise SystemExit(
+                f"mesh_n{n}: sharded params diverged from single-device "
+                "engine (bit-identity violated)"
+            )
+    return results
+
+
 def run(
     fast: bool = False,
     json_path: str | None = None,
     trace_path: str | None = None,
+    devices: int = 0,
 ):
+    if devices:
+        results = _run_mesh(fast, devices)
+        if json_path:
+            payload = {
+                "benchmark": "fleet_throughput",
+                "fast": bool(fast),
+                "configs": results,
+            }
+            with open(json_path, "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            print(f"wrote {json_path}")
+        return results
     sizes = (2, 8) if fast else (2, 8, 32)
     steps = 40 if fast else 150
     repeats = 4 if fast else 4
@@ -245,6 +366,12 @@ if __name__ == "__main__":
                 # enabled-telemetry wall cost must stay near the disabled
                 # path's (ratio ~1.0); generous bounds absorb CI noise
                 Gate("telemetry_overhead", tol=0.30, abs_floor=0.25),
+                # --devices rows: agents-per-device scaling must not rot.
+                # The baseline is generated on a 1-core host (virtual
+                # devices share it, speedup ~1x), so the generous bound
+                # only catches sharding-path slowdowns; real multi-core
+                # runners land well above it.
+                Gate("mesh_speedup", higher_better=True, tol=0.50, abs_floor=0.4),
             ),
         )
     )

@@ -14,7 +14,12 @@ hot-swap count, recompiles after warmup (must be 0 — the acceptance
 trace counter), and served accuracy.  The ``batched`` row adds
 ``batch_speedup`` (batched / single requests-per-sec) — the CI-gated
 ratio alongside throughput, machine-speed independent like the fleet
-benchmark's ``speedup``:
+benchmark's ``speedup``.
+
+``open_{0.5,1,1.5}x`` rows sweep *open-loop* arrival rates (requests
+spaced on the wall clock at a fraction of the measured closed-loop
+capacity): the latency-under-load curve — flat queue-free latency below
+saturation, backlog growth above it:
 
     PYTHONPATH=src python -m benchmarks.serve_latency [--fast] [--seed N] \
         [--json OUT] [--check benchmarks/baselines/BENCH_serve.json]
@@ -55,13 +60,18 @@ ROW_KEYS = (
 
 
 def _serve_row(
-    max_batch: int, seed: int, fast: bool, telemetry: Telemetry | None = None
+    max_batch: int,
+    seed: int,
+    fast: bool,
+    telemetry: Telemetry | None = None,
+    rate: float | None = None,
 ) -> dict:
     traffic = TrafficSpec(
         n_requests=24 if fast else 96,
         max_batch=max_batch,
         n_version_slots=2,
         max_staleness=1,
+        rate=rate,
         seed=seed,
     )
     session = build_session(
@@ -95,6 +105,24 @@ def run(seed: int = 0, fast: bool = False, json_path=None, trace_path=None):
         / results["single"]["requests_per_sec"]
     )
     print(f"derived,batch_speedup={results['batched']['batch_speedup']:.2f}")
+    # open-loop arrival-rate sweep: requests spaced on the wall clock at
+    # a fraction of the *measured* closed-loop capacity, so the offered
+    # load (and the shape of the latency-under-load curve) adapts to the
+    # machine instead of hard-coding req/s. Sub-saturation rows show
+    # queue-free latency; the 1.5x row shows saturation backlog growth.
+    capacity = results["batched"]["requests_per_sec"]
+    for frac in (0.5, 1.0, 1.5):
+        rate = max(1.0, capacity * frac)
+        row = _serve_row(8, seed, fast, None, rate=rate)
+        row["offered_rate"] = rate
+        row["offered_frac"] = frac
+        name = f"open_{frac:g}x"
+        results[name] = row
+        print(
+            f"{name},{row['requests_per_sec']:.1f},{row['p50_latency_ms']:.2f},"
+            f"{row['p99_latency_ms']:.2f},{row['ticks_per_request']:.1f},"
+            f"{row['n_swaps']},{row['recompiles']}"
+        )
     # telemetry+observatory overhead on the batched row: rerun it with an
     # enabled bundle (build_session auto-attaches the observatory) and
     # compare requests/sec.  >1.0 means the observed run was slower; the

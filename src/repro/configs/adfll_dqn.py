@@ -57,6 +57,11 @@ class ADFLLConfig:
     # "stepwise": the legacy one-dispatch-per-step path (benchmark
     # baseline; within float-fusion ULPs of the fused engine).
     engine: str = "fleet"
+    # devices joining the fleet mesh (the stacked agent axis is sharded
+    # across them): 0 = single-device (no mesh), -1 = every local device,
+    # N = up to N — rounded down to a power of two; per-slot math is
+    # bitwise invariant to the mesh, so reports match the 0 setting.
+    fleet_devices: int = 0
     # task curriculum: "roundrobin" (the paper's rotation), "blocked"
     # (one task per cohort of n_agents draws before advancing), or
     # "shuffled" (seeded permutation of each full pass over the tasks)

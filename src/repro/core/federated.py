@@ -45,9 +45,10 @@ from repro.core.network import Network
 from repro.core.plane import CompressedWeightPlane, WeightPlane, staleness_alphas
 from repro.core.scheduler import Scheduler
 from repro.observatory import Observatory
+from repro.models.sharding import make_fleet_mesh
 from repro.rl.agent import DQNAgent
 from repro.rl.env import LandmarkEnv
-from repro.rl.fleet import FleetEngine
+from repro.rl.fleet import FleetEngine, collect_fleet
 from repro.rl.synth import make_volume
 from repro.telemetry import NULL, Telemetry
 
@@ -148,8 +149,11 @@ class ADFLLSystem:
             self.network.gossip.telemetry = self.telemetry
         if sys_cfg.engine not in ("fleet", "fleet-eager", "stepwise"):
             raise ValueError(f"unknown engine: {sys_cfg.engine!r}")
+        mesh = make_fleet_mesh(sys_cfg.fleet_devices) if sys_cfg.fleet_devices else None
         self.engine: FleetEngine | None = (
-            FleetEngine(dqn_cfg) if sys_cfg.engine.startswith("fleet") else None
+            FleetEngine(dqn_cfg, mesh=mesh)
+            if sys_cfg.engine.startswith("fleet")
+            else None
         )
         if self.engine is not None:
             self.engine.telemetry = self.telemetry
@@ -768,6 +772,7 @@ class CentralAggregationSystem:
         steps: int = 150,
         erb_capacity: int = 2048,
         seed: int = 400,
+        devices: int = 0,
     ):
         self.dqn_cfg = dqn_cfg
         self.tasks = list(tasks)
@@ -776,7 +781,8 @@ class CentralAggregationSystem:
         self.steps = steps
         self.erb_capacity = erb_capacity
         self.seed = seed
-        engine = FleetEngine(dqn_cfg)  # one stacked fleet for the cohort
+        mesh = make_fleet_mesh(devices) if devices else None
+        engine = FleetEngine(dqn_cfg, mesh=mesh)  # one stacked fleet for the cohort
         self.agents = [
             DQNAgent(i, dqn_cfg, seed=seed + i, engine=engine) for i in range(n_agents)
         ]
@@ -791,24 +797,42 @@ class CentralAggregationSystem:
     ):
         steps = self.steps if steps is None else steps
         erb_capacity = self.erb_capacity if erb_capacity is None else erb_capacity
-        for i, agent in enumerate(self.agents):
-            task = self.tasks[(round_idx * len(self.agents) + i) % len(self.tasks)]
-            env = env_for(task, int(self.rng.choice(self.patients)), self.dqn_cfg)
-            erb = erb_init(
+        agents = self.agents
+        tasks = [
+            self.tasks[(round_idx * len(agents) + i) % len(self.tasks)]
+            for i in range(len(agents))
+        ]
+        # the cohort's patient draws come off self.rng exactly as the
+        # per-agent loop drew them (collection uses per-agent streams, so
+        # hoisting the draws changes nothing)
+        envs = [
+            env_for(t, int(self.rng.choice(self.patients)), self.dqn_cfg)
+            for t in tasks
+        ]
+        erbs = [
+            erb_init(
                 erb_capacity,
                 self.dqn_cfg.box_size,
-                task=task,
+                task=t,
                 source_agent=i,
                 round_idx=round_idx,
             )
-            agent.collect(env, erb, n_episodes=24)
-            if agent.engine is not None:
-                # submit only: the whole cohort trains as one batched
-                # flush, forced by the params read during aggregation
+            for i, t in enumerate(tasks)
+        ]
+        if agents and agents[0].engine is not None:
+            # sync baselines scale like the fleet: ONE stacked greedy-act
+            # dispatch per env step collects for the whole cohort, and
+            # submit-only training makes the round a single batched flush,
+            # forced by the params read during aggregation
+            collect_fleet(agents, envs, erbs, n_episodes=24)
+            for agent, erb in zip(agents, erbs, strict=True):
                 agent._submit_steps(steps, erb, ())
-            else:
+                agent.personal_erbs.append(erb)
+        else:
+            for agent, env, erb in zip(agents, envs, erbs, strict=True):
+                agent.collect(env, erb, n_episodes=24)
                 agent.train_steps(steps, erb, ())
-            agent.personal_erbs.append(erb)
+                agent.personal_erbs.append(erb)
         # synchronous central aggregation (the bottleneck ADFLL removes)
         mean_params = jax.tree_util.tree_map(
             lambda *xs: sum(xs) / len(xs), *[a.params for a in self.agents]

@@ -55,6 +55,24 @@ def main(argv=None) -> int:
         help="override the ADFLL execution engine (default: the scenario's)",
     )
     ap.add_argument(
+        "--devices",
+        type=int,
+        default=None,
+        metavar="N",
+        help=(
+            "shard the fleet's agent axis across a device mesh of up to N "
+            "local devices (-1 = all; rounded down to a power of two). "
+            "Per-slot math is bitwise invariant to the mesh, so reports "
+            "match single-device runs. On CPU combine with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N."
+        ),
+    )
+    ap.add_argument(
+        "--mesh",
+        action="store_true",
+        help="shorthand for --devices -1 (every local device)",
+    )
+    ap.add_argument(
         "--json",
         type=str,
         default=None,
@@ -103,6 +121,9 @@ def main(argv=None) -> int:
         spec = resolve(name, fast=args.fast, seed=args.seed)
         if args.engine is not None:
             spec = replace(spec, sys=replace(spec.sys, engine=args.engine))
+        devices = -1 if args.mesh and args.devices is None else args.devices
+        if devices is not None:
+            spec = replace(spec, sys=replace(spec.sys, fleet_devices=devices))
         trace_path = _per_scenario(args.trace, name, len(args.scenario))
         dashboard_path = _per_scenario(args.dashboard, name, len(args.scenario))
         report = run(spec, trace_path=trace_path, dashboard_path=dashboard_path)

@@ -4,6 +4,13 @@
 (default: the ``data`` axis). Any dim that does not divide the assigned
 axis size falls back to replication — this keeps small archs (xlstm-125m)
 lowering on a 256-chip mesh without bespoke configs.
+
+The fleet engine uses a second, much simpler family defined at the
+bottom: a 1-D mesh whose single axis carries the *leading agent axis* of
+every stacked pytree (params / target / optimizer / PRNG / counters),
+with the replay pool replicated — pure population parallelism, where the
+per-slot program is identical on every device and no collective ever
+crosses slots (:class:`FleetSharding`, :func:`make_fleet_mesh`).
 """
 
 from __future__ import annotations
@@ -13,6 +20,7 @@ import math
 from dataclasses import dataclass
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -20,6 +28,7 @@ FSDP = "__fsdp__"  # placeholder resolved to policy.fsdp_axes
 MODEL = "model"
 HEADQ = "__headq__"  # model axis iff cfg.n_heads divides it (else replicate)
 HEADKV = "__headkv__"  # model axis iff cfg.n_kv_heads divides it
+FLEET = "fleet"  # the stacked agent axis of the fleet engine
 
 
 @dataclass(frozen=True)
@@ -242,3 +251,63 @@ def cache_shardings(tree, mesh: Mesh, policy: ShardingPolicy):
         return NamedSharding(mesh, cache_pspec(pstr, leaf.shape, mesh, policy))
 
     return jax.tree_util.tree_map_with_path(visit, tree)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-axis sharding (population parallelism for the fleet engine)
+# ---------------------------------------------------------------------------
+def make_fleet_mesh(n_devices: int | None = None, *, axis: str = FLEET) -> Mesh | None:
+    """A 1-D device mesh for the fleet's stacked agent axis.
+
+    ``n_devices`` caps how many local devices join (``None``/``-1`` = all
+    of them); the count is rounded *down* to a power of two so the
+    engine's pow2 slot buckets always divide the mesh. Returns ``None``
+    when at most one device would participate — callers treat that as
+    "stay on the single-device path", so ``make_fleet_mesh()`` is safe to
+    call unconditionally on CPU CI.
+    """
+    devices = jax.devices()
+    n = len(devices) if n_devices is None or n_devices < 0 else n_devices
+    n = min(n, len(devices))
+    if n <= 1:
+        return None
+    n = 1 << (n.bit_length() - 1)  # pow2 floor
+    return Mesh(np.array(devices[:n]), (axis,))
+
+
+@dataclass(frozen=True)
+class FleetSharding:
+    """Shardings of the fleet chunk's operands on a 1-D agent-axis mesh.
+
+    The per-agent math is embarrassingly parallel, so the whole policy is
+    one rule: shard the leading (agent) axis, replicate everything else.
+    ``stacked`` covers every :class:`~repro.rl.fleet.FleetState` leaf and
+    any ``[N, ...]`` act operand; ``indices`` is the ``[K, N, B]`` replay
+    index tensor (agent axis second); ``replicated`` is the shared replay
+    pool (every device reads all rows its slots may sample).
+    """
+
+    mesh: Mesh
+    axis: str = FLEET
+
+    @property
+    def stacked(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P(self.axis))
+
+    @property
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())
+
+    @property
+    def indices(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P(None, self.axis))
+
+    @property
+    def n_devices(self) -> int:
+        return self.mesh.size
+
+    def place(self, tree):
+        """Commit a stacked pytree (leading agent axis) onto the mesh."""
+        return jax.tree_util.tree_map(
+            lambda x: jax.device_put(x, self.stacked), tree
+        )

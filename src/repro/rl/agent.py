@@ -33,6 +33,7 @@ from repro.rl.env import LandmarkEnv
 from repro.rl.fleet import (
     FleetEngine,
     TrainFuture,
+    collect_fleet,
     make_dqn_loss_fn,
     make_dqn_opt_cfg,
 )
@@ -177,6 +178,12 @@ class DQNAgent:
 
     # -- experience collection ---------------------------------------------
     def collect(self, env: LandmarkEnv, erb: ERB, n_episodes: int) -> ERB:
+        if self.engine is not None:
+            # route through the stacked collection program — bit-identical
+            # to the loop below (same q-values, same rng stream order),
+            # and cohort drivers batch many agents into the same dispatch
+            collect_fleet([self], [env], [erb], n_episodes)
+            return erb
         c = self.cfg
         locs = env.start_locs(n_episodes, self.rng)
         alive = np.ones(n_episodes, bool)
@@ -279,6 +286,17 @@ class DQNAgent:
         return len(snaps)
 
     # -- ADFLL round (paper A.3) ----------------------------------------------
+    def new_round_erb(self, task: TaskTag, erb_capacity: int) -> ERB:
+        """The empty current-round buffer (tagged with this agent's id and
+        round index) — split out so cohort drivers can pre-collect."""
+        return erb_init(
+            erb_capacity,
+            self.cfg.box_size,
+            task=task,
+            source_agent=self.agent_id,
+            round_idx=self.rounds_done,
+        )
+
     def begin_round(
         self,
         env: LandmarkEnv,
@@ -290,21 +308,24 @@ class DQNAgent:
         train_steps: int,
         collect_episodes: int = 24,
         share_strategy: str = "uniform",
+        current: ERB | None = None,
     ) -> tuple[ERB, TrainFuture]:
         """Collect on the round's task and *submit* the round's training
         (current + personal + incoming replay) to the fleet engine
         without forcing execution. Returns (shared ERB, loss future) —
         the shared slice never depends on the round's own updates, so the
         system can keep scheduling while jobs accumulate into one batched
-        flush. On the stepwise backend the future resolves immediately."""
-        current = erb_init(
-            erb_capacity,
-            self.cfg.box_size,
-            task=task,
-            source_agent=self.agent_id,
-            round_idx=self.rounds_done,
-        )
-        self.collect(env, current, collect_episodes)
+        flush. On the stepwise backend the future resolves immediately.
+
+        ``current`` accepts a pre-collected round ERB (see
+        :func:`repro.rl.fleet.collect_fleet`): cohort drivers collect the
+        whole round's experience in one stacked program, then hand each
+        agent its buffer here — skipping the per-agent collect while
+        keeping every subsequent rng draw (sample plans, share slice) in
+        the per-agent order."""
+        if current is None:
+            current = self.new_round_erb(task, erb_capacity)
+            self.collect(env, current, collect_episodes)
         for e in incoming:
             self.seen_erb_ids.add(e.meta.erb_id)
         if self.engine is not None:

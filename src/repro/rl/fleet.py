@@ -10,11 +10,30 @@ steps = N*K dispatches per round of rounds. This module turns that into
 * :class:`FleetState` — every agent's params / target params / optimizer
   state / PRNG key / step counter as one stacked pytree with a leading
   agent axis.
-* :func:`make_fleet_steps` — a module-level, config-keyed cache of the
-  compiled fleet program. The train chunk is ``lax.scan``-fused over the
-  K inner steps of a round and ``vmap``-ed over the agent axis, so a
-  flush of J pending rounds is a single dispatch. Buffers are donated on
-  accelerators (donation is a no-op on CPU).
+* :func:`make_fleet_steps` — a module-level, (config, mesh)-keyed cache
+  of the compiled fleet program. The train chunk is ``lax.scan``-fused
+  over the K inner steps of a round and ``vmap``-ed over the agent axis,
+  so a flush of J pending rounds is a single dispatch. Buffers are
+  donated on accelerators (donation is a no-op on CPU).
+* Fleet-axis sharding: given a 1-D device mesh
+  (:func:`repro.models.sharding.make_fleet_mesh`), the stacked agent
+  axis is partitioned across devices (MaxText-style ``jax.sharding``
+  annotations: state and indices sharded on the agent axis, replay pool
+  replicated) and the chunk is jitted with explicit in/out shardings —
+  per-agent work is embarrassingly parallel, so the compiler places each
+  shard's slots on its device with no cross-slot collectives and
+  throughput scales with the device count. The engine pads its resident
+  slot count to a mesh-divisible pow2 bucket (dead slots are inert
+  copies, never read), and a flush that covers the whole bucket skips
+  the gather/scatter entirely: the resident state flows through the
+  donated chunk end to end.
+* :func:`collect_fleet` — the *collection* phase batched the same way: a
+  stacked greedy-rollout program (:class:`CollectSteps`) computes every
+  cohort agent's q-values for its own episode batch in ONE vmapped
+  dispatch per environment step, replacing per-agent ``q_values``
+  round-trips. Each lane applies its agent's params to its own ``[B]``
+  batch — the identical slot program — so stacked collection is
+  bit-identical to per-agent acting.
 * Device-resident replay: ERBs are cached on device as flat ``[size, F]``
   float32 matrices; the host :class:`~repro.core.replay.SelectiveReplaySampler`
   shrinks to pool/index *selection* (its ``plan()`` half), and batch
@@ -48,9 +67,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.adfll_dqn import DQNConfig
-from repro.core.erb import ERB, erb_flatten, flat_width
+from repro.core.erb import ERB, erb_add, erb_flatten, flat_width
 from repro.kernels.fused_td.ops import td_loss
 from repro.kernels.replay_gather.ops import replay_gather
+from repro.models.sharding import FleetSharding
 from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
 from repro.rl.dqn import dqn_apply, dqn_init
 from repro.telemetry import NULL
@@ -110,7 +130,7 @@ def make_dqn_loss_fn(cfg: DQNConfig, use_pallas: bool):
 
 
 class FleetSteps:
-    """The compiled fleet program for one (config, use_pallas) pair.
+    """The compiled fleet program for one (config, use_pallas, mesh) triple.
 
     ``train_chunk(state_slice, pool, idx) -> (state_slice, losses)`` where
     ``state_slice`` is a :class:`FleetState` of the participating slots,
@@ -127,11 +147,22 @@ class FleetSteps:
     accumulated device-side and drained only at the flush boundary, so
     enabling the observatory adds no extra host syncs.  It is compiled
     lazily on first use: engines without an observatory never trace it.
+
+    With a ``mesh`` (1-D agent-axis device mesh), both chunks are jitted
+    with explicit in/out shardings: state leaves and the ``[K, N, B]``
+    index tensor partitioned on the agent axis, the replay pool
+    replicated. The slot program has no cross-slot data flow, so the
+    compiler runs each device's shard independently — agents-per-device
+    throughput scaling with bitwise-identical per-slot math (the same
+    N-invariance that backs the fleet-vs-sequential guarantee; asserted
+    against a single-device run in ``tests/test_fleet.py``).
     """
 
-    def __init__(self, cfg: DQNConfig, use_pallas: bool):
+    def __init__(self, cfg: DQNConfig, use_pallas: bool, mesh=None):
         self.cfg = cfg
         self.use_pallas = use_pallas
+        self.mesh = mesh
+        self.sharding = FleetSharding(mesh) if mesh is not None else None
         self.opt_cfg = make_dqn_opt_cfg(cfg)
         self.n_traces = 0
         box = cfg.box_size
@@ -272,7 +303,16 @@ class FleetSteps:
         # donated stacked buffers: in-place update on accelerators
         # (donation is unimplemented on CPU; avoid the warning spam there)
         donate = () if jax.default_backend() == "cpu" else (0,)
-        self.train_chunk: Callable = jax.jit(chunk, donate_argnums=donate)
+        if self.sharding is None:
+            self.train_chunk: Callable = jax.jit(chunk, donate_argnums=donate)
+        else:
+            fs = self.sharding
+            self.train_chunk = jax.jit(
+                chunk,
+                donate_argnums=donate,
+                in_shardings=(fs.stacked, fs.replicated, fs.indices),
+                out_shardings=(fs.stacked, fs.indices),
+            )
         self._chunk_stats_fn = chunk_stats
         self._donate = donate
         self._train_chunk_stats: Callable | None = None
@@ -282,9 +322,25 @@ class FleetSteps:
         """The stats-carrying chunk, jitted on first use (engines without
         an observatory never pay its trace/compile)."""
         if self._train_chunk_stats is None:
-            self._train_chunk_stats = jax.jit(
-                self._chunk_stats_fn, donate_argnums=self._donate
-            )
+            if self.sharding is None:
+                self._train_chunk_stats = jax.jit(
+                    self._chunk_stats_fn, donate_argnums=self._donate
+                )
+            else:
+                fs = self.sharding
+                stats_out = {
+                    "loss": fs.indices,  # [K, N]
+                    "td_abs": fs.indices,
+                    "q_max": fs.indices,
+                    "grad_norm": fs.indices,
+                    "params_finite": fs.stacked,  # [N]
+                }
+                self._train_chunk_stats = jax.jit(
+                    self._chunk_stats_fn,
+                    donate_argnums=self._donate,
+                    in_shardings=(fs.stacked, fs.replicated, fs.indices),
+                    out_shardings=(fs.stacked, stats_out),
+                )
         return self._train_chunk_stats
 
     def init_slot(self, seed: int) -> FleetState:
@@ -306,18 +362,139 @@ class FleetSteps:
         )
 
 
-_FLEET_STEPS_CACHE: dict[tuple[DQNConfig, bool], FleetSteps] = {}
+_FLEET_STEPS_CACHE: dict[tuple, FleetSteps] = {}
 
 
-def make_fleet_steps(cfg: DQNConfig, *, use_pallas: bool = False) -> FleetSteps:
-    """Config-keyed cache of the compiled fleet program: N same-config
-    agents (or engines) share one traced/compiled ``train_chunk``."""
-    key = (cfg, bool(use_pallas))
+def make_fleet_steps(cfg: DQNConfig, *, use_pallas: bool = False, mesh=None) -> FleetSteps:
+    """(config, mesh)-keyed cache of the compiled fleet program: N
+    same-config agents (or engines) share one traced/compiled
+    ``train_chunk``. ``jax.sharding.Mesh`` is hashable, so meshed and
+    single-device engines coexist without retracing each other."""
+    key = (cfg, bool(use_pallas), mesh)
     steps = _FLEET_STEPS_CACHE.get(key)
     if steps is None:
-        steps = FleetSteps(cfg, bool(use_pallas))
+        steps = FleetSteps(cfg, bool(use_pallas), mesh)
         _FLEET_STEPS_CACHE[key] = steps
     return steps
+
+
+class CollectSteps:
+    """The compiled stacked greedy-rollout q-value program of one config.
+
+    ``qvals(stacked, obs, loc) -> q`` maps an ``[A, ...]`` stacked
+    parameter pytree and ``[A, B, *box]`` / ``[A, B, 3]`` per-agent
+    observation batches to ``[A, B, n_actions]`` q-values: one vmapped
+    dispatch computes every cohort agent's greedy preferences for the
+    step, replacing A per-agent ``q_values`` round-trips during
+    collection. Each lane is ``dqn_apply`` on that agent's own ``[B]``
+    batch — the exact per-agent program — so the stacked q-values are
+    bitwise identical to per-agent acting (asserted in
+    ``tests/test_fleet.py``), and epsilon-greedy sampling stays on the
+    host consuming each agent's own rng stream in the per-agent order.
+
+    With a ``mesh``, all three operands are sharded on the leading agent
+    axis, so collection scales with devices like the train chunk.
+    ``n_traces`` counts retraces — one compile per distinct ``(A, B)``
+    bucket (cohorts pad the agent axis to pow2 buckets).
+    """
+
+    def __init__(self, cfg: DQNConfig, mesh=None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.n_traces = 0
+
+        def qvals(stacked, obs, loc):
+            self.n_traces += 1  # trace-time side effect: counts retraces
+            return jax.vmap(lambda p, o, l: dqn_apply(cfg, p, o, l))(
+                stacked, obs, loc
+            )
+
+        if mesh is None:
+            self.qvals: Callable = jax.jit(qvals)
+        else:
+            fs = FleetSharding(mesh)
+            self.qvals = jax.jit(
+                qvals,
+                in_shardings=(fs.stacked, fs.stacked, fs.stacked),
+                out_shardings=fs.stacked,
+            )
+
+
+_COLLECT_STEPS_CACHE: dict[tuple, CollectSteps] = {}
+
+
+def make_collect_steps(cfg: DQNConfig, *, mesh=None) -> CollectSteps:
+    """(config, mesh)-keyed cache of the stacked collection program."""
+    key = (cfg, mesh)
+    steps = _COLLECT_STEPS_CACHE.get(key)
+    if steps is None:
+        steps = CollectSteps(cfg, mesh)
+        _COLLECT_STEPS_CACHE[key] = steps
+    return steps
+
+
+def collect_fleet(agents, envs, erbs, n_episodes: int) -> None:
+    """Collect one round of experience for a cohort of fleet agents with
+    the stacked act program — one vmapped q-value dispatch per
+    environment step for the whole cohort.
+
+    ``agents[i]`` rolls ``n_episodes`` episodes in ``envs[i]``, appending
+    transitions to ``erbs[i]``. Bit-identical to calling
+    ``DQNAgent.collect`` per agent: each vmap lane runs the agent's own
+    slot program on its own batch (bitwise-equal q-values), and every
+    epsilon-greedy draw (`start_locs`, action integers, exploration
+    coins) comes from that agent's own ``np.random.Generator`` in the
+    identical order. Agents whose episodes all finish early stop
+    consuming their rng and stop writing their ERB, exactly like the
+    per-agent loop's early ``break``.
+    """
+    if not agents:
+        return
+    engine = agents[0].engine
+    cfg = agents[0].cfg
+    steps = make_collect_steps(cfg, mesh=engine.mesh)
+    n = len(agents)
+    n_min = engine.mesh.size if engine.mesh is not None else 1
+    a_pad = max(_pow2(n), n_min)
+    slots = [a.slot for a in agents] + [agents[0].slot] * (a_pad - n)
+    stacked = engine.padded_slot_params(slots)
+    box = cfg.box_size
+    b = n_episodes
+    locs = np.stack([env.start_locs(b, a.rng) for a, env in zip(agents, envs)])
+    alive = np.ones((n, b), bool)
+    obs_buf = np.zeros((a_pad, b, *box), np.float32)
+    loc_buf = np.zeros((a_pad, b, 3), np.float32)
+    for _ in range(cfg.max_episode_steps):
+        live = [i for i in range(n) if alive[i].any()]
+        if not live:
+            break
+        for i in live:
+            obs_buf[i] = envs[i].observe(locs[i])
+            loc_buf[i] = envs[i].norm_loc(locs[i])
+        q = np.asarray(steps.qvals(stacked, jnp.asarray(obs_buf), jnp.asarray(loc_buf)))
+        for i in live:
+            agent, env, erb = agents[i], envs[i], erbs[i]
+            eps = agent.epsilon()
+            greedy = q[i].argmax(-1)
+            rand = agent.rng.integers(0, cfg.n_actions, size=b)
+            coin = agent.rng.random(b) < eps
+            acts = np.where(coin, rand, greedy).astype(np.int32)
+            new, r, done = env.step(locs[i], acts)
+            idx = np.where(alive[i])[0]
+            batch = {
+                # obs_buf[i] is env.observe(locs[i]) — reuse the staged
+                # rows instead of re-cropping for the ERB append
+                "obs": obs_buf[i][idx],
+                "loc": loc_buf[i][idx],
+                "action": acts[idx],
+                "reward": r[idx],
+                "next_obs": env.observe(new[idx]),
+                "next_loc": env.norm_loc(new[idx]),
+                "done": done[idx].astype(np.float32),
+            }
+            erb_add(erb, batch)
+            locs[i] = new
+            alive[i] &= ~done
 
 
 class ActSteps:
@@ -432,12 +609,24 @@ class FleetEngine:
     pending jobs in one scan-fused, vmapped dispatch. Futures resolve in
     submission order, so deferred bookkeeping (round records) lands in
     the same order as sequential execution.
+
+    The resident slot axis is padded to a pow2, mesh-divisible
+    ``capacity``: rows past ``n_slots`` are *dead* — inert copies that
+    are never read and get overwritten in place when a slot is added, so
+    growth (and churn re-adds) no longer reshapes the stacked arrays or
+    forces a flush while capacity is spare. With a ``mesh`` (a 1-D
+    agent-axis device mesh from
+    :func:`repro.models.sharding.make_fleet_mesh`), the resident state is
+    committed to agent-axis shardings and flushes that cover the whole
+    bucket pass it straight through the donated sharded chunk — no
+    gather, no scatter, device-resident end to end.
     """
 
     def __init__(
         self,
         cfg: DQNConfig,
         *,
+        mesh=None,
         use_pallas: bool = False,
         erb_cache_size: int = 128,
         erb_cache_bytes: int = 256 * 1024**2,
@@ -445,9 +634,14 @@ class FleetEngine:
     ):
         self.cfg = cfg
         self.use_pallas = bool(use_pallas)
-        self.steps = make_fleet_steps(cfg, use_pallas=use_pallas)
+        self.mesh = mesh
+        if mesh is not None and (mesh.size & (mesh.size - 1)):
+            raise ValueError("fleet mesh size must be a power of two")
+        self.sharding = FleetSharding(mesh) if mesh is not None else None
+        self.steps = make_fleet_steps(cfg, use_pallas=use_pallas, mesh=mesh)
         self.state: FleetState | None = None
         self.n_slots = 0
+        self.capacity = 0  # resident rows (pow2, mesh-divisible; >= n_slots)
         self.erb_cache_size = erb_cache_size
         self.erb_cache_bytes = erb_cache_bytes
         self.pool_bucket_floor = pool_bucket_floor
@@ -472,16 +666,36 @@ class FleetEngine:
 
     # -- slots ---------------------------------------------------------------
     def add_slot(self, seed: int) -> int:
-        slot_state = self.steps.init_slot(seed)
-        if self.state is None:
-            self.state = slot_state
-        else:
-            self.flush()  # resident axis changes: retire pending jobs first
-            self.state = jax.tree_util.tree_map(
-                lambda s, x: jnp.concatenate([s, x], axis=0), self.state, slot_state
-            )
         slot = self.n_slots
-        self.n_slots += 1
+        slot_state = self.steps.init_slot(seed)
+        if slot < self.capacity:
+            # reuse a dead row in place: live rows are untouched, so jobs
+            # already queued for other slots keep batching (no flush)
+            self.state = jax.tree_util.tree_map(
+                lambda s, v: s.at[slot].set(v[0]), self.state, slot_state
+            )
+        else:
+            if self.state is not None:
+                self.flush()  # resident axis grows: retire pending jobs first
+            n_min = self.mesh.size if self.mesh is not None else 1
+            new_cap = max(_pow2(slot + 1), n_min)
+            # the dead tail holds copies of the fresh slot: inert rows,
+            # never read, overwritten on reuse
+            tiled = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (new_cap - slot, *x.shape[1:])),
+                slot_state,
+            )
+            if self.state is None:
+                self.state = tiled
+            else:
+                self.state = jax.tree_util.tree_map(
+                    lambda s, t: jnp.concatenate([s, t], axis=0), self.state, tiled
+                )
+            self.capacity = new_cap
+        if self.sharding is not None:
+            self.state = self.sharding.place(self.state)
+        self._views.pop(slot, None)
+        self.n_slots = slot + 1
         return slot
 
     # -- state access (flush-on-read/write) -----------------------------------
@@ -505,11 +719,32 @@ class FleetEngine:
         return self._view(slot).params
 
     def stacked_params(self):
-        """Flush-on-read snapshot of *every* slot's params as one
+        """Flush-on-read snapshot of *every live* slot's params as one
         stacked [N, ...] pytree — the serving plane's publish path
-        (:class:`repro.serve.ParamPublisher` reads this between ticks)."""
+        (:class:`repro.serve.ParamPublisher` reads this between ticks).
+        Dead padding rows never leak: the slice stops at ``n_slots``."""
         self.ensure_flushed()
-        return self.state.params
+        if self.n_slots == self.capacity:
+            return self.state.params
+        return jax.tree_util.tree_map(lambda x: x[: self.n_slots], self.state.params)
+
+    def padded_slot_params(self, slots: Sequence[int]):
+        """Stacked params of ``slots`` (repeats allowed — collection pads
+        cohorts with duplicates of the first slot), flushing only the
+        touched slots' pending work, same laziness as ``get_params``.
+        When the cohort covers the whole resident bucket in order, the
+        resident (already mesh-committed) arrays are returned as-is."""
+        for s in set(slots):
+            self.ensure_flushed(s)
+        if list(slots) == list(range(self.capacity)):
+            return self.state.params
+        g = jnp.asarray(np.asarray(slots, np.int32))
+        gathered = jax.tree_util.tree_map(
+            lambda x: jnp.take(x, g, axis=0), self.state.params
+        )
+        # the gather commits its output replicated; re-place so the stacked
+        # tree matches the collect program's explicit in_shardings
+        return self.sharding.place(gathered) if self.sharding else gathered
 
     def get_target(self, slot: int):
         self.ensure_flushed(slot)
@@ -532,6 +767,8 @@ class FleetEngine:
         }
         parts[field] = updated
         self.state = FleetState(**parts)
+        if self.sharding is not None:
+            self.state = self.sharding.place(self.state)
         self._views.pop(slot, None)
 
     def set_params(self, slot: int, params) -> None:
@@ -634,21 +871,41 @@ class FleetEngine:
                     offsets[erb.meta.erb_id] = total
                     total += erb.size
                     parts.append(self._flat_erb(erb))
-        # bucket pool rows and job count (powers of two) to bound the
-        # number of compiled (K, N, R) shape variants
+        # bucket pool rows and job count (powers of two, mesh-divisible)
+        # to bound the number of compiled (K, N, R) shape variants
         r_pad = max(self.pool_bucket_floor, _pow2(total))
         if r_pad > total:
             parts.append(jnp.zeros((r_pad - total, self._feat), jnp.float32))
         pool = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
-        n_pad = _pow2(n_real)
+        n_min = self.mesh.size if self.mesh is not None else 1
+        n_pad = max(_pow2(n_real), n_min)
+        slots = [job.slot for job in jobs]
+        # whole-bucket fast path: the jobs cover every live slot in order,
+        # so the resident state IS the chunk operand — no gather in, no
+        # scatter out, and the donated buffers flow through the flush end
+        # to end (padding lanes train on pool row 0; those rows are dead
+        # slots, never read, overwritten on slot reuse)
+        resident = (
+            n_real == self.n_slots
+            and slots == list(range(n_real))
+            and n_pad == self.capacity
+        )
         idx = np.zeros((k_steps, n_pad, batch), np.int32)
         for jpos, job in enumerate(jobs):
             base = np.array([offsets[e.meta.erb_id] for e in job.erbs], np.int32)
             idx[:, jpos, :] = base[job.eidx] + job.rows
-        slots = [job.slot for job in jobs]
-        padded = slots + [slots[0]] * (n_pad - n_real)  # inert duplicates
-        gather = jnp.asarray(padded)
-        sub = jax.tree_util.tree_map(lambda x: jnp.take(x, gather, axis=0), self.state)
+        if resident:
+            sub = self.state
+        else:
+            padded = slots + [slots[0]] * (n_pad - n_real)  # inert duplicates
+            gather = jnp.asarray(padded)
+            sub = jax.tree_util.tree_map(
+                lambda x: jnp.take(x, gather, axis=0), self.state
+            )
+            if self.sharding is not None:
+                # the gather commits its output replicated; re-place so
+                # the operand matches the chunk's explicit in_shardings
+                sub = self.sharding.place(sub)
         obs = self.observatory
         stats = None
         if obs is None:
@@ -656,10 +913,15 @@ class FleetEngine:
         else:
             new, stats = self.steps.train_chunk_stats(sub, pool, jnp.asarray(idx))
             losses = stats["loss"]
-        real = jnp.asarray(slots)
-        self.state = jax.tree_util.tree_map(
-            lambda s, ns: s.at[real].set(ns[:n_real]), self.state, new
-        )
+        if resident:
+            self.state = new
+        else:
+            real = jnp.asarray(slots)
+            self.state = jax.tree_util.tree_map(
+                lambda s, ns: s.at[real].set(ns[:n_real]), self.state, new
+            )
+            if self.sharding is not None:
+                self.state = self.sharding.place(self.state)
         self._views.clear()
         losses_np = np.asarray(losses)  # the flush's one host sync
         if obs is not None and stats is not None:
@@ -684,6 +946,8 @@ class FleetEngine:
                 k_steps=k_steps,
                 batch=batch,
                 pool_rows=int(r_pad),
+                devices=n_min,
+                resident=resident,
                 compiled=compiled,
             )
             if compiled:
@@ -703,10 +967,13 @@ class FleetEngine:
 
 __all__ = [
     "ActSteps",
+    "CollectSteps",
     "FleetEngine",
     "FleetState",
     "FleetSteps",
     "TrainFuture",
+    "collect_fleet",
     "make_act_steps",
+    "make_collect_steps",
     "make_fleet_steps",
 ]

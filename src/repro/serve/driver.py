@@ -17,8 +17,9 @@ import numpy as np
 
 from repro.configs.adfll_dqn import DQNConfig
 from repro.core.federated import env_for
+from repro.models.sharding import make_fleet_mesh
 from repro.rl.agent import DQNAgent
-from repro.rl.fleet import FleetEngine
+from repro.rl.fleet import FleetEngine, collect_fleet
 from repro.rl.synth import paper_eight_tasks, patient_split
 from repro.serve.publisher import ParamPublisher
 from repro.serve.report import ServeReport
@@ -42,19 +43,35 @@ class ServeSession:
     def train_round(self, round_idx: int, train_steps: int) -> None:
         """One lifelong round per agent (personal replay, no federation
         — the serving session exercises the inference plane, not the
-        sharing planes) followed by nothing: callers publish."""
-        for agent in self.agents:
-            task = self.tasks[(round_idx + agent.agent_id) % len(self.tasks)]
-            patient = int(agent.rng.choice(self.patients))
-            env = env_for(task, patient, self.cfg)
-            agent.train_round(
+        sharing planes) followed by nothing: callers publish.
+
+        The cohort collects through ONE stacked greedy-rollout program
+        (:func:`repro.rl.fleet.collect_fleet`) and trains as one batched
+        flush — bit-identical to per-agent rounds, since every rng draw
+        stays in its agent's own stream order."""
+        agents = self.agents
+        tasks = [
+            self.tasks[(round_idx + a.agent_id) % len(self.tasks)] for a in agents
+        ]
+        envs = [
+            env_for(t, int(a.rng.choice(self.patients)), self.cfg)
+            for a, t in zip(agents, tasks, strict=True)
+        ]
+        erbs = [
+            a.new_round_erb(t, 512) for a, t in zip(agents, tasks, strict=True)
+        ]
+        collect_fleet(agents, envs, erbs, n_episodes=24)
+        for agent, env, task, erb in zip(agents, envs, tasks, erbs, strict=True):
+            agent.begin_round(
                 env,
                 task,
                 incoming=(),
                 erb_capacity=512,
                 share_size=0,
                 train_steps=train_steps,
+                current=erb,
             )
+        self.engine.flush()
 
     def publish(self) -> None:
         self.publisher.publish()
@@ -70,9 +87,12 @@ def build_session(
     patients: Sequence[int] | None = None,
     warmup: bool = True,
     telemetry: Telemetry | None = None,
+    devices: int = 0,
 ) -> ServeSession:
-    """Fleet + publisher + service, params published once (version 0)."""
-    engine = FleetEngine(cfg)
+    """Fleet + publisher + service, params published once (version 0).
+    ``devices`` > 0 (or -1 = all) shards the fleet axis across a device
+    mesh (:func:`repro.models.sharding.make_fleet_mesh`)."""
+    engine = FleetEngine(cfg, mesh=make_fleet_mesh(devices) if devices else None)
     if telemetry is not None:
         engine.telemetry = telemetry
     agents = [

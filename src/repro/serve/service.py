@@ -12,11 +12,12 @@ The serving loop is a sequence of *ticks*. Each tick:
    ``max_batch``; each pins the newest installed version.
 3. **act** — one compiled vmapped program
    (:class:`~repro.rl.fleet.ActSteps`) computes every active request's
-   greedy move: observations gathered host-side per request
-   (:func:`~repro.rl.env.observe_many`), the batch padded to the next
-   power-of-two bucket so the set of compiled entrypoints is fixed after
-   warmup (SHARK-Engine's batch-size-bucketed ``GenerateServiceV1``
-   idiom, SNIPPETS.md Snippet 3).
+   greedy move: observations staged host-side per request into a pooled
+   per-bucket transfer buffer (one allocation per bucket for the
+   service's lifetime — no fresh stack/concatenate arrays per tick), the
+   batch padded to the next power-of-two bucket so the set of compiled
+   entrypoints is fixed after warmup (SHARK-Engine's batch-size-bucketed
+   ``GenerateServiceV1`` idiom, SNIPPETS.md Snippet 3).
 4. **retire** — requests that oscillate onto a visited voxel (or exhaust
    their step budget) leave their slot; new requests are admitted into
    the freed slots next tick, with no recompilation.
@@ -39,7 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.adfll_dqn import DQNConfig
-from repro.rl.env import apply_actions, observe_many
+from repro.rl.env import apply_actions
 from repro.rl.fleet import _pow2, make_act_steps
 from repro.serve.publisher import ParamPublisher, ParamVersion
 from repro.serve.queue import RequestQueue, ServeRequest, ServeResult, _Ticket
@@ -100,6 +101,11 @@ class LocalizationService:
         self._slot_active = [0] * v
         self._newest_slot = 0
         self._slot_version[0] = pv.version
+        # pooled host staging: one (obs, norm, slot, locs, vol) buffer set
+        # per batch bucket, reused every tick — observation staging writes
+        # into resident arrays instead of allocating fresh
+        # stack/concatenate intermediates per tick
+        self._staging: dict[int, tuple[np.ndarray, ...]] = {}
         # request plane
         self.queue = RequestQueue()
         self.active: list[_Ticket] = []
@@ -174,6 +180,21 @@ class LocalizationService:
     def staleness(self) -> int:
         """How many published versions behind the service is serving."""
         return max(0, self.publisher.version - self.current_version)
+
+    def _stage(self, bucket: int) -> tuple[np.ndarray, ...]:
+        """The bucket's pooled staging buffers, allocated once per bucket
+        for the service's lifetime."""
+        hit = self._staging.get(bucket)
+        if hit is None:
+            hit = (
+                np.zeros((bucket, *self.cfg.box_size), np.float32),  # obs
+                np.zeros((bucket, 3), np.float32),  # norm_loc
+                np.zeros(bucket, np.int32),  # program row (slot)
+                np.zeros((bucket, 3), np.int32),  # locs
+                np.zeros(bucket, np.int32),  # per-row volume side
+            )
+            self._staging[bucket] = hit
+        return hit
 
     # -- request plane -----------------------------------------------------
     def submit(self, request: ServeRequest, *, not_before: float = 0.0) -> int:
@@ -264,24 +285,25 @@ class LocalizationService:
             return 0
         n_active = len(self.active)
         bucket = next(b for b in self.buckets if b >= n_active)
-        locs = np.stack([t.loc for t in self.active])
-        obs, norm = observe_many([t.env for t in self.active], locs)
-        slot = np.zeros(bucket, np.int32)
+        obs, norm, slot, loc_buf, vol = self._stage(bucket)
         for i, t in enumerate(self.active):
             if not 0 <= t.request.agent_id < self.n_agents:
                 raise ValueError(f"agent_id out of range: {t.request.agent_id}")
             slot[i] = t.vslot * self.n_agents + t.request.agent_id
+            loc_buf[i] = t.loc
+            vol[i] = t.env.n
+            obs[i] = t.env.observe(t.loc[None])[0]
+            norm[i] = t.env.norm_loc(t.loc)
         if bucket > n_active:  # pad rows (discarded; lanes are independent)
-            obs = np.concatenate(
-                [obs, np.zeros((bucket - n_active, *self.cfg.box_size), np.float32)]
-            )
-            norm = np.concatenate([norm, np.zeros((bucket - n_active, 3), np.float32)])
+            obs[n_active:] = 0.0
+            norm[n_active:] = 0.0
+            slot[n_active:] = 0
+        locs = loc_buf[:n_active]
         actions, _ = self.steps.act(
             self._vparams, jnp.asarray(slot), jnp.asarray(obs), jnp.asarray(norm)
         )
         actions = np.asarray(actions)[:n_active]  # the tick's one host sync
-        vol_hi = np.array([t.env.n for t in self.active], np.int32)
-        new_locs = apply_actions(locs, actions, vol_hi, self.cfg.step_size)
+        new_locs = apply_actions(locs, actions, vol[:n_active], self.cfg.step_size)
         now = time.perf_counter()
         done = 0
         still_active = []

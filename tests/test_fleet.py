@@ -11,17 +11,20 @@ metadata (arrival order, sim times, replay selection).
 """
 
 import dataclasses
+import os
+import subprocess
+import sys
 
 import jax
 import numpy as np
 
 from repro.configs.adfll_dqn import ADFLLConfig, DQNConfig
-from repro.core.erb import TaskTag, erb_add, erb_init
+from repro.core.erb import TaskTag, erb_add, erb_flatten, erb_init
 from repro.core.federated import ADFLLSystem
 from repro.core.replay import SelectiveReplaySampler
 from repro.rl.agent import DQNAgent, dqn_step_traces, make_dqn_steps
 from repro.rl.env import LandmarkEnv
-from repro.rl.fleet import FleetEngine, make_fleet_steps
+from repro.rl.fleet import FleetEngine, collect_fleet, make_fleet_steps
 from repro.rl.synth import make_volume, paper_eight_tasks, patient_split
 
 DQN = DQNConfig(
@@ -267,6 +270,211 @@ def test_observe_matches_loop_reference(rng):
     np.testing.assert_array_equal(got, want)
     # second call exercises the pad-once cache
     np.testing.assert_array_equal(env.observe(locs), want)
+
+
+# -- stacked collection == per-agent collection ------------------------------
+def test_collect_fleet_matches_per_agent_collect():
+    """One vmapped q-value dispatch per environment step for the whole
+    cohort writes the same ERB bytes and leaves the same rng state as
+    per-agent acting: each lane is the agent's own program on its own
+    batch, and every epsilon-greedy draw comes from that agent's own
+    stream in the per-agent order."""
+    cfg = dataclasses.replace(DQN, max_episode_steps=8)
+    engine = FleetEngine(cfg)
+    fleet = [DQNAgent(i, cfg, seed=i, engine=engine) for i in range(3)]
+    legacy = [DQNAgent(i, cfg, seed=i, backend="stepwise") for i in range(3)]
+    task = TaskTag("t1", "axial", "HGG")
+    vol, lm = make_volume(task, 2, n=16)
+    erbs_f = [erb_init(256, cfg.box_size, task=task) for _ in range(3)]
+    erbs_l = [erb_init(256, cfg.box_size, task=task) for _ in range(3)]
+    collect_fleet(fleet, [LandmarkEnv(vol, lm, cfg) for _ in range(3)], erbs_f, 6)
+    for a, erb in zip(legacy, erbs_l):
+        a.collect(LandmarkEnv(vol, lm, cfg), erb, 6)
+    for ef, el, fa, la in zip(erbs_f, erbs_l, fleet, legacy):
+        assert ef.size == el.size > 0
+        np.testing.assert_array_equal(erb_flatten(ef), erb_flatten(el))
+        assert fa.rng.bit_generator.state == la.rng.bit_generator.state
+
+
+def test_agent_collect_routes_through_stacked_program():
+    """A lone fleet agent's ``collect`` delegates to ``collect_fleet`` and
+    still matches the legacy loop exactly."""
+    cfg = dataclasses.replace(DQN, max_episode_steps=8)
+    engine = FleetEngine(cfg)
+    fa = DQNAgent(0, cfg, seed=5, engine=engine)
+    la = DQNAgent(0, cfg, seed=5, backend="stepwise")
+    task = TaskTag("t2", "axial", "LGG")
+    vol, lm = make_volume(task, 1, n=16)
+    erb_f = erb_init(256, cfg.box_size, task=task)
+    erb_l = erb_init(256, cfg.box_size, task=task)
+    fa.collect(LandmarkEnv(vol, lm, cfg), erb_f, 4)
+    la.collect(LandmarkEnv(vol, lm, cfg), erb_l, 4)
+    assert erb_f.size == erb_l.size > 0
+    np.testing.assert_array_equal(erb_flatten(erb_f), erb_flatten(erb_l))
+    assert fa.rng.bit_generator.state == la.rng.bit_generator.state
+
+
+# -- pow2 slot bucketing -----------------------------------------------------
+def test_padded_capacity_and_dead_slot_hygiene():
+    cfg = dataclasses.replace(DQN, eps_decay_steps=499)  # fresh caches
+    engine = FleetEngine(cfg)
+    agents = [DQNAgent(i, cfg, seed=i, engine=engine) for i in range(3)]
+    assert engine.n_slots == 3 and engine.capacity == 4  # pow2 bucket
+    stacked = engine.stacked_params()
+    assert all(
+        np.asarray(leaf).shape[0] == 3
+        for leaf in jax.tree_util.tree_leaves(stacked)
+    )  # dead padding rows never leak out of the engine
+    erb = _filled_erb(np.random.default_rng(3))
+    for a in agents:
+        a._submit_steps(4, erb, ())
+    # adding an agent into a spare padded row must not force a flush:
+    # pending jobs keep batching across the membership change
+    late = DQNAgent(3, cfg, seed=3, engine=engine)
+    assert engine.n_slots == 4 and engine.capacity == 4
+    assert engine.flush_sizes == []
+    solo = FleetEngine(cfg)
+    solo_agent = DQNAgent(0, cfg, seed=3, engine=solo)
+    assert _tree_equal(engine.get_params(late.slot), solo_agent.params)
+    assert engine.flush_sizes == []  # the late slot had no pending work
+    _ = agents[0].params  # reading a pending slot flushes all three at once
+    assert engine.flush_sizes == [3]
+    # growing past the bucket boundary re-tiles to the next power of two
+    DQNAgent(4, cfg, seed=4, engine=engine)
+    assert engine.n_slots == 5 and engine.capacity == 8
+
+
+# -- device-mesh sharding (8 host-platform devices, subprocess) --------------
+_MESH_SCRIPT = r"""
+import numpy as np
+import jax
+
+assert jax.device_count() == 8, jax.devices()
+
+from repro.configs.adfll_dqn import DQNConfig
+from repro.core.erb import TaskTag, erb_add, erb_flatten, erb_init
+from repro.core.replay import SelectiveReplaySampler
+from repro.models.sharding import make_fleet_mesh
+from repro.rl.agent import DQNAgent
+from repro.rl.env import LandmarkEnv
+from repro.rl.fleet import FleetEngine, collect_fleet
+from repro.rl.synth import make_volume
+
+CFG = DQNConfig(
+    volume_shape=(16, 16, 16),
+    box_size=(6, 6, 6),
+    conv_features=(4,),
+    hidden=(32,),
+    max_episode_steps=8,
+    batch_size=16,
+    eps_decay_steps=100,
+    target_update=8,
+)
+
+
+def tree_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb)
+    )
+
+
+mesh = make_fleet_mesh(8)
+assert mesh is not None and mesh.size == 8
+
+single = FleetEngine(CFG)
+shard = FleetEngine(CFG, mesh=mesh)
+a_shard = [DQNAgent(i, CFG, seed=i, engine=shard) for i in range(4)]
+for i in range(4):
+    single.add_slot(seed=i)
+assert shard.capacity == 8  # slots padded up to the mesh size
+
+# stacked collection under the mesh == per-agent reference acting
+task = TaskTag("t1", "axial", "HGG")
+vol, lm = make_volume(task, 2, n=16)
+ref = [DQNAgent(i, CFG, seed=i, backend="stepwise") for i in range(4)]
+erbs_m = [erb_init(256, CFG.box_size, task=task) for _ in range(4)]
+erbs_r = [erb_init(256, CFG.box_size, task=task) for _ in range(4)]
+collect_fleet(a_shard, [LandmarkEnv(vol, lm, CFG) for _ in range(4)], erbs_m, 4)
+for a, erb in zip(ref, erbs_r):
+    a.collect(LandmarkEnv(vol, lm, CFG), erb, 4)
+for em, er, am, ar in zip(erbs_m, erbs_r, a_shard, ref):
+    assert em.size == er.size > 0
+    assert np.array_equal(erb_flatten(em), erb_flatten(er))
+    assert am.rng.bit_generator.state == ar.rng.bit_generator.state
+
+# identical plan streams: the sharded chunk is bit-identical to the
+# single-device chunk, flush after flush
+sampler = SelectiveReplaySampler()
+data = np.random.default_rng(7)
+n = 256
+erb = erb_init(n, CFG.box_size, task=task)
+erb_add(
+    erb,
+    {
+        "obs": data.standard_normal((n, *CFG.box_size)).astype(np.float32),
+        "loc": data.random((n, 3)).astype(np.float32),
+        "action": data.integers(0, CFG.n_actions, n).astype(np.int32),
+        "reward": data.standard_normal(n).astype(np.float32),
+        "next_obs": data.standard_normal((n, *CFG.box_size)).astype(np.float32),
+        "next_loc": data.random((n, 3)).astype(np.float32),
+        "done": (data.random(n) < 0.1).astype(np.float32),
+    },
+)
+for round_idx in range(2):
+    for eng in (single, shard):
+        for i in range(4):
+            rng = np.random.default_rng(100 + 10 * round_idx + i)
+            plans = [sampler.plan(rng, CFG.batch_size, erb) for _ in range(6)]
+            eng.submit(i, plans)
+        eng.flush()
+    for i in range(4):
+        assert tree_equal(single.get_params(i), shard.get_params(i))
+        assert tree_equal(single.get_target(i), shard.get_target(i))
+        assert tree_equal(single.get_opt(i), shard.get_opt(i))
+
+# a partial flush (subset of the live slots) exercises the non-resident
+# gather/scatter path under the mesh — same bit-identity guarantee
+for eng in (single, shard):
+    for i in range(3):
+        rng = np.random.default_rng(500 + i)
+        plans = [sampler.plan(rng, CFG.batch_size, erb) for _ in range(6)]
+        eng.submit(i, plans)
+    eng.flush()
+for i in range(4):
+    assert tree_equal(single.get_params(i), shard.get_params(i))
+
+# identical flushes, one compile: explicit mesh shardings on the
+# chunk's inputs/outputs must not retrace (the partial flush pads to
+# the same bucket width, so it reuses the same trace)
+assert shard.steps.n_traces == 1, shard.steps.n_traces
+assert single.steps.n_traces == 1, single.steps.n_traces
+assert shard.steps is not single.steps  # mesh-keyed cache entries
+
+print("MESH-OK")
+"""
+
+
+def test_sharded_mesh_bit_identity_and_no_recompile():
+    """The 8-device assertions must run in a subprocess: the host-platform
+    device count only takes effect when set before jax initializes, and
+    conftest pins this process to one CPU device."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env.setdefault("PYTHONPATH", "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _MESH_SCRIPT],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "MESH-OK" in proc.stdout
 
 
 def test_agent_sampler_inherits_use_pallas_flag():
